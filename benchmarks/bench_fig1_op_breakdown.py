@@ -1,0 +1,73 @@
+"""Fig. 1 reproduction: per-op bottleneck census for Mamba(-2) ops.
+
+The paper profiles Mamba/Mamba-2 on the NPU and finds CumSum/ReduceSum
+(Mamba-2) and Swish/Softplus (Mamba) dominating.  Here each op runs in its
+baseline form vs its XAMBA remap at the paper's dimensions (CumSum_b is the
+(256, 256) segsum inside SSD for mamba2-130m), reporting wall time and the
+compiled op mix (HLO flops/bytes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, hlo_cost, time_fn
+from repro.core import pwl, reduce as xreduce, segsum
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # ---- CumSum_b: (B, 256, 256) masked cumsum (the 99.9% op) ------------
+    x = jnp.asarray(rng.standard_normal((24, 256, 256)), jnp.float32)
+    f_naive = jax.jit(lambda x: segsum.cumsum(x, axis=-2, mode="naive"))
+    f_cumba = jax.jit(lambda x: segsum.cumsum(x, axis=-2, mode="cumba"))
+    t_naive = time_fn(f_naive, x)
+    t_cumba = time_fn(f_cumba, x)
+    rows.append(emit("fig1.cumsum_b.naive", t_naive * 1e6,
+                     f"flops={hlo_cost(f_naive, x)['flops']:.2e}"))
+    rows.append(emit("fig1.cumsum_b.cumba", t_cumba * 1e6,
+                     f"speedup={t_naive / t_cumba:.2f}x"))
+
+    # ---- segsum (the real SSD form) ---------------------------------------
+    a = jnp.asarray(rng.standard_normal((1, 24, 16, 256)) * 0.1, jnp.float32)
+    s_naive = jax.jit(lambda a: segsum.segsum(a, mode="naive"))
+    s_cumba = jax.jit(lambda a: segsum.segsum(a, mode="cumba"))
+    tn = time_fn(s_naive, a)
+    tc = time_fn(s_cumba, a)
+    rows.append(emit("fig1.segsum.naive", tn * 1e6,
+                     f"bytes={hlo_cost(s_naive, a)['bytes']:.2e}"))
+    rows.append(emit("fig1.segsum.cumba", tc * 1e6,
+                     f"speedup={tn / tc:.2f}x"))
+
+    # ---- ReduceSum --------------------------------------------------------
+    m = jnp.asarray(rng.standard_normal((2048, 2048)), jnp.float32)
+    r_naive = jax.jit(lambda m: xreduce.reduce_sum(m, 0, "naive"))
+    r_reduba = jax.jit(lambda m: xreduce.reduce_sum(m, 0, "reduba"))
+    tn = time_fn(r_naive, m)
+    tr = time_fn(r_reduba, m)
+    rows.append(emit("fig1.reducesum.naive", tn * 1e6,
+                     f"flops={hlo_cost(r_naive, m)['flops']:.2e}"))
+    rows.append(emit("fig1.reducesum.reduba", tr * 1e6,
+                     f"speedup={tn / tr:.2f}x"))
+
+    # ---- Activations (Swish / Softplus) -----------------------------------
+    h = jnp.asarray(rng.standard_normal((1024, 1536)) * 3, jnp.float32)
+    for name in ("silu", "softplus"):
+        exact = jax.jit(pwl._EXACT_FNS[name])
+        table = pwl.get_table(name, segments=16)
+        approx = jax.jit(lambda h, t=table: pwl.eval_pwl(t, h))
+        te = time_fn(exact, h)
+        ta = time_fn(approx, h)
+        err = pwl.pwl_error(pwl.numpy_fn(name), table)["max_abs"]
+        rows.append(emit(f"fig1.{name}.exact", te * 1e6,
+                         f"bytes={hlo_cost(exact, h)['bytes']:.2e}"))
+        rows.append(emit(f"fig1.{name}.pwl16", ta * 1e6,
+                         f"max_err={err:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

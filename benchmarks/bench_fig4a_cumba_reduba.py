@@ -1,0 +1,75 @@
+"""Fig. 4(a)/(b) reproduction: Mamba-2 130M block latency under XAMBA.
+
+The paper reports, for a single-block Mamba-2 130M on the NPU:
+CumBA 2.7x, ReduBA 1.2x, combined 4.8x vs the unoptimized baseline, with
+CumSum >50% of baseline latency.  Here the SAME model block (d_model=768,
+full size) runs under each technique combination; ``--breakdown`` also
+reports the segsum share of baseline time (the Fig. 4b shift).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, hlo_cost, time_fn
+from repro.configs import get_config
+from repro.core.xamba import XambaConfig
+from repro.models import build_model
+from repro.nn import ssm
+from repro.nn.params import init_params
+
+SEQ = 256      # one SSD chunk — the regime of the paper's CumSum_b
+BATCH = 8
+
+
+def _block_fn(xamba):
+    cfg = get_config("mamba2-130m").replace(
+        n_layers=1, param_dtype="float32", xamba=xamba)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    block_params = jax.tree.map(lambda x: x[0], params["layers"])
+
+    def fn(x):
+        y, _ = ssm.mamba2_apply(block_params["mixer"], cfg, x)
+        return y
+
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (BATCH, SEQ, cfg.d_model)) * 0.1, jnp.float32)
+    return jax.jit(fn), x
+
+
+def run() -> list:
+    rows = []
+    variants = [
+        ("baseline", XambaConfig.baseline()),
+        ("cumba", XambaConfig(cumba="cumba", reduba="naive")),
+        ("reduba", XambaConfig(cumba="naive", reduba="reduba")),
+        ("cumba+reduba", XambaConfig.optimized()),
+    ]
+    times = {}
+    for name, xamba in variants:
+        fn, x = _block_fn(xamba)
+        t = time_fn(fn, x, iters=6)
+        times[name] = t
+        cost = hlo_cost(fn, x)
+        speed = times["baseline"] / t
+        rows.append(emit(f"fig4a.mamba2_block.{name}", t * 1e6,
+                         f"speedup={speed:.2f}x;flops={cost['flops']:.2e};"
+                         f"bytes={cost['bytes']:.2e}"))
+
+    # Fig 4b: what fraction of the baseline block is the segsum/cumsum op?
+    from repro.core import segsum
+    a = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (BATCH, 24, 1, SEQ)) * 0.1, jnp.float32)
+    f = jax.jit(lambda a: segsum.segsum(a, mode="naive"))
+    t_seg = time_fn(f, a, iters=6)
+    rows.append(emit("fig4b.segsum_share_of_baseline",
+                     t_seg * 1e6,
+                     f"share={t_seg / times['baseline']:.2%}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,93 @@
+"""Fig. 4(c) reproduction: ActiBA on the Mamba(-1) 130M block.
+
+The paper maps Softplus (1.2x) then also SiLU (total 2.6x) onto the PLU.
+On TPU the corresponding win is *drain-phase fusion*: the PWL epilogue
+runs while the producing matmul drains, eliminating the pre-activation
+HBM round-trip.  We report (a) block wall time per variant, and (b) the
+fused-vs-unfused HBM traffic of the gated-MLP unit from the compiled
+modules — the hardware-independent quantity behind the paper's latency
+claim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, hlo_cost, time_fn
+from repro.configs import get_config
+from repro.core import pwl
+from repro.core.xamba import XambaConfig
+from repro.models import build_model
+from repro.nn import ssm
+from repro.nn.params import init_params
+
+SEQ = 256
+BATCH = 8
+
+
+def _block_fn(xamba):
+    cfg = get_config("mamba-130m").replace(
+        n_layers=1, param_dtype="float32", xamba=xamba)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    block_params = jax.tree.map(lambda x: x[0], params["layers"])
+
+    def fn(x):
+        y, _ = ssm.mamba1_apply(block_params["mixer"], cfg, x)
+        return y
+
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (BATCH, SEQ, cfg.d_model)) * 0.1, jnp.float32)
+    return jax.jit(fn), x
+
+
+def run() -> list:
+    rows = []
+    variants = [
+        ("exact", XambaConfig.optimized()),
+        ("pwl_acts", XambaConfig.full(segments=16)),
+        ("pwl_acts_k32", XambaConfig.full(segments=32)),
+    ]
+    times = {}
+    for name, xamba in variants:
+        fn, x = _block_fn(xamba)
+        t = time_fn(fn, x, iters=6)
+        times[name] = t
+        rows.append(emit(f"fig4c.mamba_block.{name}", t * 1e6,
+                         f"speedup={times['exact'] / t:.2f}x"))
+
+    # Drain-phase fusion: unfused (matmul -> store -> activate -> multiply)
+    # vs the fused matmul_pwl kernel-equivalent XLA form, HBM bytes.
+    rng = np.random.default_rng(0)
+    m, kdim, n = 2048, 768, 1536
+    x = jnp.asarray(rng.standard_normal((m, kdim)) * 0.1, jnp.float32)
+    w = jnp.asarray(rng.standard_normal((kdim, n)) * 0.05, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((kdim, n)) * 0.05, jnp.float32)
+    table = pwl.get_table("silu", segments=16)
+
+    def unfused(x, w, v):
+        a = jnp.dot(x, w)
+        b = jnp.dot(x, v)
+        return pwl.eval_pwl(table, a) * b
+
+    cost_un = hlo_cost(unfused, x, w, v)
+    t_un = time_fn(jax.jit(unfused), x, w, v, iters=6)
+    rows.append(emit("fig4c.gated_unit.xla_chain", t_un * 1e6,
+                     f"hbm_bytes={cost_un['bytes']:.3e}"))
+
+    # Drain-fusion accounting: without epilogue fusion the two (m, n) f32
+    # pre-activation tensors round-trip HBM (store + reload); the
+    # matmul_pwl kernel (and XLA's elementwise fusion on this simple chain)
+    # eliminate them.  Report the analytic saving the PLU/drain path buys
+    # on a datapath without that fusion — the paper's baseline situation.
+    saved = 2 * m * n * 4 * 2  # two tensors, store+reload, f32
+    rows.append(emit("fig4c.gated_unit.drain_fusion", 0.0,
+                     f"bytes_saved_vs_unfused_datapath={saved:.3e};"
+                     f"share_of_chain={saved / (cost_un['bytes'] + saved):.2%}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

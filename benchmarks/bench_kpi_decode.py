@@ -1,0 +1,42 @@
+"""KPI reproduction: decoding tokens/s for mamba-130m (paper: 100 -> 260
+tok/s with ActiBA on the NPU, vs a 50 tok/s KPI target).
+
+CPU wall-clock tokens/s for the full 130M models through the serving
+engine's decode path, per XAMBA variant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_config
+from repro.core.xamba import XambaConfig
+from repro.models import build_model
+from repro.nn.params import init_params
+
+
+def run() -> list:
+    rows = []
+    for arch in ("mamba-130m", "mamba2-130m"):
+        for vname, xamba in (("baseline", XambaConfig.baseline()),
+                             ("xamba", XambaConfig.full(segments=16))):
+            cfg = get_config(arch).replace(param_dtype="float32",
+                                           xamba=xamba)
+            model = build_model(cfg)
+            params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                                 jnp.float32)
+            cache = model.init_cache(1, 64, jnp.float32)
+            tok = jnp.ones((1, 1), jnp.int32)
+
+            step = jax.jit(lambda p, t, c: model.decode_step(p, t, c,
+                                                             jnp.int32(4)))
+            t = time_fn(step, params, tok, cache, iters=8)
+            rows.append(emit(f"kpi.decode.{arch}.{vname}", t * 1e6,
+                             f"tokens_per_s={1.0 / t:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

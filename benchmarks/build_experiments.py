@@ -1,0 +1,96 @@
+"""Regenerate the auto tables in EXPERIMENTS.md from dry-run artifacts.
+
+Usage: PYTHONPATH=src python benchmarks/build_experiments.py
+Replaces the blocks between ``<!-- AUTO:<name> -->`` markers.
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+from benchmarks import roofline
+
+ROOT = Path(__file__).resolve().parents[1]
+EXP = ROOT / "EXPERIMENTS.md"
+
+
+def dryrun_summary() -> str:
+    recs = roofline.load()
+    ok = [r for r in recs if r.get("ok") and not r.get("skipped")]
+    skip = [r for r in recs if r.get("skipped")]
+    fail = [r for r in recs if not r.get("ok")]
+    lines = [f"* cells compiled OK: **{len(ok)}** "
+             f"(+{len(skip)} recorded skips, {len(fail)} failures)"]
+    fits = sum(1 for r in ok if r["memory"]["fits_16gb_hbm"])
+    lines.append(f"* fits 16 GB v5e HBM: {fits}/{len(ok)} "
+                 f"(non-fitting cells are decode-cache outliers; see §Perf)")
+    for r in fail:
+        lines.append(f"  * FAIL: {r['arch']} {r['shape']} {r['mesh']}: "
+                     f"{r.get('error','?')[:120]}")
+    return "\n".join(lines)
+
+
+def skips_table() -> str:
+    recs = [r for r in roofline.load() if r.get("skipped")]
+    seen = set()
+    out = ["| arch | shape | reason |", "|---|---|---|"]
+    for r in recs:
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(f"| {r['arch']} | {r['shape']} | "
+                   f"{r['skip_reason'][:90]}... |")
+    return "\n".join(out)
+
+
+def variants_table(prefix: str) -> str:
+    """Hillclimb variant rows: artifacts tagged <arch>__<shape>__<mesh>-<tag>."""
+    rows = ["| variant | compute s | memory s | collective s | "
+            "bottleneck | roofline frac | HBM GB |",
+            "|---|---|---|---|---|---|---|"]
+    art = roofline.ART
+    base = art / f"{prefix}.json"
+    items = []
+    if base.exists():
+        items.append(("baseline", json.load(open(base))))
+    for p in sorted(art.glob(f"{prefix}-*.json")):
+        tag = p.stem.split("-")[-1]
+        items.append((tag, json.load(open(p))))
+    for tag, r in items:
+        if not r.get("ok"):
+            rows.append(f"| {tag} | FAIL | | | | | |")
+            continue
+        rl = r["roofline"]
+        rows.append(
+            f"| {tag} | {rl['compute_s']:.3f} | {rl['memory_s']:.3f} | "
+            f"{rl['collective_s']:.3f} | {rl['bottleneck'].replace('_s','')} "
+            f"| {rl['roofline_fraction']:.3f} | "
+            f"{r['memory']['total_gb']:.1f} |")
+    return "\n".join(rows)
+
+
+def build():
+    text = EXP.read_text()
+
+    def sub(name, content):
+        nonlocal text
+        pattern = (f"(<!-- AUTO:{name} -->).*?(<!-- /AUTO:{name} -->)")
+        text = re.sub(pattern, lambda m: m.group(1) + "\n" + content +
+                      "\n" + m.group(2), text, flags=re.S)
+
+    sub("summary", dryrun_summary())
+    sub("skips", skips_table())
+    sub("roofline_single", roofline.table("single"))
+    sub("roofline_multi", roofline.table("multi"))
+    sub("perf_mamba2", variants_table("mamba2-2.7b__train_4k__single"))
+    sub("perf_grok", variants_table("grok-1-314b__train_4k__single"))
+    sub("perf_internlm2", variants_table("internlm2-20b__train_4k__single"))
+    sub("perf_qwen3", variants_table("qwen3-moe-30b-a3b__train_4k__single"))
+    EXP.write_text(text)
+    print("EXPERIMENTS.md rebuilt")
+
+
+if __name__ == "__main__":
+    build()

@@ -1,0 +1,48 @@
+"""Benchmark helpers: wall-clock timing + compiled-cost probes.
+
+This box is CPU (TPU is the *target*), so every benchmark reports two
+views where relevant:
+
+* ``us_per_call`` — median CPU wall time (algorithmic effect is still
+  visible: the CumBA/ReduBA remaps change the op mix on any backend);
+* ``derived``     — a hardware-independent figure from the compiled module
+  (HLO flops/bytes, speedup ratio, error, tokens/s), which is the number
+  the paper's claim maps onto.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median seconds per call of a jitted function."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def hlo_cost(fn: Callable, *args) -> dict:
+    """flops / bytes accessed of the compiled module for these args."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def emit(name: str, us_per_call: float, derived) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line)
+    return line

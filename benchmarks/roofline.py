@@ -1,0 +1,74 @@
+"""Roofline table builder: reads the dry-run JSON artifacts and emits the
+per-(arch x shape x mesh) table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def load(pattern: str = "*.json", tag: str = ""):
+    recs = []
+    for p in sorted(glob.glob(str(ART / pattern))):
+        name = Path(p).stem
+        if tag and not name.endswith(f"-{tag}"):
+            continue
+        if not tag and name.count("__") != 2:
+            continue
+        try:
+            recs.append(json.load(open(p)))
+        except json.JSONDecodeError:
+            pass
+    return recs
+
+
+def fmt_row(r) -> str:
+    if r.get("skipped"):
+        return (f"| {r['arch']} | {r['shape']} | {r.get('mesh','-')} | "
+                f"skip | — | — | — | — | — | — |")
+    if not r.get("ok"):
+        return (f"| {r['arch']} | {r['shape']} | {r.get('mesh','-')} | "
+                f"FAIL | — | — | — | — | — | — |")
+    rl = r["roofline"]
+    mem = r["memory"]
+    fits = "y" if mem["fits_16gb_hbm"] else "n"
+    return ("| {arch} | {shape} | {mesh} | {gb:.1f}/{fits} | {c:.3f} | "
+            "{m:.3f} | {k:.3f} | {dom} | {frac:.3f} | {ur:.2f} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        gb=mem["total_gb"], fits=fits, c=rl["compute_s"], m=rl["memory_s"],
+        k=rl["collective_s"], dom=rl["bottleneck"].replace("_s", ""),
+        frac=rl["roofline_fraction"], ur=rl["useful_ratio"])
+
+
+HEADER = ("| arch | shape | mesh | HBM GB/fits | compute s | memory s | "
+          "collective s | bottleneck | roofline frac | useful ratio |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def table(mesh: str = "single", tag: str = "") -> str:
+    recs = [r for r in load(tag=tag) if r.get("mesh") == mesh]
+    recs.sort(key=lambda r: (r["arch"], r["shape"]))
+    return "\n".join([HEADER] + [fmt_row(r) for r in recs])
+
+
+def run() -> list:
+    rows = []
+    for r in load():
+        if r.get("skipped") or not r.get("ok"):
+            continue
+        rl = r["roofline"]
+        name = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+        derived = (f"bottleneck={rl['bottleneck']};"
+                   f"frac={rl['roofline_fraction']:.3f};"
+                   f"useful={rl['useful_ratio']:.2f}")
+        print(f"{name},0.0,{derived}")
+        rows.append(name)
+    return rows
+
+
+if __name__ == "__main__":
+    print(table("single"))
+    print()
+    print(table("multi"))

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,fig4a,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+BENCHES = ("fig1", "fig4a", "fig4c", "table1", "kpi", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args()
+    want = [w for w in args.only.split(",") if w] or list(BENCHES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key in want:
+        try:
+            if key == "fig1":
+                from benchmarks import bench_fig1_op_breakdown as m
+            elif key == "fig4a":
+                from benchmarks import bench_fig4a_cumba_reduba as m
+            elif key == "fig4c":
+                from benchmarks import bench_fig4c_actiba as m
+            elif key == "table1":
+                from benchmarks import bench_table1_quality as m
+            elif key == "kpi":
+                from benchmarks import bench_kpi_decode as m
+            elif key == "roofline":
+                from benchmarks import roofline as m
+            else:
+                raise ValueError(f"unknown benchmark {key!r}")
+            m.run()
+        except Exception:  # noqa: BLE001 — keep the harness running
+            failures += 1
+            print(f"{key},0.0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

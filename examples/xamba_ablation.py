@@ -1,0 +1,56 @@
+"""XAMBA technique ablation on the paper's Mamba-2 130M (Fig. 4a in
+miniature): baseline -> +CumBA -> +ReduBA -> +both -> +ActiBA, with
+latency, compiled op-cost, and quality-vs-exact for each.
+
+    PYTHONPATH=src python examples/xamba_ablation.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import hlo_cost, time_fn
+from repro.configs import get_config
+from repro.core.xamba import XambaConfig
+from repro.models import build_model
+from repro.nn.params import init_params
+
+VARIANTS = [
+    ("baseline (NPU-style op chain)", XambaConfig.baseline()),
+    ("+CumBA", XambaConfig(cumba="cumba", reduba="naive")),
+    ("+ReduBA", XambaConfig(cumba="naive", reduba="reduba")),
+    ("+CumBA+ReduBA", XambaConfig.optimized()),
+    ("+ActiBA (k=32)", XambaConfig.full(segments=32)),
+]
+
+
+def main():
+    base_cfg = get_config("mamba2-130m", reduced=True).replace(
+        param_dtype="float32", n_layers=4, chunk_size=64)
+    model0 = build_model(base_cfg.replace(xamba=XambaConfig.optimized()))
+    params = init_params(model0.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 256), 0,
+                                base_cfg.vocab_size)
+    exact = None
+    t_base = None
+
+    print(f"{'variant':34s} {'ms/fwd':>9s} {'speedup':>8s} "
+          f"{'hlo_bytes':>10s} {'top1 vs exact':>14s}")
+    for name, xamba in VARIANTS:
+        cfg = base_cfg.replace(xamba=xamba)
+        model = build_model(cfg)
+        fwd = jax.jit(lambda p, t, m=model: m.forward(p, t))
+        t = time_fn(fwd, params, tokens, iters=4)
+        cost = hlo_cost(lambda p, t, m=model: m.forward(p, t), params,
+                        tokens)
+        logits = np.asarray(fwd(params, tokens), np.float32)
+        if exact is None:
+            exact = logits
+            t_base = t
+        top1 = (logits.argmax(-1) == exact.argmax(-1)).mean()
+        print(f"{name:34s} {t*1e3:9.1f} {t_base/t:7.2f}x "
+              f"{cost['bytes']:10.2e} {top1:14.4f}")
+
+
+if __name__ == "__main__":
+    main()

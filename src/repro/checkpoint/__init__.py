@@ -1,0 +1,3 @@
+from repro.checkpoint.async_writer import AsyncCheckpointer  # noqa: F401
+from repro.checkpoint.ckpt import (all_steps, latest_step, restore,  # noqa: F401
+                                   save)

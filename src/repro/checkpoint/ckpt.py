@@ -1,0 +1,124 @@
+"""Atomic, reshardable checkpointing.
+
+Layout: ``<dir>/step_<N>/`` holding one ``arrays.npz`` (flattened pytree)
+plus ``manifest.json`` (tree structure, shapes, dtypes, data-iterator state).
+Writes go to ``step_<N>.tmp`` then ``os.rename`` — a crash mid-write never
+corrupts the latest checkpoint (restore only ever sees complete dirs).
+
+``restore(..., shardings=...)`` re-device_puts onto the *current* mesh, so a
+job restarted on a different device count / mesh shape reloads the same
+logical arrays — this is the elastic-scaling path (see runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":
+            # ml_dtypes (bfloat16 etc) round-trip poorly through npz;
+            # upcast to f32 (lossless for bf16), restore downcasts.
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, state: PyTree,
+         extra: Optional[dict] = None, keep: int = 3) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    arrays, _ = _flatten(state)
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "keys": list(arrays.keys()),
+        "extra": extra or {},
+    }
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)                  # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s:08d}", ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str | Path):
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    out = []
+    for p in ckpt_dir.iterdir():
+        if p.is_dir() and p.name.startswith("step_") and \
+                not p.name.endswith(".tmp") and \
+                (p / "manifest.json").exists():
+            out.append(int(p.name[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str | Path, target: PyTree, step: Optional[int] = None,
+            shardings: Optional[PyTree] = None):
+    """Restore into the structure of ``target`` (a concrete or abstract
+    pytree).  With ``shardings``, arrays land sharded on the current mesh
+    (reshard-on-load)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = ckpt_dir / f"step_{step:08d}"
+    data = np.load(path / "arrays.npz")
+    with open(path / "manifest.json") as f:
+        manifest = json.load(f)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+    sh_leaves = None
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_flatten(shardings)[0]
+    out = []
+    for i, (p, leaf) in enumerate(flat):
+        key = jax.tree_util.keystr(p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        want_dtype = getattr(leaf, "dtype", arr.dtype)
+        jarr = jax.numpy.asarray(arr).astype(want_dtype)
+        if sh_leaves is not None:
+            jarr = jax.device_put(jarr, sh_leaves[i])
+        out.append(jarr)
+    state = jax.tree_util.tree_unflatten(treedef, out)
+    return state, step, manifest.get("extra", {})

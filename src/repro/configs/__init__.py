@@ -1,0 +1,2 @@
+from repro.configs.registry import ASSIGNED, get_config, list_archs  # noqa: F401
+from repro.configs import shapes  # noqa: F401

@@ -1,0 +1,16 @@
+"""deepseek-7b [dense]: 30L d_model=4096 32H (GQA kv=32) d_ff=11008
+vocab=102400 — llama-arch [arXiv:2401.02954; hf]."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b", family="transformer",
+    vocab_size=102400, d_model=4096, n_layers=30,
+    n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=11008, mlp_type="swiglu", norm_type="rmsnorm",
+    rope_theta=1e4, tie_embeddings=False,
+    remat="full", scan_layers=True,
+)
+
+REDUCED = CONFIG.replace(
+    vocab_size=512, d_model=128, n_layers=2, n_heads=4, n_kv_heads=4,
+    head_dim=32, d_ff=256, remat="none")

@@ -1,0 +1,16 @@
+"""gemma-2b [dense]: 18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=256000
+— GeGLU, head_dim=256 [arXiv:2403.08295; hf]."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b", family="transformer",
+    vocab_size=256000, d_model=2048, n_layers=18,
+    n_heads=8, n_kv_heads=1, head_dim=256,
+    d_ff=16384, mlp_type="geglu", norm_type="gemma_rmsnorm",
+    embed_scale=True, tie_embeddings=True, rope_theta=1e4,
+    remat="full", scan_layers=True,
+)
+
+REDUCED = CONFIG.replace(
+    vocab_size=512, d_model=128, n_layers=2, n_heads=4, n_kv_heads=1,
+    head_dim=32, d_ff=256, remat="none")

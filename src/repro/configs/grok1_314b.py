@@ -1,0 +1,27 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2 [hf:xai-org/grok-1; unverified].
+
+8 experts do not divide the 16-way model axis; the sharding fallback maps
+the expert dim onto the pod axis (multi-pod) or replicates it (single-pod),
+and shards each expert's 32768-wide FFN over "model" instead — exercised by
+the dry-run's divisibility-aware layout resolution.
+"""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="transformer",
+    vocab_size=131072, d_model=6144, n_layers=64,
+    n_heads=48, n_kv_heads=8, head_dim=128,
+    mlp_type="geglu", norm_type="rmsnorm",
+    attn_logit_softcap=30.0,
+    rope_theta=1e4, tie_embeddings=False,
+    moe=True, n_experts=8, n_experts_per_token=2, moe_d_ff=32768,
+    moe_renormalize=True, capacity_factor=1.25,
+    moe_cap_batch_sharding=True,
+    remat="full", scan_layers=True,
+)
+
+REDUCED = CONFIG.replace(
+    vocab_size=512, d_model=128, n_layers=2, n_heads=4, n_kv_heads=2,
+    head_dim=32, moe_d_ff=128, n_experts=4, n_experts_per_token=2,
+    remat="none")

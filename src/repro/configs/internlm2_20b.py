@@ -1,0 +1,16 @@
+"""internlm2-20b [dense]: 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92544 — GQA [arXiv:2403.17297; hf]."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b", family="transformer",
+    vocab_size=92544, d_model=6144, n_layers=48,
+    n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=16384, mlp_type="swiglu", norm_type="rmsnorm",
+    rope_theta=1e6, tie_embeddings=False,
+    remat="full", scan_layers=True,
+)
+
+REDUCED = CONFIG.replace(
+    vocab_size=512, d_model=128, n_layers=2, n_heads=4, n_kv_heads=2,
+    head_dim=32, d_ff=256, remat="none")

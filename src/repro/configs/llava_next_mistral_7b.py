@@ -1,0 +1,23 @@
+"""llava-next-mistral-7b [vlm]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000 — anyres tiling (patch-embedding stub)
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified].
+
+The vision tower is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings (anyres tiling -> 576 base patches) that are
+concatenated ahead of the text tokens.
+"""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b", family="transformer",
+    vocab_size=32000, d_model=4096, n_layers=32,
+    n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, mlp_type="swiglu", norm_type="rmsnorm",
+    rope_theta=1e6, tie_embeddings=False,
+    frontend="vision_stub", num_patches=576,
+    remat="full", scan_layers=True,
+)
+
+REDUCED = CONFIG.replace(
+    vocab_size=512, d_model=128, n_layers=2, n_heads=4, n_kv_heads=2,
+    head_dim=32, d_ff=256, num_patches=16, remat="none")

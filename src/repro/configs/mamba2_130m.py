@@ -1,0 +1,18 @@
+"""mamba2-130m — the paper's Mamba-2 evaluation subject (hf:mamba2-130m-hf).
+
+CumSum_b here is the (256, 256) segsum inside each SSD chunk — the op the
+paper measures at >99.9% of total CumSum time and remaps with CumBA.
+"""
+from repro.core.xamba import XambaConfig
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="mamba2",
+    vocab_size=50288, d_model=768, n_layers=24,
+    d_state=128, d_conv=4, expand=2, ssm_head_dim=64, ssm_ngroups=1,
+    chunk_size=256, tie_embeddings=True, scan_layers=True, remat="full",
+    xamba=XambaConfig.optimized(),
+)
+
+REDUCED = CONFIG.replace(vocab_size=512, d_model=128, n_layers=2,
+                         d_state=16, ssm_head_dim=32, chunk_size=32)

@@ -1,0 +1,21 @@
+"""mamba2-2.7b [ssm]: 64L d_model=2560 (attn-free) vocab=50280,
+ssm_state=128 — SSD (state-space duality) [arXiv:2405.21060; unverified].
+
+The paper's main regime: SSD's segsum/cumsum runs under CumBA, the
+contractions under ReduBA, the SiLU/Softplus under ActiBA.
+"""
+from repro.core.xamba import XambaConfig
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b", family="mamba2",
+    vocab_size=50280, d_model=2560, n_layers=64,
+    d_state=128, d_conv=4, expand=2, ssm_head_dim=64, ssm_ngroups=1,
+    chunk_size=256, tie_embeddings=True, norm_type="rmsnorm",
+    remat="full", scan_layers=True,
+    xamba=XambaConfig.optimized(),
+)
+
+REDUCED = CONFIG.replace(
+    vocab_size=512, d_model=128, n_layers=2, d_state=16, ssm_head_dim=32,
+    chunk_size=32, remat="none")

@@ -1,0 +1,13 @@
+"""mamba-130m — the paper's Mamba-1 evaluation subject (hf:mamba-130m-hf)."""
+from repro.core.xamba import XambaConfig
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba-130m", family="mamba",
+    vocab_size=50280, d_model=768, n_layers=24,
+    d_state=16, d_conv=4, expand=2, dt_rank=48,
+    tie_embeddings=True, scan_layers=True, remat="full",
+    xamba=XambaConfig.optimized(),
+)
+
+REDUCED = CONFIG.replace(vocab_size=512, d_model=128, n_layers=2, dt_rank=8)

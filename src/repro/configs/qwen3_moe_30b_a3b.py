@@ -1,0 +1,19 @@
+"""qwen3-moe-30b-a3b [moe]: 48L d_model=2048 32H (GQA kv=4) d_ff=768
+vocab=151936, MoE 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B; hf]."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="transformer",
+    vocab_size=151936, d_model=2048, n_layers=48,
+    n_heads=32, n_kv_heads=4, head_dim=128,
+    mlp_type="swiglu", norm_type="rmsnorm",
+    rope_theta=1e6, tie_embeddings=False,
+    moe=True, n_experts=128, n_experts_per_token=8, moe_d_ff=768,
+    moe_renormalize=True, capacity_factor=1.25,
+    remat="full", scan_layers=True,
+)
+
+REDUCED = CONFIG.replace(
+    vocab_size=512, d_model=128, n_layers=2, n_heads=4, n_kv_heads=2,
+    head_dim=32, moe_d_ff=64, n_experts=8, n_experts_per_token=2,
+    remat="none")

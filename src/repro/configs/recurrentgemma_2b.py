@@ -1,0 +1,21 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (MQA kv=1) d_ff=7680
+vocab=256000 — RG-LRU + local attn, 1:2 [arXiv:2402.19427; hf]."""
+from repro.core.xamba import XambaConfig
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="recurrentgemma",
+    vocab_size=256000, d_model=2560, n_layers=26,
+    n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, mlp_type="geglu", norm_type="gemma_rmsnorm",
+    embed_scale=True, tie_embeddings=True,
+    lru_width=2560, sliding_window=2048,
+    block_pattern=("recurrent", "recurrent", "attention"),
+    attn_logit_softcap=30.0,
+    remat="full", scan_layers=True,
+    xamba=XambaConfig.optimized(),
+)
+
+REDUCED = CONFIG.replace(
+    vocab_size=512, d_model=128, n_layers=3, n_heads=4, n_kv_heads=1,
+    head_dim=32, d_ff=256, lru_width=128, sliding_window=64, remat="none")

@@ -1,0 +1,45 @@
+"""Architecture config registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.base import ModelConfig
+
+# arch id -> module under repro.configs
+_ARCHS: Dict[str, str] = {
+    "internlm2-20b": "internlm2_20b",
+    "deepseek-7b": "deepseek_7b",
+    "qwen1.5-4b": "qwen15_4b",
+    "gemma-2b": "gemma_2b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "grok-1-314b": "grok1_314b",
+    "whisper-tiny": "whisper_tiny",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    # the paper's own evaluation subjects
+    "mamba-130m": "mamba_130m",
+    "mamba2-130m": "mamba2_130m",
+}
+
+ASSIGNED = [a for a in _ARCHS if not a.endswith("130m")]
+
+
+def list_archs() -> List[str]:
+    return list(_ARCHS)
+
+
+def _module(arch: str):
+    if arch not in _ARCHS:
+        raise ValueError(f"unknown arch {arch!r}; have {sorted(_ARCHS)}")
+    return importlib.import_module(f"repro.configs.{_ARCHS[arch]}")
+
+
+def get_config(arch: str, *, reduced: bool = False, **overrides
+               ) -> ModelConfig:
+    mod = _module(arch)
+    cfg = mod.REDUCED if reduced else mod.CONFIG
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg

@@ -1,0 +1,95 @@
+"""Assigned input shapes and abstract input builders for the dry-run.
+
+Every LM-family arch is paired with four shape cells:
+
+  train_4k     seq=4096    batch=256   -> train_step
+  prefill_32k  seq=32768   batch=32    -> prefill_step
+  decode_32k   seq=32768   batch=128   -> decode_step (1 token, full cache)
+  long_500k    seq=524288  batch=1     -> decode_step; SSM/hybrid archs only
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for the matching step function.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# Archs with a sub-quadratic sequence path (may run long_500k).
+SUBQUADRATIC_FAMILIES = ("mamba", "mamba2", "recurrentgemma")
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else a skip reason."""
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return ("pure full-attention arch: O(L^2) attention at 524k is "
+                "out of scope per assignment (sub-quadratic archs only)")
+    return None
+
+
+def batch_inputs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract batch for loss()/train_step: tokens + labels (+ stubs)."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.family == "whisper":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return out
+    if cfg.frontend == "vision_stub":
+        p = cfg.num_patches
+        out["image_embeds"] = jax.ShapeDtypeStruct((b, p, cfg.d_model),
+                                                   cfg.dtype)
+        s = max(s - p, 1)  # total context = patches + text = shape seq
+    out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.family == "whisper":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "vision_stub":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), cfg.dtype)
+        s = max(s - cfg.num_patches, 1)
+    out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    b = shape.global_batch
+    return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def abstract_cache(model, cfg: ModelConfig, shape: ShapeSpec,
+                   dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree matching model.init_cache."""
+    concrete = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, dtype))
+    return concrete

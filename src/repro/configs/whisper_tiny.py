@@ -1,0 +1,20 @@
+"""whisper-tiny [audio]: 4L d_model=384 6H d_ff=1536 vocab=51865 — enc-dec,
+conv frontend stubbed [arXiv:2212.04356; unverified].
+
+``input_specs()`` provides precomputed frame embeddings (batch, 1500, 384);
+the conv1d+GELU frontend is a stub per the assignment.
+"""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="whisper",
+    vocab_size=51865, d_model=384, n_layers=4, encoder_layers=4,
+    n_heads=6, n_kv_heads=6, head_dim=64,
+    d_ff=1536, mlp_type="mlp", norm_type="layernorm",
+    encoder_seq=1500, tie_embeddings=True,
+    remat="none", scan_layers=False,
+)
+
+REDUCED = CONFIG.replace(
+    vocab_size=512, d_model=64, n_layers=2, encoder_layers=2, n_heads=4,
+    n_kv_heads=4, head_dim=16, d_ff=128, encoder_seq=32)

@@ -1,0 +1,3 @@
+"""XAMBA core: the paper's techniques as composable JAX modules."""
+from repro.core.xamba import XambaConfig  # noqa: F401
+from repro.core import pwl, reduce, segsum, selective_scan, ssd  # noqa: F401

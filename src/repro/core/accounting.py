@@ -1,0 +1,32 @@
+"""Accounting mode: unroll inner lax.scans for exact HLO cost analysis.
+
+``cost_analysis()`` counts a while-loop body once, so any scan hides
+(trip_count - 1)x of its FLOPs and collective bytes.  The dry-run therefore
+compiles each train cell twice:
+
+  * rolled (production config, scans intact)  -> memory_analysis
+  * unrolled (this flag on, scans expanded)   -> cost_analysis + collectives
+
+Model code consults ``inner_unroll(n)`` when building its scans.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_UNROLL: contextvars.ContextVar = contextvars.ContextVar(
+    "unroll_inner_scans", default=False)
+
+
+@contextlib.contextmanager
+def unroll_inner_scans():
+    token = _UNROLL.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(token)
+
+
+def inner_unroll(n_steps: int) -> int:
+    """The ``unroll=`` argument for an inner lax.scan of n_steps."""
+    return n_steps if _UNROLL.get() else 1

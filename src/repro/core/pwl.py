@@ -1,0 +1,208 @@
+"""ActiBA: piecewise-linear activation approximation (the NPU PLU/C-LUT analogue).
+
+The NPU's Piecewise-Linear Unit evaluates ``f(x) ~= m_k * x + c_k`` on interval
+``[x_k, x_{k+1}]`` from a configurable lookup table of slopes/intercepts.  TPUs
+have no LUT datapath, so we evaluate the *same* piecewise-linear function in a
+gather-free basis form that is exact for continuous PWL functions:
+
+    f(x) = m_0 * x + c_0 + sum_k (m_k - m_{k-1}) * relu(x - b_k)
+
+which is K fused multiply-adds + maxes on the VPU — and, crucially, fusable
+into a producing matmul's epilogue (``kernels/matmul_pwl.py``), reproducing
+the paper's drain-phase "vertical fusion".
+
+Tables are built at trace time with numpy (compile-time constants, like the
+paper's compile-time C-LUT programming), with either uniform breakpoints or
+curvature-adaptive ones (knot density ~ integral of sqrt(|f''|), Flex-SFU
+style), which cuts max error by ~an order of magnitude at equal K.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PWLTable:
+    """Compile-time C-LUT: interior breakpoints + per-segment slope/intercept.
+
+    ``breakpoints`` has K-1 entries for K segments; segment 0 covers
+    ``(-inf, b_0]`` and segment K-1 covers ``(b_{K-2}, inf)`` (linear
+    extension outside the fitted range, as the PLU does).
+    """
+
+    name: str
+    breakpoints: Tuple[float, ...]  # ascending, length K-1
+    slopes: Tuple[float, ...]       # length K
+    intercepts: Tuple[float, ...]   # length K
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.slopes)
+
+    # Basis-form coefficients (precomputed once).
+    def basis(self) -> Tuple[np.ndarray, float, float]:
+        m = np.asarray(self.slopes, np.float64)
+        dm = m[1:] - m[:-1]                      # (K-1,)
+        return dm, float(m[0]), float(self.intercepts[0])
+
+
+# ----------------------------------------------------------------------------
+# Fitting
+# ----------------------------------------------------------------------------
+
+def _uniform_knots(lo: float, hi: float, segments: int) -> np.ndarray:
+    return np.linspace(lo, hi, segments + 1)
+
+
+def _adaptive_knots(fn: Callable[[np.ndarray], np.ndarray], lo: float,
+                    hi: float, segments: int, grid: int = 4097) -> np.ndarray:
+    """Knot density proportional to sqrt(|f''|) (equalizes per-segment error)."""
+    xs = np.linspace(lo, hi, grid)
+    h = xs[1] - xs[0]
+    ys = fn(xs)
+    d2 = np.gradient(np.gradient(ys, h), h)
+    w = np.sqrt(np.abs(d2)) + 1e-6          # avoid zero density on flat spans
+    cdf = np.concatenate([[0.0], np.cumsum((w[1:] + w[:-1]) * 0.5 * h)])
+    cdf /= cdf[-1]
+    targets = np.linspace(0.0, 1.0, segments + 1)
+    knots = np.interp(targets, cdf, xs)
+    knots[0], knots[-1] = lo, hi
+    # De-duplicate pathological collisions.
+    for i in range(1, len(knots)):
+        if knots[i] <= knots[i - 1]:
+            knots[i] = knots[i - 1] + 1e-6
+    return knots
+
+
+def fit_pwl(fn: Callable[[np.ndarray], np.ndarray], *, name: str,
+            lo: float = -10.0, hi: float = 10.0, segments: int = 32,
+            adaptive: bool = True) -> PWLTable:
+    """Fit a continuous interpolating PWL table to ``fn`` on ``[lo, hi]``."""
+    knots = (_adaptive_knots(fn, lo, hi, segments) if adaptive
+             else _uniform_knots(lo, hi, segments))
+    ys = fn(knots)
+    slopes, intercepts = [], []
+    for k in range(segments):
+        x0, x1 = knots[k], knots[k + 1]
+        y0, y1 = ys[k], ys[k + 1]
+        m = (y1 - y0) / (x1 - x0)
+        slopes.append(float(m))
+        intercepts.append(float(y0 - m * x0))
+    return PWLTable(name=name, breakpoints=tuple(float(b) for b in knots[1:-1]),
+                    slopes=tuple(slopes), intercepts=tuple(intercepts))
+
+
+# ----------------------------------------------------------------------------
+# Evaluation (gather-free basis form; jit/Pallas friendly)
+# ----------------------------------------------------------------------------
+
+def eval_pwl(table: PWLTable, x: Array) -> Array:
+    """Evaluate the PWL function; exact for the table's piecewise-linear fn."""
+    dm, m0, c0 = table.basis()
+    out_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    y = m0 * xf + c0
+    bps = np.asarray(table.breakpoints, np.float32)
+    for k in range(dm.shape[0]):
+        y = y + np.float32(dm[k]) * jnp.maximum(xf - bps[k], 0.0)
+    return y.astype(out_dtype)
+
+
+def eval_pwl_reference(table: PWLTable, x: np.ndarray) -> np.ndarray:
+    """Segment-indexed (LUT-style) numpy evaluation — the literal NPU PLU."""
+    bps = np.asarray(table.breakpoints, np.float64)
+    idx = np.searchsorted(bps, x, side="right")
+    m = np.asarray(table.slopes, np.float64)[idx]
+    c = np.asarray(table.intercepts, np.float64)[idx]
+    return m * x + c
+
+
+# ----------------------------------------------------------------------------
+# Error analysis (used by the Table-1 quality benchmark and property tests)
+# ----------------------------------------------------------------------------
+
+def pwl_error(fn: Callable[[np.ndarray], np.ndarray], table: PWLTable,
+              lo: float | None = None, hi: float | None = None,
+              n: int = 100_001) -> Dict[str, float]:
+    lo = table.breakpoints[0] - 1.0 if lo is None else lo
+    hi = table.breakpoints[-1] + 1.0 if hi is None else hi
+    xs = np.linspace(lo, hi, n)
+    exact = fn(xs)
+    approx = eval_pwl_reference(table, xs)
+    err = np.abs(exact - approx)
+    denom = np.maximum(np.abs(exact), 1e-3)
+    return {"max_abs": float(err.max()),
+            "mean_abs": float(err.mean()),
+            "max_rel": float((err / denom).max())}
+
+
+# ----------------------------------------------------------------------------
+# The activations the paper targets (+ the ones the assigned archs need)
+# ----------------------------------------------------------------------------
+
+def _np_sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-np.clip(x, -60, 60)))
+
+
+def _np_silu(x):
+    return x * _np_sigmoid(x)
+
+
+def _np_softplus(x):
+    return np.logaddexp(0.0, x)
+
+
+def _np_gelu_tanh(x):
+    return 0.5 * x * (1.0 + np.tanh(np.sqrt(2.0 / np.pi) * (x + 0.044715 * x ** 3)))
+
+
+_NP_FNS: Dict[str, Callable] = {
+    "silu": _np_silu,
+    "softplus": _np_softplus,
+    "gelu": _np_gelu_tanh,
+    "sigmoid": _np_sigmoid,
+}
+
+_EXACT_FNS: Dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "softplus": jax.nn.softplus,
+    "gelu": partial(jax.nn.gelu, approximate=True),
+    "sigmoid": jax.nn.sigmoid,
+}
+
+_TABLE_CACHE: Dict[Tuple, PWLTable] = {}
+
+
+def get_table(name: str, *, segments: int = 32, lo: float = -10.0,
+              hi: float = 10.0, adaptive: bool = True) -> PWLTable:
+    key = (name, segments, lo, hi, adaptive)
+    if key not in _TABLE_CACHE:
+        _TABLE_CACHE[key] = fit_pwl(_NP_FNS[name], name=name, lo=lo, hi=hi,
+                                    segments=segments, adaptive=adaptive)
+    return _TABLE_CACHE[key]
+
+
+def numpy_fn(name: str) -> Callable[[np.ndarray], np.ndarray]:
+    return _NP_FNS[name]
+
+
+def activation(name: str, xamba=None) -> Callable[[Array], Array]:
+    """Return ``name``'s activation under the given XambaConfig.
+
+    With ``actiba`` enabled this is the PWL approximation (ActiBA);
+    otherwise the exact function.
+    """
+    if xamba is not None and getattr(xamba, "actiba", False):
+        table = get_table(name, segments=xamba.actiba_segments,
+                          lo=xamba.actiba_range[0], hi=xamba.actiba_range[1],
+                          adaptive=xamba.actiba_adaptive)
+        return partial(eval_pwl, table)
+    return _EXACT_FNS[name]

@@ -1,0 +1,100 @@
+"""ReduBA: reductions as MXU contractions.
+
+On the NPU, ``ReduceSum`` over an m x n tensor costs m sequential DSP cycles;
+ReduBA reformulates it as ``R = M_ReduBA @ X`` with an all-ones vector mask so
+it runs on the MAC array, reusing the same mask for every call.
+
+On TPU the analogue is: a plain ``jnp.sum`` (and the mul+ReduceSum chains that
+naive einsum implementations produce) run on the VPU, while a ones-vector
+``dot_general`` engages the MXU.  The framework-level consequence — which is
+how the paper's insight generalizes — is that *contractions should always be
+expressed as dot_generals, never as broadcast-multiply + sum*.  ``contract``
+below is the mode-switched einsum used by the SSD implementation: ``naive``
+deliberately lowers to mul+ReduceSum (the measured NPU baseline), ``reduba``
+lowers to dot_general.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def reduce_sum(x: Array, axis: int = 0, mode: str = "reduba") -> Array:
+    """Sum over one axis under a ReduBA mode."""
+    if mode == "naive":
+        return jnp.sum(x, axis=axis)
+    x_moved = jnp.moveaxis(x, axis, -1)
+    m = x_moved.shape[-1]
+    if mode == "reduba":
+        acc = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16) else x.dtype
+        ones = jnp.ones((m,), dtype=x.dtype)  # M_ReduBA, reused everywhere
+        return jax.lax.dot_general(
+            x_moved, ones, (((x_moved.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=acc).astype(x.dtype)
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        return kops.reduba_sum(x_moved, interpret=(mode == "pallas_interpret"))
+    raise ValueError(f"unknown reduce mode {mode!r}")
+
+
+# ----------------------------------------------------------------------------
+# Mode-switched einsum
+# ----------------------------------------------------------------------------
+
+_SPEC_RE = re.compile(r"^([a-zA-Z]+),([a-zA-Z]+)->([a-zA-Z]+)$")
+
+
+def contract(spec: str, lhs: Array, rhs: Array, mode: str = "reduba",
+             precision=None) -> Array:
+    """Two-operand einsum that either uses the MXU (``reduba``) or a
+    broadcast-multiply + ReduceSum chain (``naive`` — the paper's baseline).
+
+    Both paths are numerically equivalent up to accumulation order; ``naive``
+    exists so benchmarks can measure exactly the op structure the paper
+    profiled on the NPU.
+    """
+    m = _SPEC_RE.match(spec.replace(" ", ""))
+    if not m:
+        raise ValueError(f"contract() wants 'ab,bc->ac' style spec, got {spec!r}")
+    if mode in ("reduba", "pallas", "pallas_interpret"):
+        # dot_general path: let XLA pick MXU-friendly contractions.
+        return jnp.einsum(spec, lhs, rhs, precision=precision,
+                          preferred_element_type=jnp.float32).astype(
+                              jnp.result_type(lhs, rhs))
+    if mode != "naive":
+        raise ValueError(f"unknown contract mode {mode!r}")
+    lterms, rterms, oterms = m.group(1), m.group(2), m.group(3)
+    contracted = sorted((set(lterms) | set(rterms)) - set(oterms))
+    # Build a common broadcast frame: output dims then contracted dims.
+    frame = oterms + "".join(contracted)
+
+    def align(x, terms):
+        # Permute x's dims into frame order, then insert size-1 dims.
+        order = sorted(range(len(terms)), key=lambda i: frame.index(terms[i]))
+        x = jnp.transpose(x, order)
+        present, xi, shape = set(terms), 0, []
+        for c in frame:
+            if c in present:
+                shape.append(x.shape[xi])
+                xi += 1
+            else:
+                shape.append(1)
+        return x.reshape(shape)
+
+    lb = align(lhs, lterms)
+    rb = align(rhs, rterms)
+    prod = (lb.astype(jnp.float32) * rb.astype(jnp.float32))
+    # ReduceSum over each contracted dim — the NPU-style op chain.
+    for _ in contracted:
+        prod = jnp.sum(prod, axis=-1)
+    return prod.astype(jnp.result_type(lhs, rhs))
+
+
+def mean(x: Array, axis: int = -1, mode: str = "reduba") -> Array:
+    n = x.shape[axis]
+    return reduce_sum(x, axis=axis, mode=mode) / np.float32(n)

@@ -1,0 +1,85 @@
+"""CumBA: cumulative sums / segment sums as triangular-mask matmuls.
+
+The paper's dominant Mamba-2 bottleneck (``CumSum_b``, >99.9% of cumsum time)
+is the masked cumulative sum inside SSD's ``segsum`` — a (T, T) op per chunk
+per head.  On the NPU the DSP executes it in m sequential vector-adds; CumBA
+re-expresses it as ``C = M_CumBA @ X`` with a compile-time lower-triangular
+mask so it lands on the MAC array.
+
+On TPU the same split exists: ``jnp.cumsum`` lowers to a serial/reduce-window
+form on the VPU, while the masked-matmul form engages the 128x128 MXU.  Modes:
+
+* ``naive``            — ``jnp.cumsum`` (the DSP-like baseline).
+* ``cumba``            — triangular-mask matmul (MXU), XLA-lowered.
+* ``pallas``           — the Pallas kernel (``kernels/cumba.py``): blocked,
+                         carries a running prefix so upper-triangle blocks are
+                         *never scheduled* (the static-skip analogue of ZVC).
+* ``pallas_interpret`` — same kernel, interpreter mode (CPU validation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_NEG_INF = -1e30  # used instead of -inf so exp() never sees nan from inf-inf
+
+
+def _tri_mask(t: int, dtype) -> Array:
+    """The compile-time CumBA mask: M[i, j] = 1 if j <= i else 0."""
+    return jnp.tril(jnp.ones((t, t), dtype=dtype))
+
+
+def cumsum(x: Array, axis: int = -1, mode: str = "cumba") -> Array:
+    """Cumulative sum along ``axis`` under a CumBA mode."""
+    if mode == "naive":
+        return jnp.cumsum(x, axis=axis)
+    x = jnp.moveaxis(x, axis, -1)
+    t = x.shape[-1]
+    if mode == "cumba":
+        acc = jnp.float32 if x.dtype in (jnp.bfloat16, jnp.float16) else x.dtype
+        mask = _tri_mask(t, x.dtype)
+        out = jax.lax.dot_general(
+            x, mask, (((x.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=acc).astype(x.dtype)
+    elif mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        out = kops.cumba_cumsum(x, interpret=(mode == "pallas_interpret"))
+    else:
+        raise ValueError(f"unknown cumsum mode {mode!r}")
+    return jnp.moveaxis(out, -1, axis)
+
+
+def segsum(a: Array, mode: str = "cumba") -> Array:
+    """Segment sum over the trailing axis.
+
+    ``segsum(a)[..., i, j] = sum_{k=j+1..i} a[..., k]`` for ``i >= j`` and
+    ``-inf`` (well, ``_NEG_INF``) above the diagonal — i.e. the log of the
+    1-semiseparable decay matrix ``L`` in SSD.
+
+    * ``naive`` is the official Mamba-2 Listing-1 formulation: broadcast ``a``
+      to (T, T), mask strictly-lower, masked cumsum down the rows — this is
+      exactly the paper's ``CumSum_b`` (a (T, T) cumsum).
+    * ``cumba``/``pallas`` compute the prefix sum with the triangular matmul
+      and take broadcasted differences: ``S_ij = cs_i - cs_j``.
+    """
+    t = a.shape[-1]
+    if mode == "naive":
+        x = jnp.broadcast_to(a[..., :, None], a.shape + (t,))  # x[..., k, j] = a_k
+        mask = jnp.tril(jnp.ones((t, t), bool), -1)            # keep k > j  (strict lower in (k, j))
+        x = jnp.where(mask, x, 0.0)
+        s = jnp.cumsum(x, axis=-2)                             # over k -> cs[..., i, j] = sum_{k<=i, k>j} a_k
+        out = jnp.where(jnp.tril(jnp.ones((t, t), bool)), s, _NEG_INF)
+        return out
+    elif mode in ("cumba", "pallas", "pallas_interpret"):
+        cs = cumsum(a.astype(jnp.float32), axis=-1,
+                    mode="cumba" if mode == "cumba" else mode)
+        out = cs[..., :, None] - cs[..., None, :]
+        return jnp.where(jnp.tril(jnp.ones((t, t), bool)), out, _NEG_INF)
+    raise ValueError(f"unknown segsum mode {mode!r}")
+
+
+def decay_matrix(a: Array, mode: str = "cumba") -> Array:
+    """``L = exp(segsum(a))`` — the semiseparable decay matrix."""
+    return jnp.exp(segsum(a, mode=mode))

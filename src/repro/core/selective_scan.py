@@ -1,0 +1,137 @@
+"""Mamba-1 selective scan (the paper's other profiled model).
+
+Mamba-1's NPU bottleneck is its activations (Swish/Softplus -> ActiBA), not
+cumsum; the scan itself is a per-channel linear recurrence
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * u_t ,   y_t = C_t . h_t + D u_t
+
+which we implement three ways:
+
+* ``associative``  — ``jax.lax.associative_scan`` (log-depth, XLA),
+* ``sequential``   — ``jax.lax.scan`` oracle (exact reference),
+* ``chunked``      — CumBA-style: within a chunk the decay products
+                     ``prod_{k=j+1..t} a_k = exp(segsum(log a))`` are the same
+                     1-semiseparable structure SSD uses, so the intra-chunk
+                     part becomes matmuls (this is the Mamba-1 analogue of the
+                     paper's CumSum->MatMul remap; it is exact in fp32).
+
+Shapes (Mamba-1 convention):
+  u:     (batch, seqlen, dinner)
+  delta: (batch, seqlen, dinner)   -- post-softplus
+  A:     (dinner, dstate)          -- negative
+  B, C:  (batch, seqlen, dstate)
+  D:     (dinner,)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import segsum as xsegsum
+from repro.core.xamba import XambaConfig
+
+Array = jax.Array
+
+
+def selective_scan(u: Array, delta: Array, A: Array, B: Array, C: Array,
+                   D: Optional[Array] = None, *,
+                   mode: str = "associative",
+                   chunk_size: int = 128,
+                   initial_state: Optional[Array] = None,
+                   xamba: XambaConfig = XambaConfig(),
+                   return_final_state: bool = False):
+    """Returns y: (b, l, d) [and final state (b, d, n)]."""
+    b, l, d = u.shape
+    n = A.shape[-1]
+    uf = u.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    # Discretize (ZOH on A, Euler on B as in Mamba).
+    dA = df[..., None] * Af[None, None]                    # (b, l, d, n) log-decay
+    dBu = (df * uf)[..., None] * Bf[:, :, None, :]         # (b, l, d, n)
+
+    h0 = (jnp.zeros((b, d, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    if mode == "sequential":
+        def step(h, t_in):
+            dA_t, dBu_t, C_t = t_in
+            h = jnp.exp(dA_t) * h + dBu_t
+            y = jnp.einsum("bdn,bn->bd", h, C_t)
+            return h, y
+        ins = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBu, 1, 0),
+               jnp.moveaxis(Cf, 1, 0))
+        hT, ys = jax.lax.scan(step, h0, ins)
+        y = jnp.moveaxis(ys, 0, 1)
+    elif mode == "associative":
+        decay = jnp.exp(dA)                                # (b, l, d, n)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        a_sc, h_sc = jax.lax.associative_scan(
+            combine, (decay, dBu), axis=1)
+        h_all = h_sc + a_sc * h0[:, None]                  # fold initial state
+        y = jnp.einsum("bldn,bln->bld", h_all, Cf)
+        hT = h_all[:, -1]
+    elif mode == "chunked":
+        assert l % chunk_size == 0, (l, chunk_size)
+        c = l // chunk_size
+        # (b, c, L, d, n)
+        dA_c = dA.reshape(b, c, chunk_size, d, n)
+        dBu_c = dBu.reshape(b, c, chunk_size, d, n)
+        C_c = Cf.reshape(b, c, chunk_size, n)
+        # intra-chunk: h_t = sum_j exp(segsum)(t,j) dBu_j  (+ carry term)
+        a_perm = jnp.transpose(dA_c, (0, 1, 3, 4, 2))      # (b, c, d, n, L)
+        S = xsegsum.segsum(a_perm, mode=xamba.cumba)       # (b, c, d, n, L, L)
+        Lmat = jnp.exp(S)
+        h_intra = jnp.einsum("bcdnts,bcsdn->bctdn", Lmat, dBu_c)
+        # chunk-level recurrence on the running state
+        cum = xsegsum.cumsum(a_perm, axis=-1, mode=xamba.cumba)  # (b,c,d,n,L)
+        chunk_decay = jnp.exp(cum[..., -1])                # (b, c, d, n)
+        chunk_state = h_intra[:, :, -1]                    # (b, c, d, n)
+
+        def step(h, t_in):
+            cd, cs = t_in
+            return cd * h + cs, h                          # emit state *entering* chunk
+
+        (hT, h_enter) = jax.lax.scan(
+            step, h0, (jnp.moveaxis(chunk_decay, 1, 0),
+                       jnp.moveaxis(chunk_state, 1, 0)))
+        h_enter = jnp.moveaxis(h_enter, 0, 1)              # (b, c, d, n)
+        decay_in = jnp.exp(cum)                            # (b, c, d, n, L)
+        h_all = h_intra + jnp.transpose(decay_in, (0, 1, 4, 2, 3)) * h_enter[:, :, None]
+        y = jnp.einsum("bctdn,bctn->bctd", h_all, C_c)
+        y = y.reshape(b, l, d)
+    else:
+        raise ValueError(f"unknown selective_scan mode {mode!r}")
+
+    if D is not None:
+        y = y + uf * D.astype(jnp.float32)[None, None]
+    y = y.astype(u.dtype)
+    if return_final_state:
+        return y, hT
+    return y
+
+
+def selective_scan_decode_step(state: Array, u_t: Array, delta_t: Array,
+                               A: Array, B_t: Array, C_t: Array,
+                               D: Optional[Array] = None
+                               ) -> Tuple[Array, Array]:
+    """One-token recurrent update. state: (b, d, n); u_t, delta_t: (b, d);
+    B_t, C_t: (b, n)."""
+    dtf = delta_t.astype(jnp.float32)
+    decay = jnp.exp(dtf[..., None] * A.astype(jnp.float32)[None])
+    dBu = (dtf * u_t.astype(jnp.float32))[..., None] * B_t.astype(jnp.float32)[:, None, :]
+    new_state = state.astype(jnp.float32) * decay + dBu
+    y = jnp.einsum("bdn,bn->bd", new_state, C_t.astype(jnp.float32))
+    if D is not None:
+        y = y + u_t.astype(jnp.float32) * D.astype(jnp.float32)[None]
+    return new_state, y.astype(u_t.dtype)

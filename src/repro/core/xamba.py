@@ -1,0 +1,71 @@
+"""XAMBA technique configuration.
+
+The paper's three optimization families are exposed as a single frozen config
+that is threaded through every model / layer that contains a remappable op:
+
+* ``cumba``   — how cumulative sums / segment sums are computed
+                (``naive`` = sequential-semantics cumsum, the NPU-DSP baseline;
+                ``cumba`` = lower-triangular-mask matmul on the MXU;
+                ``pallas`` = the Pallas kernel; ``pallas_interpret`` for CPU).
+* ``reduba``  — how reductions / einsum contractions are computed
+                (``naive`` = broadcast-multiply + ReduceSum, the baseline the
+                paper measured through OpenVINO; ``reduba`` = dot_general /
+                ones-matvec on the MXU; ``pallas`` = the Pallas kernel).
+* ``actiba``  — whether expensive activations (SiLU/Swish, Softplus, GeLU,
+                sigmoid) are replaced by piecewise-linear approximations
+                (the NPU PLU/C-LUT analogue), and with how many segments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+CUMSUM_MODES = ("naive", "cumba", "pallas", "pallas_interpret")
+REDUCE_MODES = ("naive", "reduba", "pallas", "pallas_interpret")
+
+
+@dataclasses.dataclass(frozen=True)
+class XambaConfig:
+    """Technique flags for the XAMBA operator remappings."""
+
+    # Step-2a: CumSum -> triangular matmul (paper Fig. 2c, "CumBA").
+    cumba: str = "cumba"
+    # Step-2b: ReduceSum -> MXU contraction (paper Fig. 2c, "ReduBA").
+    reduba: str = "reduba"
+    # Step-3: activations -> piecewise-linear (paper Fig. 2e, "ActiBA").
+    actiba: bool = False
+    actiba_segments: int = 32
+    actiba_range: Tuple[float, float] = (-10.0, 10.0)
+    # Non-uniform, curvature-adaptive breakpoints (Flex-SFU style) vs uniform.
+    actiba_adaptive: bool = True
+
+    def __post_init__(self):
+        if self.cumba not in CUMSUM_MODES:
+            raise ValueError(f"cumba mode {self.cumba!r} not in {CUMSUM_MODES}")
+        if self.reduba not in REDUCE_MODES:
+            raise ValueError(f"reduba mode {self.reduba!r} not in {REDUCE_MODES}")
+        if self.actiba_segments < 2:
+            raise ValueError("actiba_segments must be >= 2")
+
+    # ---- presets -----------------------------------------------------------
+    @classmethod
+    def baseline(cls) -> "XambaConfig":
+        """The unoptimized NPU-style execution (paper's baseline)."""
+        return cls(cumba="naive", reduba="naive", actiba=False)
+
+    @classmethod
+    def optimized(cls) -> "XambaConfig":
+        """CumBA + ReduBA (paper step-2, exact numerics)."""
+        return cls(cumba="cumba", reduba="reduba", actiba=False)
+
+    @classmethod
+    def full(cls, segments: int = 32) -> "XambaConfig":
+        """CumBA + ReduBA + ActiBA (paper step-2 + step-3)."""
+        return cls(cumba="cumba", reduba="reduba", actiba=True,
+                   actiba_segments=segments)
+
+    @classmethod
+    def pallas(cls, interpret: bool = False) -> "XambaConfig":
+        """Kernel-backed variants (TPU target; interpret=True on CPU)."""
+        mode = "pallas_interpret" if interpret else "pallas"
+        return cls(cumba=mode, reduba=mode, actiba=True)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import PrefetchIterator, device_put_batch  # noqa: F401
+from repro.data.synthetic import DataConfig, SyntheticLM  # noqa: F401
+from repro.data.packing import batch_packed, pack_documents  # noqa: F401

@@ -1,0 +1,59 @@
+"""Sharded, prefetching data pipeline.
+
+Each host materializes only its slice of the global batch
+(``host_local_slice``); a background thread keeps ``prefetch`` batches ready
+so input never blocks the step (the straggler story starts here — see
+runtime/health.py).  On this single-process box the host slice is the whole
+batch; the code path is identical.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+def host_local_slice(global_batch: int) -> slice:
+    n_hosts = jax.process_count()
+    idx = jax.process_index()
+    per = global_batch // n_hosts
+    return slice(idx * per, (idx + 1) * per)
+
+
+class PrefetchIterator:
+    """Wrap an iterator with a daemon prefetch thread."""
+
+    def __init__(self, it: Iterator, prefetch: int = 2):
+        self._it = it
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        except BaseException as e:  # noqa: BLE001 — surfaced on next()
+            self._err = e
+        self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is None:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+def device_put_batch(batch: Dict[str, np.ndarray], shardings=None):
+    if shardings is None:
+        return jax.tree.map(jax.numpy.asarray, batch)
+    return jax.tree.map(jax.device_put, batch, shardings)

@@ -1,0 +1,92 @@
+"""Activation-sharding context: models constrain activations without
+knowing the mesh.
+
+``activation_layout`` installs a (batch_axes, seq_axes) policy; model code
+calls ``shard_tokens3d`` / ``shard_tokens2d`` on block boundaries.  Outside a
+policy (CPU smoke tests) these are no-ops, so the same model code runs
+everywhere.  For ``long_500k`` (batch=1) the launcher installs a
+sequence-sharded layout instead of a batch-sharded one (SP).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_LAYOUT: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_layout", default=None)
+
+
+@contextlib.contextmanager
+def activation_layout(batch_axes: Any = ("pod", "data"),
+                      seq_axes: Any = None):
+    token = _LAYOUT.set({"batch": batch_axes, "seq": seq_axes})
+    try:
+        yield
+    finally:
+        _LAYOUT.reset(token)
+
+
+def current_layout() -> Optional[dict]:
+    return _LAYOUT.get()
+
+
+def shard_tokens2d(x):
+    """(batch, seq) int arrays."""
+    lay = _LAYOUT.get()
+    if lay is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(lay["batch"], lay["seq"]))
+
+
+def shard_tokens3d(x):
+    """(batch, seq, features) activations."""
+    lay = _LAYOUT.get()
+    if lay is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(lay["batch"], lay["seq"], None))
+
+
+def constrain_dims(x, dims: dict):
+    """Constrain selected dims by layout role: {dim_index: "batch"|"seq"}.
+
+    Used by the SSD chunk-parallel layout: (b, c, L, ...) tensors pin
+    b -> batch axes and the CHUNK dim -> the seq axes, so every device owns
+    whole chunks and the intra-chunk work is collective-free.
+    """
+    lay = _LAYOUT.get()
+    if lay is None:
+        return x
+    spec = [None] * x.ndim
+    ok = True
+    for d, role in dims.items():
+        axes = lay.get(role)
+        if axes is None:
+            continue
+        size = 1
+        names = (axes,) if isinstance(axes, str) else axes
+        # divisibility guard (mesh sizes unknown here; XLA validates, but
+        # skip constraining dims of size 1 to avoid invalid specs)
+        if x.shape[d] <= 1:
+            ok = False
+            continue
+        spec[d] = axes
+        del size, names
+    if not any(s is not None for s in spec):
+        return x
+    del ok
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def batch_pspec(ndim: int = 2) -> P:
+    lay = _LAYOUT.get()
+    batch = lay["batch"] if lay else None
+    seq = lay["seq"] if lay else None
+    if ndim == 1:
+        return P(batch)
+    return P(batch, seq, *([None] * (ndim - 2)))

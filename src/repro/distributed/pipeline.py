@@ -1,0 +1,81 @@
+"""Experimental pipeline parallelism (GPipe-style looped pipeline).
+
+Not required at the assigned 512-chip scale (TP x FSDP covers it — see
+DESIGN.md §5), but provided as the PP building block for >4k-chip meshes
+where a single layer's weights outgrow TP.
+
+Pattern (MaxText-style "circular" schedule, single program):
+  * stage parameters are stacked on a leading stage axis, sharded over a
+    mesh axis — each device group owns one stage;
+  * one buffer holds the in-flight activation of every stage; every tick
+    runs all stages in parallel (vmap over the sharded stage axis) and then
+    rotates the buffer one stage forward (lowers to collective-permute);
+  * microbatch i enters at tick i and exits after S stages; a run of
+    M microbatches costs M + S - 1 ticks (the usual bubble).
+
+Differentiable (jax.grad through the loop = GPipe with rematerialization).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pipeline_apply(stage_fn: Callable[[Any, Array], Array],
+                   stacked_params: Any,
+                   microbatches: Array) -> Array:
+    """Run ``stage_fn`` as an S-stage pipeline over M microbatches.
+
+    stage_fn: (stage_params, x) -> x, applied by every stage.
+    stacked_params: pytree with leading stage axis S (shard it over a mesh
+        axis for real PP; works unsharded too).
+    microbatches: (M, mb, ...) inputs.
+    Returns (M, mb, ...) outputs (microbatch i fully processed by all S
+    stages, in order).
+    """
+    s_axis = jax.tree.leaves(stacked_params)[0].shape[0]
+    m = microbatches.shape[0]
+    mb_shape = microbatches.shape[1:]
+
+    buf0 = jnp.zeros((s_axis,) + mb_shape, microbatches.dtype)
+    out0 = jnp.zeros((m,) + mb_shape, microbatches.dtype)
+
+    vfn = jax.vmap(stage_fn, in_axes=(0, 0))
+
+    def tick(carry, t):
+        buf, out = carry
+        # inject microbatch t (if any) into stage 0's slot
+        inj = jnp.where(t < m, t, m - 1)
+        x_in = jax.lax.dynamic_index_in_dim(microbatches, inj, 0,
+                                            keepdims=False)
+        buf = jnp.where(t < m, buf.at[0].set(x_in.astype(buf.dtype)), buf)
+        # all stages compute in parallel (stage axis may be mesh-sharded)
+        buf = vfn(stacked_params, buf)
+        # microbatch t - (S-1) exits from the last stage
+        exit_ix = t - (s_axis - 1)
+        out = jnp.where(
+            exit_ix >= 0,
+            jax.lax.dynamic_update_index_in_dim(
+                out, buf[-1], jnp.maximum(exit_ix, 0), 0),
+            out)
+        # rotate: stage s's output becomes stage s+1's input
+        buf = jnp.roll(buf, 1, axis=0)
+        return (buf, out), None
+
+    (_, out), _ = jax.lax.scan(tick, (buf0, out0),
+                               jnp.arange(m + s_axis - 1))
+    return out
+
+
+def reference_apply(stage_fn: Callable[[Any, Array], Array],
+                    stacked_params: Any, x: Array) -> Array:
+    """Sequential oracle: apply the S stages in order (no pipeline)."""
+    s = jax.tree.leaves(stacked_params)[0].shape[0]
+    for i in range(s):
+        p_i = jax.tree.map(lambda a: a[i], stacked_params)
+        x = stage_fn(p_i, x)
+    return x

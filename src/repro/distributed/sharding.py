@@ -1,0 +1,152 @@
+"""Logical-axis -> mesh-axis sharding with divisibility-aware fallback.
+
+Models declare *logical* axes on every parameter ("vocab", "embed", "mlp",
+"qkv", "expert", ...).  This module maps them onto the physical mesh
+(single-pod ``("data","model")`` or multi-pod ``("pod","data","model")``)
+using an ordered candidate table, checking
+
+  * divisibility  (a dim of size 8 never shards over a 16-way axis), and
+  * exclusivity   (each mesh axis used at most once per param),
+
+and falling back to replication otherwise — recording every fallback so the
+dry-run report shows exactly which params degraded.  This is what lets one
+model definition serve GQA kv-head counts of 1/4/8/20/32 and expert counts
+of 8/128 on the same mesh without per-arch sharding code.
+
+The default layout is 2-D "FSDP x TP": feature/"embed" dims shard over the
+compound data axes (ZeRO-3-style; XLA re-gathers per layer, overlapping with
+compute under scan-over-layers), projection-output/vocab/expert dims shard
+over "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.params import ParamSpec, is_spec
+
+# Candidate mesh axes per logical axis, in preference order.  "fsdp" is a
+# macro for the compound data axes present in the mesh (("pod","data") or
+# ("data",)).
+DEFAULT_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+    ("vocab", ("model",)),
+    ("embed", ("fsdp",)),
+    ("mlp", ("model",)),
+    ("mlp2", (None,)),
+    ("qkv", ("model",)),
+    ("heads", ("model",)),
+    ("kv_heads", ("model", None)),
+    ("expert", ("model", "pod", None)),
+    ("layers", (None,)),
+)
+
+
+@dataclasses.dataclass
+class ShardingReport:
+    """Which params fell back to replication on which dims (and why)."""
+    fallbacks: List[Tuple[str, int, str, str]] = dataclasses.field(
+        default_factory=list)
+
+    def add(self, path: str, dim: int, logical: str, reason: str):
+        self.fallbacks.append((path, dim, logical, reason))
+
+    def summary(self) -> str:
+        if not self.fallbacks:
+            return "all logical axes mapped"
+        lines = [f"  {p} dim{d} ({l}): {r}" for p, d, l, r in self.fallbacks]
+        return f"{len(self.fallbacks)} fallback(s):\n" + "\n".join(lines)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _expand_macro(cand, mesh: Mesh):
+    if cand == "fsdp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        return axes if axes else None
+    return cand
+
+
+def resolve_spec(spec: ParamSpec, mesh: Mesh,
+                 rules: Dict[str, Tuple[Any, ...]],
+                 path: str = "", report: Optional[ShardingReport] = None
+                 ) -> P:
+    used: set = set()
+    out = []
+    for d, logical in enumerate(spec.axes):
+        if logical is None:
+            out.append(None)
+            continue
+        cands = rules.get(logical, (None,))
+        chosen = None
+        reason = f"no candidate for {logical!r}"
+        for cand in cands:
+            cand = _expand_macro(cand, mesh)
+            if cand is None:
+                chosen, reason = None, "rule says replicate"
+                break
+            axes = (cand,) if isinstance(cand, str) else tuple(cand)
+            if any(a not in mesh.shape for a in axes):
+                reason = f"axis {axes} not in mesh"
+                continue
+            if any(a in used for a in axes):
+                reason = f"axis {axes} already used"
+                continue
+            size = _axis_size(mesh, axes)
+            if spec.shape[d] % size != 0:
+                reason = f"{spec.shape[d]} % {size} != 0"
+                continue
+            chosen = cand if isinstance(cand, str) else tuple(axes)
+            break
+        if chosen is None:
+            if report is not None and logical is not None and \
+                    rules.get(logical, (None,))[0] is not None:
+                report.add(path, d, logical, reason)
+            out.append(None)
+        else:
+            for a in ((chosen,) if isinstance(chosen, str) else chosen):
+                used.add(a)
+            out.append(chosen)
+    return P(*out)
+
+
+def make_shardings(specs, mesh: Mesh,
+                   extra_rules: Sequence[Tuple[str, Tuple[Any, ...]]] = (),
+                   ) -> Tuple[Any, ShardingReport]:
+    """specs pytree -> NamedSharding pytree (+ fallback report)."""
+    rules = dict(DEFAULT_RULES)
+    rules.update(dict(extra_rules))
+    report = ShardingReport()
+    paths_specs = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=is_spec)
+    flat, treedef = paths_specs
+    out = []
+    for path, spec in flat:
+        pstr = jax.tree_util.keystr(path)
+        pspec = resolve_spec(spec, mesh, rules, pstr, report)
+        out.append(NamedSharding(mesh, pspec))
+    return jax.tree_util.tree_unflatten(treedef, out), report
+
+
+def make_pspecs(specs, mesh: Mesh,
+                extra_rules: Sequence[Tuple[str, Tuple[Any, ...]]] = ()):
+    rules = dict(DEFAULT_RULES)
+    rules.update(dict(extra_rules))
+    return jax.tree.map(
+        lambda s: resolve_spec(s, mesh, rules), specs, is_leaf=is_spec)
+
+
+def shard_like(tree, shardings):
+    """Device-put a concrete pytree onto the given shardings."""
+    return jax.tree.map(jax.device_put, tree, shardings)

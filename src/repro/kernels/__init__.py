@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the XAMBA compute hot-spots.
+
+cumba            CumSum -> blocked triangular matmul (MXU) w/ prefix carry
+reduba           ReduceSum -> ones-matvec (MXU), tiled accumulation
+actiba           PWL activation (gather-free C-LUT analogue)
+matmul_pwl       matmul with drain-phase-fused PWL epilogue (vertical fusion)
+ssd_chunk        fused Mamba-2 SSD intra-chunk pass (CumBA+ReduBA inside)
+flash_attention  online-softmax attention (causal / window / GQA)
+rg_lru           chunked gated linear recurrence (recurrentgemma)
+
+``ops.py`` holds the public jit'd wrappers; ``ref.py`` the pure-jnp oracles.
+All kernels are TPU-targeted (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU with ``interpret=True``.
+"""

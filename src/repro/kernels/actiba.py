@@ -1,0 +1,74 @@
+"""ActiBA Pallas kernel: piecewise-linear activation evaluation.
+
+The NPU evaluates PWL activations with a slope/intercept C-LUT in the drain
+path.  The TPU kernel bakes the fitted table (``core/pwl.py``) into the
+kernel as compile-time scalars and evaluates the gather-free basis form
+
+    f(x) = m0*x + c0 + sum_k dm_k * relu(x - b_k)
+
+entirely in VMEM — K fused multiply-add/max passes on the VPU, no LUT
+gather, no extra HBM traffic.  (For producer-fused evaluation — the paper's
+"vertical fusion" — see ``kernels/matmul_pwl.py`` which applies the same
+epilogue during the matmul drain.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.pwl import PWLTable
+from repro.kernels import common
+
+Array = jax.Array
+
+
+def make_pwl_epilogue(table: PWLTable):
+    """Return a traced-constant PWL evaluator usable inside any kernel."""
+    dm, m0, c0 = table.basis()
+    bps = np.asarray(table.breakpoints, np.float32)
+    dm = dm.astype(np.float32)
+
+    def epilogue(x):
+        xf = x.astype(jnp.float32)
+        y = np.float32(m0) * xf + np.float32(c0)
+        for k in range(dm.shape[0]):
+            y = y + dm[k] * jnp.maximum(xf - bps[k], 0.0)
+        return y
+
+    return epilogue
+
+
+def _actiba_kernel(table: PWLTable):
+    epi = make_pwl_epilogue(table)
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = epi(x_ref[...]).astype(o_ref.dtype)
+
+    return kernel
+
+
+def pwl_activate(x: Array, table: PWLTable, *, block_rows: int = 512,
+                 block_cols: int = 512, interpret: bool = False) -> Array:
+    """Elementwise PWL activation over an arbitrary-shaped array."""
+    orig_shape = x.shape
+    n = orig_shape[-1] if x.ndim else 1
+    rows = x.size // n
+    x2 = x.reshape(rows, n)
+    br = min(block_rows, common.round_up(rows, 8))
+    bc = min(block_cols, common.round_up(n, 128))
+    rp, cp = common.round_up(rows, br), common.round_up(n, bc)
+    x2 = common.pad_axis(common.pad_axis(x2, 0, rp), 1, cp)
+
+    out = common.pallas_call(
+        _actiba_kernel(table),
+        grid=(rp // br, cp // bc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, cp), x.dtype),
+        dimension_semantics=("parallel", "parallel"),
+        interpret=interpret,
+        name=f"actiba_{table.name}",
+    )(x2)
+    return out[:rows, :n].reshape(orig_shape)

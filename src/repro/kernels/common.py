@@ -1,0 +1,53 @@
+"""Shared Pallas utilities for the XAMBA TPU kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def compiler_params(dimension_semantics):
+    """Best-effort TPU compiler params across pallas API versions."""
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            try:
+                return cls(dimension_semantics=tuple(dimension_semantics))
+            except TypeError:
+                pass
+    return None
+
+
+def pallas_call(kernel, *, grid, in_specs, out_specs, out_shape,
+                scratch_shapes=(), interpret=False, dimension_semantics=None,
+                name=None):
+    kwargs = {}
+    if dimension_semantics is not None and not interpret:
+        cp = compiler_params(dimension_semantics)
+        if cp is not None:
+            kwargs["compiler_params"] = cp
+    return pl.pallas_call(
+        kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, scratch_shapes=list(scratch_shapes),
+        interpret=interpret, name=name, **kwargs)
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pad_axis(x, axis: int, target: int, value=0):
+    """Pad ``axis`` of ``x`` up to ``target`` with ``value``."""
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - cur)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def acc_dtype(dtype) -> jnp.dtype:
+    return jnp.float32 if dtype in (jnp.bfloat16, jnp.float16) else jnp.dtype(dtype)

@@ -1,0 +1,160 @@
+"""Flash attention Pallas kernel (causal / sliding-window / GQA).
+
+Not a paper contribution, but the compute hot-spot of 8 of the 10 assigned
+architectures, so it gets the same treatment as the SSM kernels: online-
+softmax tiling so the (Lq, Lk) score matrix never exists in HBM, fp32
+running max/denominator in VMEM, MXU for both score and value matmuls.
+
+Forward-only kernel; the backward pass is supplied via ``jax.custom_vjp``
+with the rematerialized XLA reference (standard practice while a bwd kernel
+lands — training defaults to the XLA path anyway, see ``nn/attention.py``).
+
+Layouts:
+  q: (b, hq, Lq, d);  k, v: (b, hkv, Lk, d);  hq % hkv == 0 (GQA).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import common
+
+Array = jax.Array
+NEG_INF = common.NEG_INF
+
+
+def _flash_kernel(nkv: int, block_q: int, block_k: int, causal: bool,
+                  window: Optional[int], scale: float):
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        kv = pl.program_id(3)
+
+        @pl.when(kv == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        qi = pl.program_id(2)
+        q_off = qi * block_q
+        k_off = kv * block_k
+
+        # Structural skip: blocks fully above the causal diagonal (or fully
+        # outside the sliding window) contribute nothing.
+        fully_masked = jnp.bool_(False)
+        if causal:
+            fully_masked = jnp.logical_or(
+                fully_masked, (q_off + block_q - 1) < k_off)
+        if window is not None:
+            # q attends to [q - window + 1, q]
+            fully_masked = jnp.logical_or(
+                fully_masked, (k_off + block_k - 1) < (q_off - window + 1))
+
+        @pl.when(jnp.logical_not(fully_masked))
+        def _block():
+            q = q_ref[0, 0, :, :].astype(jnp.float32) * scale   # (bq, d)
+            k = k_ref[0, 0, :, :].astype(jnp.float32)           # (bk, d)
+            v = v_ref[0, 0, :, :].astype(jnp.float32)           # (bk, d)
+            s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+            q_ids = q_off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_ids = k_off + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            mask = jnp.ones_like(s, dtype=jnp.bool_)
+            if causal:
+                mask = jnp.logical_and(mask, k_ids <= q_ids)
+            if window is not None:
+                mask = jnp.logical_and(mask, k_ids > q_ids - window)
+            s = jnp.where(mask, s, NEG_INF)
+
+            m_prev = m_ref[...]                                 # (bq, 1)
+            m_cur = jnp.max(s, axis=1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+            acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+                p, v, preferred_element_type=jnp.float32)
+            m_ref[...] = m_new
+
+        @pl.when(kv == nkv - 1)
+        def _drain():
+            l = l_ref[...]
+            safe = jnp.where(l == 0.0, 1.0, l)
+            o_ref[0, 0, :, :] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+    return kernel
+
+
+def _flash_forward(q: Array, k: Array, v: Array, *, causal: bool,
+                   window: Optional[int], scale: Optional[float],
+                   block_q: int, block_k: int, interpret: bool) -> Array:
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    qpg = hq // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+
+    bq = min(block_q, common.round_up(lq, 128))
+    bk = min(block_k, common.round_up(lk, 128))
+    lqp, lkp = common.round_up(lq, bq), common.round_up(lk, bk)
+    q2 = common.pad_axis(q, 2, lqp)
+    k2 = common.pad_axis(k, 2, lkp)
+    v2 = common.pad_axis(v, 2, lkp)
+    nkv = lkp // bk
+
+    out = common.pallas_call(
+        _flash_kernel(nkv, bq, bk, causal, window, scale),
+        grid=(b, hq, lqp // bq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // qpg, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi // qpg, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, lqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        interpret=interpret,
+        name="flash_attention",
+    )(q2, k2, v2)
+    return out[:, :, :lq, :]
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention(q: Array, k: Array, v: Array, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> Array:
+    return _flash_forward(q, k, v, causal=causal, window=window, scale=scale,
+                          block_q=block_q, block_k=block_k,
+                          interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, scale, block_q, block_k, interpret):
+    out = _flash_forward(q, k, v, causal=causal, window=window, scale=scale,
+                         block_q=block_q, block_k=block_k, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, scale, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    from repro.kernels import ref as kref
+
+    def f(q, k, v):
+        return kref.attention_ref(q, k, v, causal=causal, window=window,
+                                  scale=scale)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,114 @@
+"""Drain-phase fused matmul + PWL activation (ActiBA "vertical fusion").
+
+The paper's ActiBA evaluates the activation *during the drain phase of the
+previous layer* so the pre-activation tensor is never stored and reloaded.
+The TPU equivalent is epilogue fusion: a blocked matmul whose fp32
+accumulator is transformed by the PWL function in VMEM right before the
+(bM, bN) output tile is written to HBM.  Optionally computes a gated unit
+``act(x @ w) * (x @ v)`` (SwiGLU/GeGLU-style) in one pass — the layout used
+by every assigned architecture's MLP and by Mamba's gate.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pwl import PWLTable
+from repro.kernels import common
+from repro.kernels.actiba import make_pwl_epilogue
+
+Array = jax.Array
+
+
+def _matmul_pwl_kernel(table: PWLTable, nk: int, gated: bool):
+    epi = make_pwl_epilogue(table)
+
+    if not gated:
+        def kernel(x_ref, w_ref, o_ref, acc_ref):
+            k = pl.program_id(2)
+
+            @pl.when(k == 0)
+            def _init():
+                acc_ref[...] = jnp.zeros_like(acc_ref)
+
+            acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                                    preferred_element_type=jnp.float32)
+
+            @pl.when(k == nk - 1)
+            def _drain():
+                # ActiBA: activation applied in the drain, no HBM round-trip.
+                o_ref[...] = epi(acc_ref[...]).astype(o_ref.dtype)
+
+        return kernel
+
+    def kernel(x_ref, w_ref, v_ref, o_ref, acc_ref, gacc_ref):
+        k = pl.program_id(2)
+
+        @pl.when(k == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            gacc_ref[...] = jnp.zeros_like(gacc_ref)
+
+        x = x_ref[...]
+        acc_ref[...] += jnp.dot(x, w_ref[...],
+                                preferred_element_type=jnp.float32)
+        gacc_ref[...] += jnp.dot(x, v_ref[...],
+                                 preferred_element_type=jnp.float32)
+
+        @pl.when(k == nk - 1)
+        def _drain():
+            o_ref[...] = (epi(acc_ref[...]) * gacc_ref[...]).astype(o_ref.dtype)
+
+    return kernel
+
+
+def matmul_pwl(x: Array, w: Array, table: PWLTable,
+               v: Optional[Array] = None, *,
+               block_m: int = 256, block_n: int = 256, block_k: int = 512,
+               interpret: bool = False) -> Array:
+    """``pwl(x @ w)`` or, with ``v``, ``pwl(x @ w) * (x @ v)``.
+
+    x: (m, k); w, v: (k, n) -> (m, n).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    gated = v is not None
+
+    bm = min(block_m, common.round_up(m, 8))
+    bn = min(block_n, common.round_up(n, 128))
+    bk = min(block_k, common.round_up(k, 128))
+    mp, np_, kp = (common.round_up(m, bm), common.round_up(n, bn),
+                   common.round_up(k, bk))
+    x2 = common.pad_axis(common.pad_axis(x, 0, mp), 1, kp)
+    w2 = common.pad_axis(common.pad_axis(w, 0, kp), 1, np_)
+    nk = kp // bk
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    operands = [x2, w2]
+    if gated:
+        v2 = common.pad_axis(common.pad_axis(v, 0, kp), 1, np_)
+        in_specs.append(pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)))
+        scratch.append(pltpu.VMEM((bm, bn), jnp.float32))
+        operands.append(v2)
+
+    out = common.pallas_call(
+        _matmul_pwl_kernel(table, nk, gated),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=scratch,
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        interpret=interpret,
+        name=f"matmul_pwl_{table.name}{'_gated' if gated else ''}",
+    )(*operands)
+    return out[:m, :n]

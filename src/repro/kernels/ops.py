@@ -1,0 +1,78 @@
+"""Public jit'd wrappers for the XAMBA Pallas kernels.
+
+Every op dispatches between the Pallas kernel (TPU target; ``interpret=True``
+runs the same kernel body on CPU for validation) and the XLA reference.  The
+models call these through ``XambaConfig`` modes; tests sweep shapes/dtypes
+against ``kernels/ref.py``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.core.pwl import PWLTable
+from repro.kernels import (actiba as _actiba, cumba as _cumba,
+                           flash_attention as _fa, matmul_pwl as _mpwl,
+                           reduba as _reduba, rg_lru as _rg, ref)
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def cumba_cumsum(x: Array, *, interpret: bool = False) -> Array:
+    """CumBA: cumulative sum along the trailing axis."""
+    return _cumba.cumsum_last(x, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def reduba_sum(x: Array, *, interpret: bool = False) -> Array:
+    """ReduBA: sum over the trailing axis (input moved so target is last)."""
+    # reduce over last axis == reduce_rows of the transpose
+    x2 = x.reshape(-1, x.shape[-1]).T          # (m=last, n=rest)
+    out = _reduba.reduce_rows(x2, interpret=interpret)
+    return out.reshape(x.shape[:-1])
+
+
+@partial(jax.jit, static_argnames=("table", "interpret"))
+def actiba_activate(x: Array, table: PWLTable, *,
+                    interpret: bool = False) -> Array:
+    """ActiBA: standalone PWL activation."""
+    return _actiba.pwl_activate(x, table, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("table", "interpret"))
+def matmul_pwl(x: Array, w: Array, table: PWLTable,
+               v: Optional[Array] = None, *,
+               interpret: bool = False) -> Array:
+    """ActiBA vertical fusion: pwl(x @ w) [* (x @ v)]."""
+    return _mpwl.matmul_pwl(x, w, table, v, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x_c: Array, a_c: Array, A_cum: Array, B_c: Array, C_c: Array,
+              *, interpret: bool = False):
+    """Fused SSD intra-chunk pass -> (y_diag, chunk_states)."""
+    del a_c  # only the prefix sums are needed; kept for API symmetry
+    from repro.kernels import ssd_chunk as _ssd
+    return _ssd.ssd_chunk(x_c, None, A_cum, B_c, C_c, interpret=interpret)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    interpret: bool = False) -> Array:
+    """Flash attention (custom_vjp handles the backward pass)."""
+    return _fa.flash_attention(q, k, v, causal, window, scale, 128, 128,
+                               interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def rg_lru_scan(a: Array, b: Array, *, interpret: bool = False) -> Array:
+    """Gated linear recurrence h_t = a_t h_{t-1} + b_t."""
+    return _rg.rg_lru_scan(a, b, interpret=interpret)
+
+
+# Re-export oracles for convenience in tests/benchmarks.
+reference = ref

@@ -1,0 +1,56 @@
+"""ReduBA Pallas kernel: ReduceSum as a ones-vector matmul on the MXU.
+
+``R = M_ReduBA @ X`` with ``M_ReduBA = ones(1, m)``: the reduction over the
+row axis of an (m, n) operand becomes a (1, m) x (m, n) matmul.  The kernel
+tiles over both axes; the ones "mask" is a single compile-time (1, bm) VMEM
+constant reused by every tile (the paper's observation that ReduBA's mask is
+reused across all operations, minimizing memory traffic — here it never even
+leaves VMEM).  Partial sums accumulate directly into the output block, which
+stays resident in VMEM across the sequential reduction dimension.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+Array = jax.Array
+
+
+def _reduba_kernel(x_ref, o_ref):
+    i = pl.program_id(1)  # reduction-block index (innermost, sequential)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)                    # (bm, bn)
+    ones = jnp.ones((1, x.shape[0]), jnp.float32)         # M_ReduBA tile
+    part = jnp.dot(ones, x, preferred_element_type=jnp.float32)  # MXU (1, bn)
+    o_ref[...] = o_ref[...] + part.astype(o_ref.dtype)
+
+
+def reduce_rows(x: Array, *, block_m: int = 512, block_n: int = 512,
+                interpret: bool = False) -> Array:
+    """Sum over axis 0 of a 2-D array: (m, n) -> (n,)."""
+    assert x.ndim == 2, x.shape
+    m, n = x.shape
+    bm = min(block_m, common.round_up(m, 8))
+    bn = min(block_n, common.round_up(n, 128))
+    mp = common.round_up(m, bm)
+    np_ = common.round_up(n, bn)
+    x2 = common.pad_axis(common.pad_axis(x, 0, mp), 1, np_)
+
+    out = common.pallas_call(
+        _reduba_kernel,
+        grid=(np_ // bn, mp // bm),
+        in_specs=[pl.BlockSpec((bm, bn), lambda j, i: (i, j))],
+        out_specs=pl.BlockSpec((1, bn), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), common.acc_dtype(x.dtype)),
+        dimension_semantics=("parallel", "arbitrary"),
+        interpret=interpret,
+        name="reduba_reduce",
+    )(x2)
+    return out[0, :n].astype(x.dtype)

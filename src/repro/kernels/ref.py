@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pwl import PWLTable, eval_pwl
+
+Array = jax.Array
+
+
+def cumsum_last_ref(x: Array) -> Array:
+    return jnp.cumsum(x.astype(jnp.float32), axis=-1).astype(x.dtype)
+
+
+def reduce_rows_ref(x: Array) -> Array:
+    return jnp.sum(x.astype(jnp.float32), axis=0).astype(x.dtype)
+
+
+def pwl_activate_ref(x: Array, table: PWLTable) -> Array:
+    return eval_pwl(table, x)
+
+
+def matmul_pwl_ref(x: Array, w: Array, table: PWLTable,
+                   v: Optional[Array] = None) -> Array:
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    out = eval_pwl(table, acc)
+    if v is not None:
+        out = out * jnp.dot(x, v, preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def ssd_chunk_ref(x_c: Array, a_c: Array, A_cum: Array, B_c: Array,
+                  C_c: Array):
+    """Intra-chunk SSD oracle.  Shapes as in kernels/ssd_chunk.py."""
+    b, c, L, h, p = x_c.shape
+    g = B_c.shape[3]
+    hpg = h // g
+    xf = x_c.astype(jnp.float32)
+    cs = A_cum.astype(jnp.float32)                         # (b, h, c, L)
+    Bh = jnp.repeat(B_c.astype(jnp.float32), hpg, axis=3)  # (b, c, L, h, n)
+    Ch = jnp.repeat(C_c.astype(jnp.float32), hpg, axis=3)
+
+    seg = cs[..., :, None] - cs[..., None, :]              # (b, h, c, L, L)
+    tril = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(tril, jnp.exp(jnp.where(tril, seg, 0.0)), 0.0)
+
+    scores = jnp.einsum("bclhn,bcshn->bhcls", Ch, Bh)
+    y = jnp.einsum("bhcls,bcshp->bclhp", scores * decay, xf)
+
+    dstate = jnp.exp(cs[..., -1:] - cs)                    # (b, h, c, L)
+    dstate = jnp.transpose(dstate, (0, 2, 3, 1))           # (b, c, L, h)
+    states = jnp.einsum("bclhp,bclh,bclhn->bchpn", xf, dstate, Bh)
+    return y, states
+
+
+def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None) -> Array:
+    """Standard softmax attention with GQA/causal/sliding-window semantics.
+
+    q: (b, hq, Lq, d); k, v: (b, hkv, Lk, d).
+    """
+    b, hq, lq, d = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    qpg = hq // hkv
+    scale = float(scale if scale is not None else d ** -0.5)
+    kq = jnp.repeat(k, qpg, axis=1)
+    vq = jnp.repeat(v, qpg, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   kq.astype(jnp.float32))
+    q_ids = jnp.arange(lq)[:, None]
+    k_ids = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= k_ids <= q_ids
+    if window is not None:
+        mask &= k_ids > q_ids - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vq.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rg_lru_scan_ref(a: Array, b: Array) -> Array:
+    """h_t = a_t h_{t-1} + b_t via lax.scan (exact sequential semantics)."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def step(h, t_in):
+        at, bt = t_in
+        h = at * h + bt
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(af, 1, 0),
+                                    jnp.moveaxis(bf, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype)

@@ -1,0 +1,92 @@
+"""Fused SSD intra-chunk Pallas kernel (CumBA inside the hot loop).
+
+One grid step processes one (batch, chunk, head) cell entirely in VMEM:
+
+    cs      = A_cum row (precomputed prefix decay, fp32)
+    L       = exp(segsum)   -- via the CumBA broadcast-difference of ``cs``
+    scores  = (C @ B^T) * L          (MXU, (L, L))
+    y_diag  = scores @ x             (MXU, (L, p))
+    state   = (x * decay).T @ B      (MXU, (p, n))  -- the chunk's outgoing state
+
+i.e. the paper's CumSum_b bottleneck *and* the three einsum contractions
+(ReduBA) fuse into a single kernel with zero intermediate HBM traffic — the
+(L, L) decay matrix never leaves VMEM.  The inter-chunk recurrence stays
+outside (associative scan over ~L/chunk terms, negligible).
+
+Shapes (fp32 in, native SSD convention, heads-per-group broadcast handled by
+the BlockSpec index map, so grouped B/C are read once per group):
+  x_c:   (b, c, L, h, p)   dt-scaled values
+  a_c:   (b, h, c, L)      per-step log decay
+  A_cum: (b, h, c, L)      inclusive cumsum of a_c
+  B_c:   (b, c, L, g, n)
+  C_c:   (b, c, L, g, n)
+Outputs:
+  y_diag: (b, c, L, h, p)
+  states: (b, c, h, p, n)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+Array = jax.Array
+
+
+def _ssd_chunk_kernel(x_ref, acum_ref, b_ref, c_ref, y_ref, st_ref):
+    cs = acum_ref[0, 0, ...].astype(jnp.float32)            # (1, L) row
+    cs = cs.reshape(-1)                                     # (L,)
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)            # (L, p)
+    B = b_ref[0, 0, :, 0, :].astype(jnp.float32)            # (L, n)
+    C = c_ref[0, 0, :, 0, :].astype(jnp.float32)            # (L, n)
+    L = x.shape[0]
+
+    # CumBA segsum: S_ij = cs_i - cs_j, masked above the diagonal.
+    seg = cs[:, None] - cs[None, :]
+    tril = jnp.tril(jnp.ones((L, L), jnp.bool_))
+    decay = jnp.where(tril, jnp.exp(jnp.where(tril, seg, 0.0)), 0.0)
+
+    scores = jnp.dot(C, B.T, preferred_element_type=jnp.float32)   # MXU
+    y = jnp.dot(scores * decay, x, preferred_element_type=jnp.float32)
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # Outgoing chunk state: sum_l B_l (exp(cs_last - cs_l)) x_l
+    dstate = jnp.exp(cs[-1] - cs)                            # (L,)
+    st = jnp.dot((x * dstate[:, None]).T, B,
+                 preferred_element_type=jnp.float32)         # (p, n)
+    st_ref[0, 0, 0, :, :] = st.astype(st_ref.dtype)
+
+
+def ssd_chunk(x_c: Array, a_c: Array, A_cum: Array, B_c: Array, C_c: Array,
+              *, interpret: bool = False):
+    """Run the fused intra-chunk pass. See module docstring for shapes."""
+    b, c, L, h, p = x_c.shape
+    g, n = B_c.shape[3], B_c.shape[4]
+    hpg = h // g
+
+    grid = (b, c, h)
+    y, st = common.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, L, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, L), lambda bi, ci, hi: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, L, 1, n), lambda bi, ci, hi: (bi, ci, 0, hi // hpg, 0)),
+            pl.BlockSpec((1, 1, L, 1, n), lambda bi, ci, hi: (bi, ci, 0, hi // hpg, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, 1, p), lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, c, L, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, c, h, p, n), jnp.float32),
+        ],
+        dimension_semantics=("parallel", "parallel", "parallel"),
+        interpret=interpret,
+        name="ssd_chunk",
+    )(x_c.astype(jnp.float32), A_cum.astype(jnp.float32),
+      B_c.astype(jnp.float32), C_c.astype(jnp.float32))
+    return y, st

@@ -1,0 +1,149 @@
+"""Compiled-HLO analysis: collective byte accounting + roofline terms.
+
+``compiled.cost_analysis()`` has no collective traffic, so we parse the
+partitioned module text: build an instruction -> shape table from every
+definition line, then sum *operand* bytes for each collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute),
+including the ``-start`` async forms.  Shapes in the partitioned module are
+per-device shards, so totals here are per-device — consistent with
+cost_analysis' per-device FLOPs/bytes (verified in the de-risk pass; see
+DESIGN.md §7).
+
+Two collective figures are reported:
+  * ``operand_bytes``  — the prompt's definition (sum of operand sizes);
+  * ``wire_bytes``     — ring-algorithm modeled bytes actually serialized per
+    device: AR 2(n-1)/n, AG (n-1)x operand, RS (n-1)/n, A2A (n-1)/n, CP 1x.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (simple one-link model)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\])")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    size = _DTYPE_BYTES.get(dtype, 4)
+    if dims.strip():
+        for d in dims.split(","):
+            size *= int(d)
+    return size
+
+
+def _tuple_bytes(inner: str) -> int:
+    """'(f32[8,4]{...}, u32[]...)' contents -> total bytes."""
+    total = 0
+    for m in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", inner):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    operand_bytes: Dict[str, int]
+    wire_bytes: Dict[str, int]
+    details: List[dict]
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return sum(self.wire_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    shapes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name = m.group(1)
+            if m.group(2) is not None:        # tuple shape
+                shapes[name] = _tuple_bytes(m.group(2))
+            else:
+                shapes[name] = _shape_bytes(m.group(3), m.group(4))
+
+    counts: Dict[str, int] = {}
+    op_bytes: Dict[str, int] = {}
+    wire: Dict[str, int] = {}
+    details: List[dict] = []
+    for line in hlo_text.splitlines():
+        cm = _COLL_RE.search(line)
+        if not cm:
+            continue
+        op = cm.group(1)
+        # operands: everything inside the first (...) after the opcode
+        start = line.index(cm.group(0)) + len(cm.group(0))
+        depth, end = 1, start
+        while end < len(line) and depth:
+            if line[end] == "(":
+                depth += 1
+            elif line[end] == ")":
+                depth -= 1
+            end += 1
+        operand_names = _OPERAND_RE.findall(line[start:end - 1])
+        b = sum(shapes.get(o, 0) for o in operand_names)
+
+        n = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            n = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                n = len(gl.group(1).split(","))
+        factor = {
+            "all-reduce": 2 * (n - 1) / max(n, 1),
+            "all-gather": (n - 1),
+            "reduce-scatter": (n - 1) / max(n, 1),
+            "all-to-all": (n - 1) / max(n, 1),
+            "collective-permute": 1.0,
+        }[op]
+        counts[op] = counts.get(op, 0) + 1
+        op_bytes[op] = op_bytes.get(op, 0) + b
+        wire[op] = wire.get(op, 0) + int(b * factor)
+        details.append({"op": op, "operand_bytes": b, "group_size": n})
+    return CollectiveStats(counts, op_bytes, wire, details)
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   collective_operand_bytes: float,
+                   collective_wire_bytes: float) -> dict:
+    """Three roofline terms in seconds (per the assignment's formulas; all
+    inputs are per-device, which equals global/chips)."""
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = collective_operand_bytes / ICI_BW
+    collective_wire_s = collective_wire_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s,
+             "collective_wire_s": collective_wire_s}
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["bottleneck"] = dom
+    denom = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["roofline_fraction"] = compute_s / denom if denom else 0.0
+    return terms

@@ -1,0 +1,2 @@
+from repro.models.base import ModelConfig, cross_entropy_loss  # noqa: F401
+from repro.models.registry import build_model  # noqa: F401

@@ -1,0 +1,119 @@
+"""Model configuration (all families) and shared loss/metrics utilities."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.xamba import XambaConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config type for every assigned architecture family."""
+
+    name: str = "model"
+    family: str = "transformer"   # transformer | mamba | mamba2 |
+    #                               recurrentgemma | whisper
+    vocab_size: int = 32000
+    d_model: int = 512
+    n_layers: int = 4
+
+    # -- attention ----------------------------------------------------------
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    head_dim: int = 64
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    sliding_window: Optional[int] = None
+    attn_logit_softcap: Optional[float] = None
+    attn_probs_bf16: bool = False  # cast softmax probs to bf16 before PV
+
+    # -- mlp ------------------------------------------------------------------
+    d_ff: int = 2048
+    mlp_type: str = "swiglu"      # swiglu | geglu | mlp
+
+    # -- norms / embeddings ---------------------------------------------------
+    norm_type: str = "rmsnorm"    # rmsnorm | gemma_rmsnorm | layernorm
+    embed_scale: bool = False     # gemma: x *= sqrt(d_model)
+    tie_embeddings: bool = True
+
+    # -- MoE ------------------------------------------------------------------
+    moe: bool = False
+    n_experts: int = 0
+    n_experts_per_token: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    moe_renormalize: bool = True
+    moe_aux_weight: float = 0.01
+    # Pin the dispatch buffers' capacity dim to the batch axes.  Helps when
+    # the expert count cannot shard over "model" (grok-1: 8 experts vs 16) —
+    # without it XLA gathers the buffers to every device; HURTS when experts
+    # are model-sharded (qwen3: 128) by fighting the natural EP layout.
+    moe_cap_batch_sharding: bool = False
+
+    # -- SSM (mamba / mamba2) -------------------------------------------------
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_ngroups: int = 1
+    chunk_size: int = 256
+    dt_rank: int = 0              # 0 -> ceil(d_model/16) (mamba1)
+    scan_mode: str = "associative"
+    ssd_dtype: str = "float32"    # SSD big-matmul dtype (bf16 = perf mode)
+
+    # -- recurrentgemma ---------------------------------------------------------
+    lru_width: int = 0
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("recurrent","recurrent","attention")
+
+    # -- multimodal stubs -------------------------------------------------------
+    frontend: Optional[str] = None        # vision_stub | audio_stub
+    num_patches: int = 0                  # llava: image token count
+    encoder_layers: int = 0               # whisper
+    encoder_seq: int = 1500               # whisper frame count
+
+    # -- execution policies -----------------------------------------------------
+    param_dtype: str = "bfloat16"
+    remat: str = "none"                   # none | full | dots
+    scan_layers: bool = True
+    use_flash: bool = False               # Pallas flash attention
+    flash_interpret: bool = False
+    force_prefill_path: bool = False
+    logical_rules: Tuple[Tuple[str, Tuple[str, ...]], ...] = ()
+
+    xamba: XambaConfig = XambaConfig()
+
+    # convenience -----------------------------------------------------------
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def cross_entropy_loss(logits: Array, labels: Array,
+                       mask: Optional[Array] = None,
+                       z_loss: float = 1e-4) -> Tuple[Array, dict]:
+    """Token-level CE with optional z-loss; labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0
+    if mask is not None:
+        valid = jnp.logical_and(valid, mask > 0)
+    labels_safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(jnp.where(valid, nll, 0.0)) / denom
+    acc = jnp.sum(jnp.where(
+        valid, (jnp.argmax(logits, -1) == labels_safe).astype(jnp.float32),
+        0.0)) / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}

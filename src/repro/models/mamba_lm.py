@@ -1,0 +1,155 @@
+"""Mamba-1 and Mamba-2 language models — the paper's profiled subjects.
+
+Block = RMSNorm -> mixer (selective scan / SSD) -> residual, as in the
+reference implementations; Mamba-2's extra post-skip norm is the mixer's
+internal gated RMSNorm.  Serving follows the paper's Step-1: prefill runs
+the chunked parallel form and emits the recurrent state; decode is the O(1)
+recurrence with conv + SSM state caches (static shapes throughout).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import api as dist_api
+from repro.models import base
+from repro.nn import layers, ssm
+from repro.nn.params import stack_specs
+
+Array = jax.Array
+
+
+class MambaLM:
+    """family == "mamba" (v1, selective scan) or "mamba2" (SSD)."""
+
+    def __init__(self, cfg: base.ModelConfig):
+        assert cfg.family in ("mamba", "mamba2"), cfg.family
+        self.cfg = cfg
+        self.v2 = cfg.family == "mamba2"
+
+    # ---------------- specs ----------------
+    def _mixer_specs(self):
+        return (ssm.mamba2_specs(self.cfg) if self.v2
+                else ssm.mamba1_specs(self.cfg))
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        block = {
+            "ln": layers.norm_specs(cfg.d_model),
+            "mixer": self._mixer_specs(),
+        }
+        specs: Dict[str, Any] = {
+            "embed": layers.embed_specs(cfg.vocab_size, cfg.d_model),
+            "final_norm": layers.norm_specs(cfg.d_model),
+        }
+        if cfg.scan_layers:
+            specs["layers"] = stack_specs(block, cfg.n_layers)
+        else:
+            specs["layers"] = {str(i): block for i in range(cfg.n_layers)}
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = layers.linear_specs(
+                cfg.d_model, cfg.vocab_size, axes=("embed", "vocab"))
+        return specs
+
+    # ---------------- trunk ----------------
+    def _mixer_apply(self, p, x, state):
+        if self.v2:
+            return ssm.mamba2_apply(p, self.cfg, x, state)
+        return ssm.mamba1_apply(p, self.cfg, x, state)
+
+    def _block(self, p, x, state):
+        h, new_state = self._mixer_apply(p["mixer"], layers.norm(p["ln"], x),
+                                         state)
+        return x + h, new_state
+
+    def _trunk(self, params, x, states=None):
+        cfg = self.cfg
+        block = self._block
+        if cfg.remat in ("full", "dots"):
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat == "dots" else None)
+            block = jax.checkpoint(block, policy=policy)
+
+        if cfg.scan_layers:
+            def body(x, xs):
+                p, state = xs
+                y, new_state = block(p, x, state)
+                y = dist_api.shard_tokens3d(y)
+                return y, new_state
+            x, new_states = jax.lax.scan(body, x, (params["layers"], states))
+        else:
+            new_states = []
+            for i in range(cfg.n_layers):
+                state = None if states is None else states[i]
+                x, ns = block(params["layers"][str(i)], x, state)
+                new_states.append(ns)
+        return x, new_states
+
+    def _trunk_train(self, params, x):
+        cfg = self.cfg
+
+        def block(p, x):
+            y, _ = self._block(p, x, None)
+            return y
+
+        if cfg.remat in ("full", "dots"):
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat == "dots" else None)
+            block = jax.checkpoint(block, policy=policy)
+
+        if cfg.scan_layers:
+            def body(x, p):
+                return dist_api.shard_tokens3d(block(p, x)), None
+            x, _ = jax.lax.scan(body, x, params["layers"])
+        else:
+            for i in range(cfg.n_layers):
+                x = block(params["layers"][str(i)], x)
+        return x
+
+    def _logits(self, params, x) -> Array:
+        x = layers.norm(params["final_norm"], x)
+        if self.cfg.tie_embeddings:
+            return layers.unembed(params["embed"], x)
+        return layers.linear(params["lm_head"], x).astype(jnp.float32)
+
+    # ---------------- training ----------------
+    def loss(self, params, batch) -> Tuple[Array, dict]:
+        x = dist_api.shard_tokens3d(layers.embed(params["embed"], batch["tokens"]))
+        x = self._trunk_train(params, x)
+        logits = self._logits(params, x)
+        loss, metrics = base.cross_entropy_loss(
+            logits[:, :-1], batch["labels"][:, 1:])
+        metrics["loss_total"] = loss
+        return loss, metrics
+
+    def forward(self, params, tokens) -> Array:
+        """Full-sequence logits (used by quality/equivalence benchmarks)."""
+        x = layers.embed(params["embed"], tokens)
+        x = self._trunk_train(params, x)
+        return self._logits(params, x)
+
+    # ---------------- serving ----------------
+    def init_cache(self, batch: int, max_seq: int = 0, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        del max_seq  # SSM state is O(1) in sequence length
+        one = (ssm.mamba2_init_state(cfg, batch, dtype) if self.v2
+               else ssm.mamba1_init_state(cfg, batch, dtype))
+        if cfg.scan_layers:
+            return jax.tree.map(
+                lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
+        return [one for _ in range(cfg.n_layers)]
+
+    def prefill(self, params, batch, cache) -> Tuple[Array, Any]:
+        x = layers.embed(params["embed"], batch["tokens"])
+        x, new_states = self._trunk(params, x, cache)
+        logits = self._logits(params, x[:, -1:])
+        return logits[:, 0], new_states
+
+    def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
+        del index  # recurrence carries position implicitly
+        x = layers.embed(params["embed"], token)
+        x, new_states = self._trunk(params, x, cache)
+        logits = self._logits(params, x)
+        return logits[:, 0], new_states

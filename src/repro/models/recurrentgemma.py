@@ -1,0 +1,189 @@
+"""RecurrentGemma (Griffin): RG-LRU recurrent blocks + local attention, 1:2.
+
+Block pattern repeats (recurrent, recurrent, attention); every temporal
+block is followed by a GeGLU MLP block.  Heterogeneous layers use a python
+loop (26 layers — bounded HLO); caches are per-layer NamedTuples
+(RGLRUState for recurrent layers, ring-buffer KVCache of size == window for
+the local-attention layers).
+
+XAMBA applicability: the RG-LRU gate chain is sigmoid/softplus-heavy
+(ActiBA), and the recurrence's cumulative log-decay products are the same
+cumsum structure CumBA remaps (``kernels/rg_lru.py`` for the fused scan).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import api as dist_api
+from repro.models import base
+from repro.nn import attention, layers, mlp as mlp_mod, ssm
+from repro.nn.params import stack_specs
+
+Array = jax.Array
+
+
+class RecurrentGemma:
+    """Layer stack = N full (r, r, a) pattern groups + a tail remainder.
+
+    Training scans over the stacked pattern GROUPS (homogeneous pytree ->
+    one scan body holding one group's heterogeneous layers), which keeps the
+    512-device HLO bounded; serving uses the per-layer loop (heterogeneous
+    caches, tiny modules).  Parameters live in group-stacked form; the
+    serving path slices layer i out of group i//P, position i%P.
+    """
+
+    def __init__(self, cfg: base.ModelConfig):
+        self.cfg = cfg
+        pattern = cfg.block_pattern or ("recurrent", "recurrent", "attention")
+        self.pattern = tuple(pattern)
+        self.layer_kinds = [pattern[i % len(pattern)]
+                            for i in range(cfg.n_layers)]
+        self.n_groups = cfg.n_layers // len(pattern)
+        self.n_tail = cfg.n_layers - self.n_groups * len(pattern)
+
+    def _block_specs(self, kind: str) -> dict:
+        cfg = self.cfg
+        block = {
+            "ln_mix": layers.norm_specs(cfg.d_model, norm_type=cfg.norm_type),
+            "ln_mlp": layers.norm_specs(cfg.d_model, norm_type=cfg.norm_type),
+            "mlp": mlp_mod.mlp_specs(cfg),
+        }
+        if kind == "recurrent":
+            block["rglru"] = ssm.rglru_specs(cfg)
+        else:
+            block["attn"] = attention.attention_specs(cfg)
+        return block
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {
+            "embed": layers.embed_specs(cfg.vocab_size, cfg.d_model),
+            "final_norm": layers.norm_specs(cfg.d_model,
+                                            norm_type=cfg.norm_type),
+        }
+        group = {str(j): self._block_specs(kind)
+                 for j, kind in enumerate(self.pattern)}
+        if self.n_groups:
+            specs["groups"] = stack_specs(group, self.n_groups)
+        specs["tail"] = {
+            str(i): self._block_specs(self.layer_kinds[
+                self.n_groups * len(self.pattern) + i])
+            for i in range(self.n_tail)
+        }
+        return specs
+
+    def _layer_params(self, params, i: int):
+        """Slice layer i's params out of the grouped layout (serving path)."""
+        p_len = len(self.pattern)
+        if i < self.n_groups * p_len:
+            g, j = divmod(i, p_len)
+            return jax.tree.map(lambda a: a[g], params["groups"][str(j)])
+        return params["tail"][str(i - self.n_groups * p_len)]
+
+    def _block(self, p, kind, x, positions, cache, cache_index):
+        cfg = self.cfg
+        hin = layers.norm(p["ln_mix"], x, norm_type=cfg.norm_type)
+        if kind == "recurrent":
+            h, new_cache = ssm.rglru_apply(p["rglru"], cfg, hin, cache)
+        else:
+            h, new_cache = attention.apply(
+                p["attn"], cfg, hin, positions=positions, cache=cache,
+                cache_index=cache_index, causal=True,
+                window=cfg.sliding_window)
+        x = x + h
+        h = mlp_mod.apply(p["mlp"], cfg,
+                          layers.norm(p["ln_mlp"], x, norm_type=cfg.norm_type))
+        return x + h, new_cache
+
+    def _trunk(self, params, x, positions, caches=None, cache_index=None):
+        cfg = self.cfg
+        block = self._block
+        if cfg.remat in ("full", "dots"):
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat == "dots" else None)
+            block = jax.checkpoint(block, policy=policy,
+                                   static_argnums=(1,))
+
+        if caches is None and cfg.scan_layers and self.n_groups > 1:
+            # Training path: scan over the stacked pattern groups.
+            def group_body(x, gp):
+                for j, kind in enumerate(self.pattern):
+                    x, _ = block(gp[str(j)], kind, x, positions, None, None)
+                x = dist_api.shard_tokens3d(x)
+                return x, None
+
+            x, _ = jax.lax.scan(group_body, x, params["groups"])
+            for i in range(self.n_tail):
+                x, _ = block(params["tail"][str(i)],
+                             self.layer_kinds[-self.n_tail + i], x,
+                             positions, None, None)
+                x = dist_api.shard_tokens3d(x)
+            return x, None
+
+        new_caches: List[Any] = []
+        for i, kind in enumerate(self.layer_kinds):
+            cache = None if caches is None else caches[i]
+            x, nc = block(self._layer_params(params, i), kind, x, positions,
+                          cache, cache_index)
+            x = dist_api.shard_tokens3d(x)
+            new_caches.append(nc)
+        return x, new_caches
+
+    def _logits(self, params, x) -> Array:
+        cfg = self.cfg
+        x = layers.norm(params["final_norm"], x, norm_type=cfg.norm_type)
+        logits = layers.unembed(params["embed"], x)
+        if cfg.attn_logit_softcap:
+            logits = jnp.tanh(logits / cfg.attn_logit_softcap) * \
+                cfg.attn_logit_softcap
+        return logits
+
+    def _embed(self, params, tokens):
+        x = layers.embed(params["embed"], tokens)
+        if self.cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(self.cfg.d_model), x.dtype)
+        return x
+
+    # ---------------- training ----------------
+    def loss(self, params, batch) -> Tuple[Array, dict]:
+        x = self._embed(params, batch["tokens"])
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        x, _ = self._trunk(params, x, positions)
+        logits = self._logits(params, x)
+        loss, metrics = base.cross_entropy_loss(
+            logits[:, :-1], batch["labels"][:, 1:])
+        metrics["loss_total"] = loss
+        return loss, metrics
+
+    # ---------------- serving ----------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        caches = []
+        for kind in self.layer_kinds:
+            if kind == "recurrent":
+                caches.append(ssm.rglru_init_state(cfg, batch, dtype))
+            else:
+                window = cfg.sliding_window or max_seq
+                caches.append(attention.init_cache(
+                    cfg, batch, min(max_seq, window), dtype))
+        return caches
+
+    def prefill(self, params, batch, cache) -> Tuple[Array, Any]:
+        x = self._embed(params, batch["tokens"])
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        x, new_caches = self._trunk(params, x, positions,
+                                    cache, cache_index=jnp.int32(0))
+        logits = self._logits(params, x[:, -1:])
+        return logits[:, 0], new_caches
+
+    def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
+        x = self._embed(params, token)
+        positions = jnp.full((token.shape[0], 1), index, jnp.int32)
+        x, new_caches = self._trunk(params, x, positions, cache,
+                                    cache_index=index)
+        logits = self._logits(params, x)
+        return logits[:, 0], new_caches

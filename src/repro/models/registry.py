@@ -1,0 +1,25 @@
+"""Model factory: family -> model class."""
+from __future__ import annotations
+
+from repro.models.base import ModelConfig
+from repro.models.mamba_lm import MambaLM
+from repro.models.recurrentgemma import RecurrentGemma
+from repro.models.transformer import TransformerLM
+from repro.models.whisper import Whisper
+
+_FAMILIES = {
+    "transformer": TransformerLM,
+    "mamba": MambaLM,
+    "mamba2": MambaLM,
+    "recurrentgemma": RecurrentGemma,
+    "whisper": Whisper,
+}
+
+
+def build_model(cfg: ModelConfig):
+    try:
+        cls = _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}; "
+                         f"have {sorted(_FAMILIES)}") from None
+    return cls(cfg)

@@ -1,0 +1,202 @@
+"""Decoder-only transformer LM: dense GQA/MQA, MoE, and VLM-stub variants.
+
+Covers internlm2-20b, deepseek-7b, qwen1.5-4b, gemma-2b, llava-next
+(mistral backbone + patch-embedding stub), qwen3-moe-30b-a3b and grok-1-314b
+through config alone.  Homogeneous layers scan (bounded HLO at 512 devices);
+remat policy wraps the scanned block.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import api as dist_api
+from repro.models import base
+from repro.nn import attention, layers, mlp as mlp_mod, moe as moe_mod
+from repro.nn.params import ParamSpec, stack_specs
+
+Array = jax.Array
+
+
+def _block_specs(cfg) -> dict:
+    specs = {
+        "ln_attn": layers.norm_specs(cfg.d_model, norm_type=cfg.norm_type),
+        "attn": attention.attention_specs(cfg),
+        "ln_mlp": layers.norm_specs(cfg.d_model, norm_type=cfg.norm_type),
+    }
+    if cfg.moe:
+        specs["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        specs["mlp"] = mlp_mod.mlp_specs(cfg)
+    return specs
+
+
+def _block_apply(params, cfg, x, positions, cache, cache_index):
+    h, new_cache = attention.apply(
+        params["attn"], cfg, layers.norm(params["ln_attn"], x,
+                                         norm_type=cfg.norm_type),
+        positions=positions, cache=cache, cache_index=cache_index,
+        causal=True, window=cfg.sliding_window)
+    x = x + h
+    hin = layers.norm(params["ln_mlp"], x, norm_type=cfg.norm_type)
+    if cfg.moe:
+        h, aux = moe_mod.apply(params["moe"], cfg, hin)
+    else:
+        h, aux = mlp_mod.apply(params["mlp"], cfg, hin), jnp.float32(0.0)
+    return x + h, new_cache, aux
+
+
+class TransformerLM:
+    def __init__(self, cfg: base.ModelConfig):
+        self.cfg = cfg
+
+    # ---------------- specs ----------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {
+            "embed": layers.embed_specs(cfg.vocab_size, cfg.d_model),
+            "final_norm": layers.norm_specs(cfg.d_model,
+                                            norm_type=cfg.norm_type),
+        }
+        block = _block_specs(cfg)
+        if cfg.scan_layers:
+            specs["layers"] = stack_specs(block, cfg.n_layers)
+        else:
+            specs["layers"] = {str(i): block for i in range(cfg.n_layers)}
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = layers.linear_specs(
+                cfg.d_model, cfg.vocab_size, axes=("embed", "vocab"))
+        return specs
+
+    # ---------------- embedding / logits ----------------
+    def _embed_inputs(self, params, batch) -> Tuple[Array, Array, Array]:
+        """Returns (x, positions, loss_mask-prefix-length)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = layers.embed(params["embed"], tokens)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        prefix = 0
+        if cfg.frontend == "vision_stub" and "image_embeds" in batch:
+            img = batch["image_embeds"].astype(x.dtype)   # (b, P, d)
+            x = jnp.concatenate([img, x], axis=1)
+            prefix = img.shape[1]
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        x = dist_api.shard_tokens3d(x)
+        return x, positions, prefix
+
+    def _trunk(self, params, x, positions, caches=None, cache_index=None):
+        cfg = self.cfg
+        aux_total = jnp.float32(0.0)
+
+        def block(p, x, cache):
+            return _block_apply(p, cfg, x, positions, cache, cache_index)
+
+        if cfg.remat in ("full", "dots"):
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat == "dots" else None)
+            block = jax.checkpoint(block, policy=policy)
+
+        if cfg.scan_layers:
+            def body(carry, xs):
+                x, aux = carry
+                p, cache = xs
+                y, new_cache, a = block(p, x, cache)
+                y = dist_api.shard_tokens3d(y)
+                return (y, aux + a), new_cache
+            (x, aux_total), new_caches = jax.lax.scan(
+                body, (x, aux_total), (params["layers"], caches))
+        else:
+            new_caches = []
+            for i in range(cfg.n_layers):
+                cache = None if caches is None else caches[i]
+                x, nc, a = block(params["layers"][str(i)], x, cache)
+                aux_total += a
+                new_caches.append(nc)
+        return x, new_caches, aux_total
+
+    def _logits(self, params, x) -> Array:
+        cfg = self.cfg
+        x = layers.norm(params["final_norm"], x, norm_type=cfg.norm_type)
+        if cfg.tie_embeddings:
+            logits = layers.unembed(params["embed"], x)
+        else:
+            logits = layers.linear(params["lm_head"], x).astype(jnp.float32)
+        return logits
+
+    # ---------------- training ----------------
+    def loss(self, params, batch) -> Tuple[Array, dict]:
+        cfg = self.cfg
+        x, positions, prefix = self._embed_inputs(params, batch)
+        if cfg.scan_layers:
+            x, _, aux = self._trunk_train(params, x, positions)
+        else:
+            x, _, aux = self._trunk(params, x, positions)
+        logits = self._logits(params, x)
+        if prefix:
+            logits = logits[:, prefix:]
+        labels = batch["labels"]
+        loss, metrics = base.cross_entropy_loss(logits[:, :-1], labels[:, 1:])
+        if cfg.moe:
+            loss = loss + cfg.moe_aux_weight * aux / cfg.n_layers
+            metrics["moe_aux"] = aux / cfg.n_layers
+        metrics["loss_total"] = loss
+        return loss, metrics
+
+    def _trunk_train(self, params, x, positions):
+        """scan-over-layers without caches (cache pytree = None per layer)."""
+        cfg = self.cfg
+
+        def block(p, x):
+            y, _, a = _block_apply(p, cfg, x, positions, None, None)
+            return y, a
+
+        if cfg.remat in ("full", "dots"):
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat == "dots" else None)
+            block = jax.checkpoint(block, policy=policy)
+
+        def body(carry, p):
+            x, aux = carry
+            y, a = block(p, x)
+            y = dist_api.shard_tokens3d(y)
+            return (y, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                   params["layers"])
+        return x, None, aux
+
+    # ---------------- serving ----------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.sliding_window is not None:
+            max_seq = min(max_seq, cfg.sliding_window)
+        shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.scan_layers:
+            return attention.KVCache(
+                jnp.zeros((cfg.n_layers,) + shape, dtype),
+                jnp.zeros((cfg.n_layers,) + shape, dtype))
+        return [attention.init_cache(cfg, batch, max_seq, dtype)
+                for _ in range(cfg.n_layers)]
+
+    def prefill(self, params, batch, cache) -> Tuple[Array, Any]:
+        x, positions, _ = self._embed_inputs(params, batch)
+        x, new_caches, _ = self._trunk(params, x, positions, cache,
+                                       cache_index=jnp.int32(0))
+        logits = self._logits(params, x[:, -1:])
+        return logits[:, 0], new_caches
+
+    def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
+        """token: (b, 1); index: () int32 — position of this token."""
+        cfg = self.cfg
+        x = layers.embed(params["embed"], token)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        positions = jnp.full((token.shape[0], 1), index, jnp.int32)
+        x, new_caches, _ = self._trunk(params, x, positions, cache,
+                                       cache_index=index)
+        logits = self._logits(params, x)
+        return logits[:, 0], new_caches

@@ -1,0 +1,163 @@
+"""Whisper-style encoder-decoder transformer (audio frontend stubbed).
+
+Per the assignment, the conv frontend is a stub: ``input_specs()`` provides
+precomputed frame embeddings (batch, enc_seq, d_model).  The encoder is a
+bidirectional transformer; the decoder interleaves causal self-attention and
+cross-attention to the encoded audio.  Sinusoidal positions (no RoPE),
+LayerNorm, GELU MLPs — matching the Whisper family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import api as dist_api
+from repro.models import base
+from repro.nn import attention, layers, mlp as mlp_mod
+
+Array = jax.Array
+
+
+class Whisper:
+    def __init__(self, cfg: base.ModelConfig):
+        self.cfg = cfg
+        self.n_enc = cfg.encoder_layers or cfg.n_layers
+        self.n_dec = cfg.n_layers
+
+    # ---------------- specs ----------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        enc_block = {
+            "ln_attn": layers.norm_specs(cfg.d_model, norm_type="layernorm"),
+            "attn": attention.attention_specs(cfg),
+            "ln_mlp": layers.norm_specs(cfg.d_model, norm_type="layernorm"),
+            "mlp": mlp_mod.mlp_specs(cfg),
+        }
+        dec_block = {
+            "ln_self": layers.norm_specs(cfg.d_model, norm_type="layernorm"),
+            "self_attn": attention.attention_specs(cfg),
+            "ln_cross": layers.norm_specs(cfg.d_model, norm_type="layernorm"),
+            "cross_attn": attention.attention_specs(cfg),
+            "ln_mlp": layers.norm_specs(cfg.d_model, norm_type="layernorm"),
+            "mlp": mlp_mod.mlp_specs(cfg),
+        }
+        return {
+            "embed": layers.embed_specs(cfg.vocab_size, cfg.d_model),
+            "enc_ln_post": layers.norm_specs(cfg.d_model,
+                                             norm_type="layernorm"),
+            "dec_ln_post": layers.norm_specs(cfg.d_model,
+                                             norm_type="layernorm"),
+            "encoder": {str(i): enc_block for i in range(self.n_enc)},
+            "decoder": {str(i): dec_block for i in range(self.n_dec)},
+        }
+
+    # ---------------- encoder ----------------
+    def encode(self, params, frames: Array) -> Array:
+        """frames: (b, enc_seq, d_model) — stub frontend output."""
+        cfg = self.cfg
+        pos = layers.sinusoidal_positions(frames.shape[1], cfg.d_model)
+        x = frames + jnp.asarray(pos, frames.dtype)[None]
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        for i in range(self.n_enc):
+            p = params["encoder"][str(i)]
+            h, _ = attention.apply(
+                p["attn"], cfg,
+                layers.norm(p["ln_attn"], x, norm_type="layernorm"),
+                positions=positions, causal=False)
+            x = x + h
+            x = dist_api.shard_tokens3d(x + mlp_mod.apply(
+                p["mlp"], cfg,
+                layers.norm(p["ln_mlp"], x, norm_type="layernorm")))
+        return layers.norm(params["enc_ln_post"], x, norm_type="layernorm")
+
+    # ---------------- decoder ----------------
+    def _dec_trunk(self, params, x, positions, enc_out, caches=None,
+                   cache_index=None):
+        cfg = self.cfg
+        new_caches: List[Any] = []
+        for i in range(self.n_dec):
+            p = params["decoder"][str(i)]
+            cache = None if caches is None else caches[i]
+            self_c = None if cache is None else cache["self"]
+            cross_c = None if cache is None else cache["cross"]
+            h, nsc = attention.apply(
+                p["self_attn"], cfg,
+                layers.norm(p["ln_self"], x, norm_type="layernorm"),
+                positions=positions, cache=self_c, cache_index=cache_index,
+                causal=True)
+            x = x + h
+            h, ncc = attention.apply(
+                p["cross_attn"], cfg,
+                layers.norm(p["ln_cross"], x, norm_type="layernorm"),
+                positions=positions, cache=cross_c,
+                cache_index=cache_index, kv_source=enc_out, is_cross=True)
+            x = x + h
+            x = dist_api.shard_tokens3d(x + mlp_mod.apply(
+                p["mlp"], cfg,
+                layers.norm(p["ln_mlp"], x, norm_type="layernorm")))
+            new_caches.append(None if cache is None
+                              else {"self": nsc, "cross": ncc})
+        return x, new_caches
+
+    def _dec_embed(self, params, tokens):
+        cfg = self.cfg
+        x = layers.embed(params["embed"], tokens)
+        return x  # positional added below with true offsets
+
+    def _logits(self, params, x) -> Array:
+        x = layers.norm(params["dec_ln_post"], x, norm_type="layernorm")
+        return layers.unembed(params["embed"], x)
+
+    # ---------------- training ----------------
+    def loss(self, params, batch) -> Tuple[Array, dict]:
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        pos_tab = layers.sinusoidal_positions(tokens.shape[1], cfg.d_model)
+        x = self._dec_embed(params, tokens) + \
+            jnp.asarray(pos_tab, cfg.dtype)[None]
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+        x, _ = self._dec_trunk(params, x, positions, enc_out)
+        logits = self._logits(params, x)
+        loss, metrics = base.cross_entropy_loss(
+            logits[:, :-1], batch["labels"][:, 1:])
+        metrics["loss_total"] = loss
+        return loss, metrics
+
+    # ---------------- serving ----------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        caches = []
+        for _ in range(self.n_dec):
+            caches.append({
+                "self": attention.init_cache(cfg, batch, max_seq, dtype),
+                "cross": attention.init_cache(cfg, batch, cfg.encoder_seq,
+                                              dtype),
+            })
+        return caches
+
+    def prefill(self, params, batch, cache) -> Tuple[Array, Any]:
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        pos_tab = layers.sinusoidal_positions(tokens.shape[1], cfg.d_model)
+        x = self._dec_embed(params, tokens) + \
+            jnp.asarray(pos_tab, cfg.dtype)[None]
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+        x, new_caches = self._dec_trunk(params, x, positions, enc_out,
+                                        cache, cache_index=jnp.int32(0))
+        logits = self._logits(params, x[:, -1:])
+        return logits[:, 0], new_caches
+
+    def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
+        cfg = self.cfg
+        pos_emb = layers.sinusoidal_position_at(index, cfg.d_model)
+        x = self._dec_embed(params, token) + \
+            pos_emb.astype(cfg.dtype)[None, None, :]
+        positions = jnp.full((token.shape[0], 1), index, jnp.int32)
+        x, new_caches = self._dec_trunk(params, x, positions, None,
+                                        cache, cache_index=index)
+        logits = self._logits(params, x)
+        return logits[:, 0], new_caches

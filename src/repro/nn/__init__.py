@@ -1,0 +1,1 @@
+from repro.nn import attention, layers, mlp, moe, params, ssm  # noqa: F401

@@ -1,0 +1,283 @@
+"""Multi-head attention (GQA/MQA) with KV cache, RoPE, sliding window.
+
+Projections shard along their *flattened* output feature dim (logical axis
+"qkv" -> mesh "model"), which stays divisible for every assigned arch even
+when kv-head counts (8, 4, 1) are smaller than the model-axis size; XLA's
+sharding propagation handles the per-head layout inside the block.
+
+Three execution paths:
+  * training / prefill: full attention — XLA einsum (default) or the Pallas
+    flash kernel (``use_flash``);
+  * decode: single-query attention against the cache (XLA; a matvec).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers
+from repro.nn.params import ParamSpec
+
+Array = jax.Array
+
+
+class KVCache(NamedTuple):
+    k: Array  # (b, max_seq, n_kv, head_dim)
+    v: Array  # (b, max_seq, n_kv, head_dim)
+
+
+def attention_specs(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    return {
+        "wq": layers.linear_specs(d, nq * hd, axes=("embed", "qkv"),
+                                  bias=cfg.qkv_bias),
+        "wk": layers.linear_specs(d, nkv * hd, axes=("embed", "qkv"),
+                                  bias=cfg.qkv_bias),
+        "wv": layers.linear_specs(d, nkv * hd, axes=("embed", "qkv"),
+                                  bias=cfg.qkv_bias),
+        "wo": layers.linear_specs(nq * hd, d, axes=("qkv", "embed")),
+    }
+
+
+def _split_heads(x: Array, n: int, hd: int) -> Array:
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+# Above this many kv positions the XLA path switches to the blocked
+# online-softmax form (flash-in-XLA): O(S) memory instead of O(S^2).
+BLOCKED_ATTN_THRESHOLD = 2048
+BLOCKED_ATTN_KV_BLOCK = 1024
+
+
+def blocked_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                      window: Optional[int],
+                      logit_softcap: Optional[float] = None,
+                      block_k: int = BLOCKED_ATTN_KV_BLOCK,
+                      probs_bf16: bool = False) -> Array:
+    """Flash-style attention in pure XLA: lax.scan over kv blocks with a
+    running (max, denom, acc) — the score matrix never materializes.  The
+    per-block body is rematerialized, so the backward pass recomputes block
+    scores (classic flash memory behaviour).  Differentiable.
+
+    q: (b, s, nq, hd); k, v: (b, t, nkv, hd).
+    """
+    b, s, nq, hd = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    qpg = nq // nkv
+    scale = hd ** -0.5
+    pad_t = (-t) % block_k
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    nblocks = (t + pad_t) // block_k
+    kb = k.reshape(b, nblocks, block_k, nkv, hd)
+    vb = v.reshape(b, nblocks, block_k, nkv, hd)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, s, nkv, qpg, hd)
+    q_ids = jnp.arange(s)[:, None] + (t - s)      # right-aligned
+
+    @jax.checkpoint
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, kv0 = blk
+        sc = jnp.einsum("bsgqd,btgd->bgqst", qg, kblk.astype(jnp.float32))
+        if logit_softcap is not None:
+            sc = jnp.tanh(sc / logit_softcap) * logit_softcap
+        k_ids = kv0 + jnp.arange(block_k)[None, :]
+        mask = k_ids < t                          # padding
+        if causal:
+            mask = jnp.logical_and(mask, k_ids <= q_ids)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_ids > q_ids - window)
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        m_cur = jnp.max(sc, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        # Flash-standard trick: probabilities in bf16 for the PV matmul
+        # halves the dominant score-matrix traffic (opt-in; fp32 acc kept).
+        pv = p.astype(jnp.bfloat16) if probs_bf16 else p
+        vb_ = vblk.astype(jnp.bfloat16 if probs_bf16 else jnp.float32)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bgqst,btgd->bgqsd", pv, vb_,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, nkv, qpg, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, nkv, qpg, s), jnp.float32)
+    acc0 = jnp.zeros((b, nkv, qpg, s, hd), jnp.float32)
+    kv_starts = jnp.arange(nblocks) * block_k
+    from repro.core import accounting
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kv_starts),
+        unroll=accounting.inner_unroll(nblocks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (b,g,q,s,hd)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, s, nq, hd)
+    return out.astype(q.dtype)
+
+
+def full_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                   window: Optional[int], use_flash: bool,
+                   flash_interpret: bool = False,
+                   logit_softcap: Optional[float] = None,
+                   probs_bf16: bool = False) -> Array:
+    """q: (b, s, nq, hd); k, v: (b, t, nkv, hd) -> (b, s, nq, hd)."""
+    nq, nkv = q.shape[2], k.shape[2]
+    if use_flash and logit_softcap is None:
+        from repro.kernels import ops as kops
+        qh = jnp.moveaxis(q, 2, 1)
+        kh = jnp.moveaxis(k, 2, 1)
+        vh = jnp.moveaxis(v, 2, 1)
+        out = kops.flash_attention(qh, kh, vh, causal=causal, window=window,
+                                   interpret=flash_interpret)
+        return jnp.moveaxis(out, 1, 2)
+
+    if k.shape[1] > BLOCKED_ATTN_THRESHOLD:
+        return blocked_attention(q, k, v, causal=causal, window=window,
+                                 logit_softcap=logit_softcap,
+                                 probs_bf16=probs_bf16)
+
+    qpg = nq // nkv
+    scale = q.shape[-1] ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    # grouped einsum keeps kv un-replicated: (b, s, g, qpg, hd)
+    qg = qf.reshape(q.shape[0], q.shape[1], nkv, qpg, q.shape[3])
+    s = jnp.einsum("bsgqd,btgd->bgqst", qg, k.astype(jnp.float32))
+    if logit_softcap is not None:
+        s = jnp.tanh(s / logit_softcap) * logit_softcap
+    sl, tl = s.shape[-2], s.shape[-1]
+    q_ids = jnp.arange(sl)[:, None] + (tl - sl)  # right-aligned positions
+    k_ids = jnp.arange(tl)[None, :]
+    mask = jnp.ones((sl, tl), bool)
+    if causal:
+        mask &= k_ids <= q_ids
+    if window is not None:
+        mask &= k_ids > q_ids - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgqst,btgd->bsgqd", p, v.astype(jnp.float32))
+    return out.reshape(q.shape).astype(q.dtype)
+
+
+def decode_attention(q: Array, cache: KVCache, cache_len: Array, *,
+                     window: Optional[int] = None,
+                     logit_softcap: Optional[float] = None) -> Array:
+    """Single-position query against the cache.
+
+    q: (b, 1, nq, hd); cache k/v: (b, T, nkv, hd); cache_len: () int32 —
+    number of valid positions (the new token's kv must already be written).
+    """
+    b, _, nq, hd = q.shape
+    T, nkv = cache.k.shape[1], cache.k.shape[2]
+    qpg = nq // nkv
+    qg = (q.astype(jnp.float32) * hd ** -0.5).reshape(b, 1, nkv, qpg, hd)
+    s = jnp.einsum("bsgqd,btgd->bgqst", qg, cache.k.astype(jnp.float32))
+    if logit_softcap is not None:
+        s = jnp.tanh(s / logit_softcap) * logit_softcap
+    k_ids = jnp.arange(T)[None, :]
+    valid = k_ids < cache_len
+    if window is not None:
+        valid &= k_ids > (cache_len - 1 - window)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgqst,btgd->bsgqd", p, cache.v.astype(jnp.float32))
+    return out.reshape(q.shape).astype(q.dtype)
+
+
+def apply(params: dict, cfg, x: Array, *, positions: Array,
+          cache: Optional[KVCache] = None,
+          cache_index: Optional[Array] = None,
+          causal: bool = True,
+          window: Optional[int] = None,
+          kv_source: Optional[Array] = None,
+          is_cross: bool = False,
+          ) -> Tuple[Array, Optional[KVCache]]:
+    """Attention block body (no residual / norm — the model adds those).
+
+    Modes:
+      cache=None                      -> training forward, no cache out
+      cache given, x.shape[1] > 1     -> prefill: fill cache, full attention
+      cache given, x.shape[1] == 1    -> decode: update cache at cache_index
+      is_cross (whisper decoder)      -> k/v from kv_source; at decode time
+                                         kv_source may be None (cache reused)
+    """
+    nq, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    is_cross = is_cross or kv_source is not None
+    q = _split_heads(layers.linear(params["wq"], x), nq, hd)
+
+    if is_cross and kv_source is None:
+        # decode with precomputed cross-attention cache: skip k/v projection
+        assert cache is not None, "cross-attention decode needs a cache"
+        k = v = None
+    else:
+        src = kv_source if is_cross else x
+        k = _split_heads(layers.linear(params["wk"], src), nkv, hd)
+        v = _split_heads(layers.linear(params["wv"], src), nkv, hd)
+
+    if not is_cross:
+        q = layers.rope(q, positions, theta=cfg.rope_theta)
+        if k is not None:
+            k = layers.rope(k, positions, theta=cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        out = full_attention(q, k, v, causal=causal and not is_cross,
+                             window=window, use_flash=cfg.use_flash,
+                             flash_interpret=cfg.flash_interpret,
+                             logit_softcap=cfg.attn_logit_softcap,
+                             probs_bf16=cfg.attn_probs_bf16)
+    elif x.shape[1] > 1 or (is_cross and k is not None):
+        # prefill: write k/v and run full attention.  Windowed layers use a
+        # ring cache of size == window; slot(p) = p % window.
+        T = cache.k.shape[1]
+        s = k.shape[1]
+        ring = window is not None and T == window
+        if ring and s >= T:
+            s0 = s % T
+            ck = jnp.roll(k[:, -T:].astype(cache.k.dtype), s0, axis=1)
+            cv = jnp.roll(v[:, -T:].astype(cache.v.dtype), s0, axis=1)
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+        new_cache = KVCache(ck, cv)
+        out = full_attention(q, k, v, causal=causal and not is_cross,
+                             window=window, use_flash=cfg.use_flash,
+                             flash_interpret=cfg.flash_interpret,
+                             logit_softcap=cfg.attn_logit_softcap,
+                             probs_bf16=cfg.attn_probs_bf16)
+    else:
+        # decode
+        if is_cross:
+            new_cache = cache
+            cache_len = jnp.asarray(cache.k.shape[1], jnp.int32)
+            out = decode_attention(q, cache, cache_len,
+                                   logit_softcap=cfg.attn_logit_softcap)
+        else:
+            idx = cache_index
+            T = cache.k.shape[1]
+            ring = window is not None and T == window
+            slot = jnp.mod(idx, T) if ring else idx
+            ck = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+            new_cache = KVCache(ck, cv)
+            cache_len = jnp.minimum(idx + 1, T) if ring else idx + 1
+            out = decode_attention(
+                q, new_cache, cache_len, window=None if ring else window,
+                logit_softcap=cfg.attn_logit_softcap)
+
+    out = out.reshape(out.shape[:2] + (nq * hd,))
+    y = layers.linear(params["wo"], out)
+    return y, new_cache
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

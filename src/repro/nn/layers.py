@@ -1,0 +1,141 @@
+"""Functional NN layers: linear, norms, RoPE, embeddings, conv1d.
+
+Every layer is a (specs, apply) pair; params are plain dicts.  Activations
+are routed through ``core.pwl.activation`` so ActiBA (PWL approximation)
+applies uniformly to every architecture that uses SiLU/GeLU/Softplus/sigmoid.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.params import ParamSpec
+
+Array = jax.Array
+
+
+# ----------------------------------------------------------------------------
+# Linear
+# ----------------------------------------------------------------------------
+
+def linear_specs(d_in: int, d_out: int, *, axes=("embed", "mlp"),
+                 bias: bool = False, scale: Optional[float] = None) -> dict:
+    specs = {"w": ParamSpec((d_in, d_out), axes, scale=scale)}
+    if bias:
+        specs["b"] = ParamSpec((d_out,), (axes[1],), init="zeros")
+    return specs
+
+
+def linear(p: dict, x: Array) -> Array:
+    y = jnp.dot(x, p["w"], preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------------
+
+def norm_specs(d: int, *, norm_type: str = "rmsnorm") -> dict:
+    specs = {"scale": ParamSpec((d,), ("embed",),
+                                init="zeros" if norm_type == "gemma_rmsnorm"
+                                else "ones")}
+    if norm_type == "layernorm":
+        specs["bias"] = ParamSpec((d,), ("embed",), init="zeros")
+    return specs
+
+
+def norm(p: dict, x: Array, *, norm_type: str = "rmsnorm",
+         eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps)
+        scale = p["scale"].astype(jnp.float32)
+        if norm_type == "gemma_rmsnorm":      # gemma stores scale-1
+            scale = scale + 1.0
+        y = y * scale
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, *, theta: float = 1e4) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, base: float = 1e4) -> Array:
+    """(seq, d) sinusoidal table, built with jnp (no giant HLO constants)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (base ** (np.arange(0, d, 2, dtype=np.float32) / d))
+    ang = pos * inv[None, :]                                   # (seq, d/2)
+    return jnp.stack([jnp.sin(ang), jnp.cos(ang)], axis=-1).reshape(seq, d)
+
+
+def sinusoidal_position_at(index: Array, d: int, base: float = 1e4) -> Array:
+    """(d,) sinusoidal embedding for one dynamic position index."""
+    inv = 1.0 / (base ** (np.arange(0, d, 2, dtype=np.float32) / d))
+    ang = index.astype(jnp.float32) * inv
+    return jnp.stack([jnp.sin(ang), jnp.cos(ang)], axis=-1).reshape(d)
+
+
+# ----------------------------------------------------------------------------
+# Embedding
+# ----------------------------------------------------------------------------
+
+def embed_specs(vocab: int, d: int) -> dict:
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), scale=0.02)}
+
+
+def embed(p: dict, tokens: Array) -> Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: dict, x: Array) -> Array:
+    """Tied logits: x @ table^T in fp32."""
+    return jnp.dot(x, p["table"].T.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# Causal depthwise conv1d (Mamba / RG-LRU front conv)
+# ----------------------------------------------------------------------------
+
+def conv1d_specs(d: int, width: int) -> dict:
+    return {"w": ParamSpec((width, d), (None, "mlp"), scale=0.5),
+            "b": ParamSpec((d,), ("mlp",), init="zeros")}
+
+
+def causal_conv1d(p: dict, x: Array,
+                  state: Optional[Array] = None) -> Tuple[Array, Array]:
+    """x: (b, l, d).  Returns (y, new_state) with state (b, width-1, d)."""
+    width = p["w"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)         # (b, l+w-1, d)
+    w = p["w"].astype(jnp.float32)
+    y = sum(xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i]
+            for i in range(width))
+    y = y + p["b"].astype(jnp.float32)
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return y.astype(x.dtype), new_state

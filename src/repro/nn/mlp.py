@@ -1,0 +1,61 @@
+"""Gated MLPs (SwiGLU / GeGLU / plain) with ActiBA-aware activations.
+
+When ``xamba.actiba`` is on, the gate activation is the PWL approximation;
+with ``pallas`` modes the whole gated unit runs through the drain-fused
+``matmul_pwl`` kernel (activation evaluated during the matmul drain, the
+paper's vertical fusion).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pwl
+from repro.nn import layers
+
+Array = jax.Array
+
+_ACT_FOR_MLP = {"swiglu": "silu", "geglu": "gelu", "mlp": "gelu"}
+
+
+def mlp_specs(cfg, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "wi": layers.linear_specs(d, f, axes=("embed", "mlp")),
+            "wg": layers.linear_specs(d, f, axes=("embed", "mlp")),
+            "wo": layers.linear_specs(f, d, axes=("mlp", "embed")),
+        }
+    return {
+        "wi": layers.linear_specs(d, f, axes=("embed", "mlp")),
+        "wo": layers.linear_specs(f, d, axes=("mlp", "embed")),
+    }
+
+
+def apply(params: dict, cfg, x: Array) -> Array:
+    act_name = _ACT_FOR_MLP[cfg.mlp_type]
+    xamba = cfg.xamba
+    use_pallas = xamba is not None and xamba.actiba and \
+        xamba.cumba in ("pallas", "pallas_interpret")
+
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        if use_pallas:
+            from repro.kernels import ops as kops
+            table = pwl.get_table(act_name, segments=xamba.actiba_segments,
+                                  lo=xamba.actiba_range[0],
+                                  hi=xamba.actiba_range[1],
+                                  adaptive=xamba.actiba_adaptive)
+            x2 = x.reshape(-1, x.shape[-1])
+            h = kops.matmul_pwl(
+                x2, params["wg"]["w"], table, params["wi"]["w"],
+                interpret=(xamba.cumba == "pallas_interpret"))
+            h = h.reshape(x.shape[:-1] + (h.shape[-1],))
+        else:
+            act = pwl.activation(act_name, xamba)
+            h = act(layers.linear(params["wg"], x)) * layers.linear(params["wi"], x)
+        return layers.linear(params["wo"], h.astype(x.dtype))
+
+    act = pwl.activation(act_name, xamba)
+    h = act(layers.linear(params["wi"], x))
+    return layers.linear(params["wo"], h.astype(x.dtype))

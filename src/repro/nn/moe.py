@@ -1,0 +1,116 @@
+"""Mixture-of-Experts layer with static-capacity scatter/gather dispatch.
+
+Expert-parallel design: expert weight tensors carry a leading logical
+"expert" axis which the sharding rules map onto the mesh (``model`` when the
+expert count divides it, else ``pod``/replicated — divisibility-aware
+fallback in ``distributed/sharding.py``).  Dispatch is scatter-add into a
+static (E, C, D) buffer, batched expert GEMMs (dot_general with the expert
+batch dim sharded = expert parallelism; XLA inserts the all-to-all), then a
+gather back.  Static shapes everywhere (paper Step-1 discipline): capacity
+``C = ceil(T * k / E * capacity_factor)``, overflow tokens drop (standard
+GShard semantics).
+
+The router's position-in-expert computation is a cumulative sum over the
+token axis — on the NPU this is exactly the class of op CumBA remaps;
+we route it through ``core.segsum.cumsum`` so the XAMBA mode applies.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pwl
+from repro.nn import layers
+from repro.nn.params import ParamSpec
+
+Array = jax.Array
+
+
+def moe_specs(cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    return {
+        "router": {"w": ParamSpec((d, e), ("embed", None), scale=0.02)},
+        "wi": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "wg": ParamSpec((e, d, f), ("expert", "embed", "mlp")),
+        "wo": ParamSpec((e, f, d), ("expert", "mlp", "embed")),
+    }
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    c = math.ceil(n_tokens * cfg.n_experts_per_token / cfg.n_experts
+                  * cfg.capacity_factor)
+    return max(8, int(math.ceil(c / 8) * 8))
+
+
+def apply(params: dict, cfg, x: Array) -> Tuple[Array, Array]:
+    """x: (b, s, d) -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_per_token
+    n = b * s
+    cap = capacity(n, cfg)
+    xf = x.reshape(n, d)
+
+    logits = jnp.dot(xf.astype(jnp.float32), params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (n, e)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)           # (n, k)
+    if cfg.moe_renormalize:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Load-balancing auxiliary loss (Switch-style).
+    me = jnp.mean(probs, axis=0)                              # (e,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, e, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = jnp.sum(me * ce) * e
+
+    # Position of each (token, slot) within its expert: a prefix sum over the
+    # token axis.  This is exactly the op class CumBA remaps (see
+    # core/segsum.py); at dispatch sizes (tokens*k can be millions) we use
+    # the log-depth associative form — the CumBA triangular matmul is used
+    # by the SSD path where the (T, T) working set fits on the MXU.
+    onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.float32)  # (n, k, e)
+    flat = onehot.reshape(n * k, e)
+    pos = jax.lax.associative_scan(jnp.add, flat, axis=0)      # inclusive
+    pos = (pos - 1.0) * flat                                   # 0-based
+    pos_id = jnp.sum(pos.reshape(n, k, e), axis=-1)            # (n, k)
+    keep = pos_id < cap
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # Scatter tokens into (e, cap, d).  Under a distributed layout the
+    # capacity dim is pinned to the batch axes so the expert buffers (and
+    # the batched GEMMs below) stay sharded instead of XLA gathering the
+    # full (e, cap, d) onto every device for the scatter/gather pair.
+    from repro.distributed import api as dist_api
+    eid = expert_ids.reshape(-1)
+    pid = jnp.clip(pos_id.reshape(-1).astype(jnp.int32), 0, cap - 1)
+    keep_f = keep.reshape(-1)
+    src = jnp.repeat(xf, k, axis=0) * keep_f[:, None].astype(xf.dtype)
+    buf = jnp.zeros((e, cap, d), xf.dtype)
+    buf = buf.at[eid, pid].add(src, mode="drop")
+    if cfg.moe_cap_batch_sharding:
+        buf = dist_api.constrain_dims(buf, {1: "batch"})
+
+    # Batched expert GEMMs (expert dim = EP sharding axis).
+    act = pwl.activation("silu" if cfg.mlp_type == "swiglu" else "gelu",
+                         cfg.xamba)
+    hi = jnp.einsum("ecd,edf->ecf", buf, params["wi"],
+                    preferred_element_type=jnp.float32)
+    hg = jnp.einsum("ecd,edf->ecf", buf, params["wg"],
+                    preferred_element_type=jnp.float32)
+    h = (act(hg) * hi).astype(xf.dtype)
+    out = jnp.einsum("ecf,efd->ecd", h, params["wo"],
+                     preferred_element_type=jnp.float32).astype(xf.dtype)
+    if cfg.moe_cap_batch_sharding:
+        out = dist_api.constrain_dims(out, {1: "batch"})
+
+    # Gather back and combine with gates.
+    gathered = out[eid, pid]                                   # (n*k, d)
+    if cfg.moe_cap_batch_sharding:
+        gathered = dist_api.constrain_dims(gathered, {0: "batch"})
+    gathered = gathered * (gate_vals.reshape(-1, 1).astype(xf.dtype) *
+                           keep_f[:, None].astype(xf.dtype))
+    y = jnp.sum(gathered.reshape(n, k, d), axis=1)
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

@@ -1,0 +1,92 @@
+"""Parameter specs: shape + init + *logical* sharding axes, declared once.
+
+A model's parameters are a nested dict of ``ParamSpec``; the same spec tree
+serves four uses:
+
+* ``init_params``      — materialize arrays (CPU smoke tests / real training)
+* ``abstract_params``  — ``ShapeDtypeStruct`` stand-ins (the multi-pod dry-run
+                         lowers against these; nothing is allocated)
+* logical axes         — consumed by ``distributed/sharding.py`` which maps
+                         logical names ("vocab", "embed", "mlp", ...) to mesh
+                         axes with divisibility-aware fallback
+* stacking             — ``stack_specs`` prepends a "layers" axis for
+                         scan-over-layers models
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | small_normal
+    scale: Optional[float] = None  # stddev; default fan-in
+    dtype: Optional[Any] = None    # override the model param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_one(spec: ParamSpec, key, default_dtype) -> Array:
+    dtype = spec.dtype or default_dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+    std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+    if spec.init == "small_normal":
+        std = 0.02
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs: PyTree, rng: Array, default_dtype=jnp.bfloat16) -> PyTree:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = [_init_one(s, k, default_dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs: PyTree, default_dtype=jnp.bfloat16) -> PyTree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype),
+        specs, is_leaf=is_spec)
+
+
+def logical_axes(specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stack_specs(specs: PyTree, n: int, axis_name: Optional[str] = "layers"
+                ) -> PyTree:
+    """Prepend a stacked-layers dimension to every spec (scan-over-layers)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.axes,
+                            init=s.init, scale=s.scale, dtype=s.dtype),
+        specs, is_leaf=is_spec)
+
+
+def count_params(specs: PyTree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def param_bytes(specs: PyTree, default_dtype=jnp.bfloat16) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) *
+               jnp.dtype(s.dtype or default_dtype).itemsize for s in leaves)

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, init, update, global_norm  # noqa: F401
+from repro.optim.schedule import ScheduleConfig, lr_at  # noqa: F401

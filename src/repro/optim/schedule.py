@@ -1,0 +1,32 @@
+"""Learning-rate schedules (pure functions of step)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "warmup_cosine"    # warmup_cosine | warmup_linear | constant
+    base_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_ratio: float = 0.1
+
+
+def lr_at(step, cfg: ScheduleConfig):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.kind == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip((s - cfg.warmup_steps) /
+                        jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        if cfg.kind == "warmup_linear":
+            decay = 1.0 - (1.0 - cfg.min_ratio) * frac
+        else:
+            decay = cfg.min_ratio + (1.0 - cfg.min_ratio) * 0.5 * \
+                (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.base_lr * warm * decay

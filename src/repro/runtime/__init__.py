@@ -1,0 +1,3 @@
+from repro.runtime.elastic import (RestartPolicy, reshard_state,  # noqa: F401
+                                   run_with_restarts)
+from repro.runtime.health import StepMonitor, Watchdog  # noqa: F401

@@ -1,0 +1,78 @@
+"""Fault tolerance: checkpoint/restart loop + elastic re-meshing.
+
+``run_with_restarts`` drives a training function under a crash policy:
+any exception (a lost host surfaces as one in SPMD jax) falls back to the
+latest atomic checkpoint and resumes, up to ``max_restarts``.  Combined with
+``reshard_state`` a restart may come back on a *different* mesh (fewer
+hosts): parameters are re-device_put onto the new mesh's shardings — that
+is elastic scaling down/up at checkpoint granularity, the standard
+large-fleet posture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+
+from repro.checkpoint import ckpt
+from repro.distributed.sharding import make_shardings
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 3
+    ckpt_dir: str = "/tmp/repro_ckpt"
+
+
+def reshard_state(state: Any, specs: Any, new_mesh, extra_rules=()) -> Any:
+    """Re-device_put a state pytree onto a new mesh (elastic re-shard)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    param_sh, _ = make_shardings(specs, new_mesh, extra_rules)
+    out = dict(state)
+    out["params"] = jax.tree.map(jax.device_put, state["params"], param_sh)
+    out["opt"] = {
+        "step": jax.device_put(state["opt"]["step"],
+                               NamedSharding(new_mesh, P())),
+        "m": jax.tree.map(jax.device_put, state["opt"]["m"], param_sh),
+        "v": jax.tree.map(jax.device_put, state["opt"]["v"], param_sh),
+    }
+    return out
+
+
+def run_with_restarts(train_some_steps: Callable[[Any, int], Tuple[Any, int]],
+                      init_state: Any,
+                      policy: RestartPolicy,
+                      save_every: int = 10,
+                      target_steps: int = 100) -> Tuple[Any, int, int]:
+    """Drive ``train_some_steps(state, start_step) -> (state, reached_step)``
+    to ``target_steps`` with checkpoint/restart. Returns
+    (state, step, n_restarts)."""
+    restarts = 0
+    state = init_state
+    step = 0
+    # resume if a checkpoint exists
+    last = ckpt.latest_step(policy.ckpt_dir)
+    if last is not None:
+        state, step, _ = ckpt.restore(policy.ckpt_dir, state)
+        log.info("resumed from step %d", step)
+
+    while step < target_steps:
+        try:
+            state, step = train_some_steps(state, step)
+            ckpt.save(policy.ckpt_dir, step, state)
+        except Exception as e:  # noqa: BLE001 — the restart boundary
+            restarts += 1
+            log.warning("step loop failed at ~%d: %s (restart %d/%d)",
+                        step, e, restarts, policy.max_restarts)
+            if restarts > policy.max_restarts:
+                raise
+            last = ckpt.latest_step(policy.ckpt_dir)
+            if last is not None:
+                state, step, _ = ckpt.restore(policy.ckpt_dir, state)
+            # else: restart from the initial state
+    return state, step, restarts

@@ -1,0 +1,91 @@
+"""Step-time health monitoring: straggler / hang detection.
+
+In SPMD data-parallel training a straggling host slows every step (the
+collectives synchronize), so detection is: robust per-step timing stats and
+a policy hook.  ``StepMonitor`` keeps a rolling window, flags steps slower
+than ``threshold x median`` (straggler) and exposes a deadline watchdog
+(hang -> the restart loop in runtime/elastic.py takes over).  At real
+multi-host scale the same monitor runs per host and the flags are
+aggregated through the (out-of-band) coordination service; the policy and
+statistics are identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import threading
+import time
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    seconds: float
+    straggler: bool
+
+
+class StepMonitor:
+    def __init__(self, window: int = 50, straggler_factor: float = 2.0,
+                 warmup_steps: int = 3):
+        self.window = window
+        self.factor = straggler_factor
+        self.warmup = warmup_steps
+        self.records: List[StepRecord] = []
+        self._durations: List[float] = []
+
+    def observe(self, step: int, seconds: float) -> StepRecord:
+        baseline = self._durations[-self.window:]
+        is_straggler = False
+        if len(baseline) >= self.warmup:
+            med = statistics.median(baseline)
+            is_straggler = seconds > self.factor * med
+        self._durations.append(seconds)
+        rec = StepRecord(step, seconds, is_straggler)
+        self.records.append(rec)
+        return rec
+
+    @property
+    def straggler_steps(self) -> List[int]:
+        return [r.step for r in self.records if r.straggler]
+
+    def summary(self) -> dict:
+        if not self._durations:
+            return {"steps": 0}
+        ds = self._durations
+        return {
+            "steps": len(ds),
+            "mean_s": sum(ds) / len(ds),
+            "median_s": statistics.median(ds),
+            "max_s": max(ds),
+            "stragglers": len(self.straggler_steps),
+        }
+
+
+class Watchdog:
+    """Fires ``on_hang`` if ``pet()`` is not called within ``deadline_s``."""
+
+    def __init__(self, deadline_s: float,
+                 on_hang: Optional[Callable[[], None]] = None):
+        self.deadline_s = deadline_s
+        self.on_hang = on_hang
+        self._last = time.monotonic()
+        self._stop = threading.Event()
+        self.fired = False
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def pet(self):
+        self._last = time.monotonic()
+
+    def _run(self):
+        while not self._stop.wait(min(self.deadline_s / 4, 1.0)):
+            if time.monotonic() - self._last > self.deadline_s:
+                self.fired = True
+                if self.on_hang:
+                    self.on_hang()
+                self._last = time.monotonic()
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=5)

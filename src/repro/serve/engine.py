@@ -1,0 +1,155 @@
+"""Static-shape serving engine — the paper's Step-1 as a subsystem.
+
+NPUs (and jit) require fixed shapes, so the paper enables SSMs with a
+fixed-token prefill model (padding shorter inputs) plus a separate
+cached-state decode model.  This engine generalizes that to every assigned
+architecture:
+
+* **Bucketed prefill**: prompts left-pad to the smallest configured bucket;
+  one compiled prefill program per bucket (compile-once, reuse forever).
+* **Wave decoding**: requests are grouped into fixed-size batches that
+  decode in lockstep with a single compiled decode program; EOS'd rows keep
+  decoding into a sink but stop being reported (static shapes, zero
+  recompile).
+* Caches are whatever the model family needs — KV ring buffers, SSM states,
+  conv states — allocated once per wave.
+
+Left-padding keeps every live request aligned at the same position index,
+which is what lets SSM (position-free) and attention (position-indexed)
+families share one engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    prefill_buckets: Sequence[int] = (32, 128, 512)
+    max_new_tokens: int = 32
+    eos_id: int = -1            # -1: never stops early
+    pad_id: int = 0
+    temperature: float = 0.0    # 0 => greedy
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    latency_s: float = 0.0
+
+
+class Engine:
+    def __init__(self, model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(
+            lambda p, batch, cache: model.prefill(p, batch, cache))
+        self._decode = jax.jit(
+            lambda p, tok, cache, idx: model.decode_step(p, tok, cache, idx))
+        self._uid = 0
+        self._queue: List[Request] = []
+        self._rng = np.random.default_rng(cfg.seed)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: Sequence[int],
+               max_new_tokens: Optional[int] = None) -> int:
+        self._uid += 1
+        self._queue.append(Request(
+            uid=self._uid, prompt=list(prompt),
+            max_new_tokens=max_new_tokens or self.cfg.max_new_tokens))
+        return self._uid
+
+    def _bucket_for(self, length: int) -> int:
+        for b in self.cfg.prefill_buckets:
+            if length <= b:
+                return b
+        return self.cfg.prefill_buckets[-1]
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        if self.cfg.temperature <= 0.0:
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        z = logits / self.cfg.temperature
+        z = z - z.max(axis=-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(axis=-1, keepdims=True)
+        return np.array([self._rng.choice(p.shape[-1], p=row)
+                         for row in p], np.int32)
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[Request]:
+        """Serve everything in the queue; returns completed requests."""
+        done: List[Request] = []
+        while self._queue:
+            wave = self._queue[:self.cfg.max_batch]
+            self._queue = self._queue[self.cfg.max_batch:]
+            done.extend(self._run_wave(wave))
+        return done
+
+    def _run_wave(self, wave: List[Request]) -> List[Request]:
+        cfg = self.cfg
+        t0 = time.time()
+        b = cfg.max_batch
+        longest = max(len(r.prompt) for r in wave)
+        bucket = self._bucket_for(longest)
+        max_new = max(r.max_new_tokens for r in wave)
+
+        # Left-pad prompts into the bucket (static shape).
+        tokens = np.full((b, bucket), cfg.pad_id, np.int32)
+        for i, r in enumerate(wave):
+            p = r.prompt[-bucket:]
+            tokens[i, bucket - len(p):] = p
+
+        cache = self.model.init_cache(b, bucket + max_new,
+                                      self.model.cfg.dtype)
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(tokens)},
+                                      cache)
+        next_tok = self._sample(np.asarray(logits, np.float32))
+
+        alive = np.array([True] * len(wave) + [False] * (b - len(wave)))
+        for i, r in enumerate(wave):
+            r.out_tokens.append(int(next_tok[i]))
+            if cfg.eos_id >= 0 and next_tok[i] == cfg.eos_id:
+                r.done = True
+                alive[i] = False
+
+        for t in range(1, max_new):
+            tok = jnp.asarray(next_tok[:, None])
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.int32(bucket + t - 1))
+            next_tok = self._sample(np.asarray(logits, np.float32))
+            for i, r in enumerate(wave):
+                if alive[i] and len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(next_tok[i]))
+                    if cfg.eos_id >= 0 and next_tok[i] == cfg.eos_id:
+                        alive[i] = False
+                        r.done = True
+            if not alive[:len(wave)].any():
+                break
+
+        dt = time.time() - t0
+        for r in wave:
+            r.done = True
+            r.latency_s = dt
+        return wave
+
+    # ------------------------------------------------------------------
+    def stats(self, requests: List[Request]) -> Dict[str, float]:
+        toks = sum(len(r.out_tokens) for r in requests)
+        wall = max(r.latency_s for r in requests) if requests else 0.0
+        return {"requests": len(requests), "generated_tokens": toks,
+                "tokens_per_s": toks / wall if wall else 0.0}

@@ -1,0 +1,2 @@
+from repro.train.step import (TrainConfig, abstract_state, init_state,  # noqa: F401
+                              make_train_step)

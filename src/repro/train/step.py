@@ -1,0 +1,138 @@
+"""Train step factory: loss -> grads -> AdamW, with microbatch accumulation
+and optional compressed cross-pod gradient sync.
+
+The returned ``train_step(state, batch)`` is pure and jit-friendly; the
+launcher decides shardings (params via the logical rules, batch via the
+activation layout) and jits it once per mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import collectives
+from repro.optim import AdamWConfig, ScheduleConfig, adamw, schedule as sched
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    schedule: ScheduleConfig = ScheduleConfig()
+    microbatches: int = 1
+    # Cross-pod int8 gradient compression (multi-pod meshes only).  When on,
+    # params replicate across the pod axis (FSDP restricted to "data") and
+    # the pod-axis gradient reduction runs through
+    # distributed/collectives.compressed_pod_psum.
+    compressed_cross_pod: bool = False
+
+
+def init_state(model, rng: jax.Array, train_cfg: TrainConfig,
+               mesh=None) -> dict:
+    from repro.nn.params import init_params
+    params = init_params(model.param_specs(), rng, model.cfg.dtype)
+    state = {"params": params,
+             "opt": adamw.init(params, train_cfg.optimizer)}
+    if train_cfg.compressed_cross_pod:
+        state["err"] = collectives.init_errors(params)
+    return state
+
+
+def abstract_state(model, train_cfg: TrainConfig) -> dict:
+    """ShapeDtypeStruct version of init_state (dry-run, no allocation)."""
+    from repro.nn.params import abstract_params
+    params = abstract_params(model.param_specs(), model.cfg.dtype)
+    state = {"params": params,
+             "opt": {
+                 "step": jax.ShapeDtypeStruct((), jnp.int32),
+                 "m": jax.tree.map(
+                     lambda p: jax.ShapeDtypeStruct(
+                         p.shape, jnp.dtype(train_cfg.optimizer.m_dtype)),
+                     params),
+                 "v": jax.tree.map(
+                     lambda p: jax.ShapeDtypeStruct(
+                         p.shape, jnp.dtype(train_cfg.optimizer.v_dtype)),
+                     params),
+             }}
+    if train_cfg.compressed_cross_pod:
+        state["err"] = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return state
+
+
+def _split_microbatches(batch: dict, k: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % k == 0, (b, k)
+        return x.reshape((k, b // k) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model, train_cfg: TrainConfig, mesh=None):
+    ocfg, scfg = train_cfg.optimizer, train_cfg.schedule
+    k = train_cfg.microbatches
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if k == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        mbs = _split_microbatches(batch, k)
+
+        def body(acc, mb):
+            (_, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                               acc, grads)
+            return acc, metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        from repro.core import accounting
+        acc, metrics_stack = jax.lax.scan(
+            body, zeros, mbs, unroll=accounting.inner_unroll(k))
+        grads = jax.tree.map(lambda g: g / k, acc)
+        metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics_stack)
+        return grads, metrics
+
+    def train_step(state, batch):
+        if train_cfg.compressed_cross_pod and mesh is not None and \
+                "pod" in mesh.shape:
+            def podwise(batch, params, err):
+                grads, metrics = compute_grads(params, batch)
+                red, new_err = collectives.compressed_pod_psum(
+                    grads, err, axis="pod")
+                npods = jax.lax.psum(1, "pod")
+                grads = jax.tree.map(lambda g: g / npods, red)
+                metrics = jax.tree.map(
+                    lambda m: jax.lax.pmean(m, "pod"), metrics)
+                return grads, new_err, metrics
+
+            grads, new_err, metrics = jax.shard_map(
+                podwise, mesh=mesh, axis_names={"pod"},
+                in_specs=(P("pod"), P(), P()),
+                out_specs=(P(), P(), P()),
+                check_vma=False)(batch, state["params"], state["err"])
+        else:
+            grads, metrics = compute_grads(state["params"], batch)
+            new_err = state.get("err")
+
+        lr = sched.lr_at(state["opt"]["step"], scfg)
+        new_params, new_opt, stats = adamw.update(
+            grads, state["opt"], state["params"], lr, ocfg)
+        new_state = {"params": new_params, "opt": new_opt}
+        if new_err is not None:
+            new_state["err"] = new_err
+        metrics = dict(metrics)
+        metrics.update(stats)
+        return new_state, metrics
+
+    return train_step

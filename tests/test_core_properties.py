@@ -1,0 +1,192 @@
+"""Hypothesis property tests for the XAMBA core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pwl, reduce as xreduce, segsum, selective_scan, ssd
+from repro.core.xamba import XambaConfig
+
+SET = dict(deadline=None, max_examples=15)
+
+
+# ---------------------------------------------------------------------------
+# CumBA: the matmul remap is numerically the same op
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(t=st.integers(2, 96), rows=st.integers(1, 5),
+       seed=st.integers(0, 2**31 - 1))
+def test_cumsum_modes_agree(t, rows, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, t)), jnp.float32)
+    naive = segsum.cumsum(x, axis=-1, mode="naive")
+    cumba = segsum.cumsum(x, axis=-1, mode="cumba")
+    np.testing.assert_allclose(np.asarray(naive), np.asarray(cumba),
+                               rtol=1e-4, atol=1e-4 * t)
+
+
+@settings(**SET)
+@given(t=st.integers(2, 64), seed=st.integers(0, 2**31 - 1))
+def test_segsum_modes_agree_on_lower_triangle(t, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((2, t)) * 0.1, jnp.float32)
+    s_naive = segsum.segsum(a, mode="naive")
+    s_cumba = segsum.segsum(a, mode="cumba")
+    tril = np.tril(np.ones((t, t), bool))
+    np.testing.assert_allclose(np.asarray(s_naive)[..., tril],
+                               np.asarray(s_cumba)[..., tril],
+                               rtol=1e-4, atol=1e-4)
+    # above the diagonal both must be "-inf" (large negative)
+    assert (np.asarray(s_naive)[..., ~tril] < -1e20).all()
+    assert (np.asarray(s_cumba)[..., ~tril] < -1e20).all()
+
+
+# ---------------------------------------------------------------------------
+# ReduBA: contraction remap is numerically the same op
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(m=st.integers(1, 64), n=st.integers(1, 64),
+       seed=st.integers(0, 2**31 - 1))
+def test_reduce_modes_agree(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(xreduce.reduce_sum(x, 0, "naive")),
+        np.asarray(xreduce.reduce_sum(x, 0, "reduba")),
+        rtol=1e-4, atol=1e-4 * m)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_contract_modes_agree(seed):
+    rng = np.random.default_rng(seed)
+    l = jnp.asarray(rng.standard_normal((2, 3, 8, 2, 5)), jnp.float32)
+    r = jnp.asarray(rng.standard_normal((2, 3, 6, 2, 5)), jnp.float32)
+    a = xreduce.contract("bclgn,bcsgn->bcgls", l, r, mode="reduba")
+    b = xreduce.contract("bclgn,bcsgn->bcgls", l, r, mode="naive")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunked == exact sequential recurrence, all mode combinations
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=8)
+@given(l=st.sampled_from([32, 48, 96]), chunk=st.sampled_from([16, 32]),
+       cs=st.sampled_from(["naive", "cumba"]),
+       rd=st.sampled_from(["naive", "reduba"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_ssd_matches_sequential(l, chunk, cs, rd, seed):
+    rng = np.random.default_rng(seed)
+    b, h, p, g, n = 2, 4, 8, 2, 4
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, l, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, l, g, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, l, g, n)), jnp.float32)
+    y_ref, h_ref = ssd.ssd_reference(x, dt, A, B, C)
+    y, hT = ssd.ssd(x, dt, A, B, C, chunk_size=chunk,
+                    xamba=XambaConfig(cumba=cs, reduba=rd),
+                    return_final_state=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(h_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(deadline=None, max_examples=6)
+@given(l=st.sampled_from([16, 40]), seed=st.integers(0, 2**31 - 1))
+def test_ssd_prefill_then_decode_matches_full(l, seed):
+    """State handoff: prefill half, decode rest == one full pass."""
+    rng = np.random.default_rng(seed)
+    b, h, p, g, n = 1, 2, 4, 1, 4
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, l, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, l, g, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, l, g, n)), jnp.float32)
+    y_full, _ = ssd.ssd_reference(x, dt, A, B, C)
+    half = l // 2
+    _, state = ssd.ssd(x[:, :half], dt[:, :half], A, B[:, :half],
+                       C[:, :half], chunk_size=8, return_final_state=True)
+    ys = []
+    for t in range(half, l):
+        state, yt = ssd.ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                        B[:, t], C[:, t])
+        ys.append(yt)
+    got = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y_full[:, half:]),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Selective scan (Mamba-1)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=8)
+@given(l=st.sampled_from([32, 64]),
+       mode=st.sampled_from(["associative", "chunked"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_selective_scan_modes_match_sequential(l, mode, seed):
+    rng = np.random.default_rng(seed)
+    b, d, n = 2, 6, 4
+    u = jnp.asarray(rng.standard_normal((b, l, d)), jnp.float32)
+    delta = jnp.asarray(rng.uniform(0.001, 0.1, (b, l, d)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (d, n)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((b, l, n)), jnp.float32)
+    D = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    y_seq = selective_scan.selective_scan(u, delta, A, B, C, D,
+                                          mode="sequential")
+    y = selective_scan.selective_scan(u, delta, A, B, C, D, mode=mode,
+                                      chunk_size=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_seq),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ActiBA / PWL invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["silu", "softplus", "gelu", "sigmoid"])
+def test_pwl_error_decreases_with_segments(name):
+    errs = [pwl.pwl_error(pwl.numpy_fn(name),
+                          pwl.get_table(name, segments=k))["max_abs"]
+            for k in (4, 8, 16, 32, 64)]
+    assert all(errs[i + 1] <= errs[i] * 1.01 for i in range(len(errs) - 1))
+    assert errs[-1] < 5e-3  # the paper's "negligible loss" regime
+
+
+@pytest.mark.parametrize("name", ["silu", "softplus", "gelu", "sigmoid"])
+def test_pwl_adaptive_beats_uniform(name):
+    ad = pwl.pwl_error(pwl.numpy_fn(name),
+                       pwl.get_table(name, segments=16, adaptive=True))
+    un = pwl.pwl_error(pwl.numpy_fn(name),
+                       pwl.get_table(name, segments=16, adaptive=False))
+    assert ad["max_abs"] <= un["max_abs"] * 1.05
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1), segments=st.sampled_from([8, 16, 32]))
+def test_pwl_basis_equals_lut_form(seed, segments):
+    """The gather-free basis evaluation (TPU) == the LUT evaluation (NPU)."""
+    rng = np.random.default_rng(seed)
+    t = pwl.get_table("silu", segments=segments)
+    xs = rng.uniform(-15, 15, 257).astype(np.float32)
+    basis = np.asarray(pwl.eval_pwl(t, jnp.asarray(xs)))
+    lut = pwl.eval_pwl_reference(t, xs.astype(np.float64))
+    np.testing.assert_allclose(basis, lut, rtol=1e-4, atol=1e-4)
+
+
+def test_pwl_continuity():
+    """PLU tables must be continuous at every breakpoint."""
+    for name in ("silu", "softplus", "gelu", "sigmoid"):
+        t = pwl.get_table(name, segments=32)
+        for k, b in enumerate(t.breakpoints):
+            left = t.slopes[k] * b + t.intercepts[k]
+            right = t.slopes[k + 1] * b + t.intercepts[k + 1]
+            assert abs(left - right) < 1e-6, (name, k)

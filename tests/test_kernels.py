@@ -1,0 +1,128 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pwl
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (3, 5, 200), (1, 513),
+                                   (128, 128), (2, 2, 2, 300)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cumba_cumsum(rng, shape, dtype):
+    x = jnp.asarray(rng.standard_normal(shape), dtype)
+    got = ops.cumba_cumsum(x, interpret=True)
+    want = ref.cumsum_last_ref(x)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", [(100, 37), (7, 3, 513), (1, 8), (64, 640)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_reduba_sum(rng, shape, dtype):
+    x = jnp.asarray(rng.standard_normal(shape), dtype)
+    got = ops.reduba_sum(x, interpret=True)
+    want = jnp.sum(x.astype(jnp.float32), axis=-1).astype(dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("name", ["silu", "softplus", "gelu", "sigmoid"])
+@pytest.mark.parametrize("segments", [8, 32])
+def test_actiba_kernel_matches_table(rng, name, segments):
+    t = pwl.get_table(name, segments=segments)
+    x = jnp.asarray(rng.standard_normal((33, 257)) * 5, jnp.float32)
+    got = ops.actiba_activate(x, t, interpret=True)
+    want = ref.pwl_activate_ref(x, t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mkn", [(64, 96, 130), (128, 256, 128), (17, 40, 9)])
+@pytest.mark.parametrize("gated", [False, True])
+def test_matmul_pwl(rng, mkn, gated):
+    m, k, n = mkn
+    t = pwl.get_table("silu", segments=16)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)) * 0.1, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((k, n)) * 0.1, jnp.float32) \
+        if gated else None
+    got = ops.matmul_pwl(x, w, t, v, interpret=True)
+    want = ref.matmul_pwl_ref(x, w, t, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dims", [(2, 3, 128, 4, 16, 2, 8),
+                                  (1, 2, 256, 2, 32, 1, 16)])
+def test_ssd_chunk_kernel(rng, dims):
+    b, c, L, h, p, g, n = dims
+    x_c = jnp.asarray(rng.standard_normal((b, c, L, h, p)), jnp.float32)
+    a_c = jnp.asarray(-rng.uniform(0.001, 0.1, (b, h, c, L)), jnp.float32)
+    A_cum = jnp.cumsum(a_c, axis=-1)
+    B_c = jnp.asarray(rng.standard_normal((b, c, L, g, n)), jnp.float32)
+    C_c = jnp.asarray(rng.standard_normal((b, c, L, g, n)), jnp.float32)
+    y, st = ops.ssd_chunk(x_c, a_c, A_cum, B_c, C_c, interpret=True)
+    yr, str_ = ref.ssd_chunk_ref(x_c, a_c, A_cum, B_c, C_c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(str_),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(hq=4, hkv=2, lq=256, lk=256, causal=True, win=None),
+    dict(hq=2, hkv=2, lq=128, lk=384, causal=True, win=None),
+    dict(hq=4, hkv=1, lq=200, lk=200, causal=True, win=64),
+    dict(hq=2, hkv=2, lq=128, lk=128, causal=False, win=None),
+])
+@pytest.mark.parametrize("hd", [64, 128])
+def test_flash_attention(rng, cfg, hd):
+    q = jnp.asarray(rng.standard_normal((2, cfg["hq"], cfg["lq"], hd)),
+                    jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, cfg["hkv"], cfg["lk"], hd)),
+                    jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, cfg["hkv"], cfg["lk"], hd)),
+                    jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=cfg["causal"],
+                              window=cfg["win"], interpret=True)
+    want = ref.attention_ref(q, k, v, causal=cfg["causal"],
+                             window=cfg["win"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_grad_matches_reference(rng):
+    q = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+
+    def f_kernel(q, k, v):
+        return jnp.sum(ops.flash_attention(q, k, v, interpret=True) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v) ** 2)
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(2, 300, 70), (1, 64, 512), (3, 17, 130)])
+def test_rg_lru_scan(rng, shape):
+    a = jnp.asarray(rng.uniform(0.5, 0.999, shape), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    got = ops.rg_lru_scan(a, b, interpret=True)
+    want = ref.rg_lru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,81 @@
+"""MoE dispatch correctness: scatter/gather combine vs explicit reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig
+from repro.nn import moe
+from repro.nn.params import init_params
+
+
+def _cfg(capacity_factor=8.0):
+    return ModelConfig(name="moe", family="transformer", vocab_size=64,
+                       d_model=16, n_layers=1, moe=True, n_experts=4,
+                       n_experts_per_token=2, moe_d_ff=24,
+                       capacity_factor=capacity_factor,
+                       param_dtype="float32")
+
+
+def _reference(params, cfg, x):
+    """Dense reference: run every expert on every token, combine by gates."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d).astype(jnp.float32)
+    logits = xf @ params["router"]["w"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, cfg.n_experts_per_token)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    outs = []
+    for e in range(cfg.n_experts):
+        hi = xf @ params["wi"][e]
+        hg = xf @ params["wg"][e]
+        h = jax.nn.silu(hg) * hi
+        outs.append(h @ params["wo"][e])
+    outs = jnp.stack(outs, 1)                      # (n, e, d)
+    y = jnp.zeros_like(xf)
+    for k in range(cfg.n_experts_per_token):
+        y += gate_vals[:, k:k + 1] * jnp.take_along_axis(
+            outs, expert_ids[:, k][:, None, None].repeat(outs.shape[-1], -1),
+            axis=1)[:, 0]
+    return y.reshape(b, s, d)
+
+
+def test_moe_matches_dense_reference_without_drops(rng):
+    cfg = _cfg(capacity_factor=8.0)   # big capacity: nothing drops
+    params = init_params(moe.moe_specs(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 8, 16)), jnp.float32)
+    y, aux = moe.apply(params, cfg, x)
+    want = _reference(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_are_bounded(rng):
+    cfg = _cfg(capacity_factor=1.0)
+    params = init_params(moe.moe_specs(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, 16, 16)), jnp.float32)
+    y, _ = moe.apply(params, cfg, x)
+    ref_out = _reference(params, cfg, x)
+    # dropped tokens -> zero contribution; the rest must match the reference
+    match = np.isclose(np.asarray(y), np.asarray(ref_out),
+                       rtol=1e-3, atol=1e-3).all(axis=-1)
+    assert match.mean() > 0.3  # capacity 1.0 with top-2 keeps >~ half
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_moe_grads_flow(rng):
+    cfg = _cfg()
+    params = init_params(moe.moe_specs(cfg), jax.random.PRNGKey(0),
+                         jnp.float32)
+    x = jnp.asarray(rng.standard_normal((1, 8, 16)), jnp.float32)
+
+    def loss(p):
+        y, aux = moe.apply(p, cfg, x)
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(params)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
+    assert float(jnp.abs(g["wi"]).max()) > 0
+    assert float(jnp.abs(g["router"]["w"]).max()) > 0

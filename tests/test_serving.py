@@ -1,0 +1,156 @@
+"""Serving: prefill+decode == full forward per family; engine behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, build_model
+from repro.nn.params import init_params
+from repro.serve import Engine, ServeConfig
+
+V = 64
+
+
+def _full_logits(model, cfg, params, batch):
+    if cfg.family == "whisper":
+        enc = model.encode(params, batch["frames"])
+        from repro.nn import layers
+        tokens = batch["tokens"]
+        pos = layers.sinusoidal_positions(tokens.shape[1], cfg.d_model)
+        x = jnp.take(params["embed"]["table"], tokens, axis=0) + \
+            pos[None].astype(cfg.dtype)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
+        h, _ = model._dec_trunk(params, x, positions, enc)
+        return model._logits(params, h)
+    if cfg.family in ("mamba", "mamba2"):
+        return model.forward(params, batch["tokens"])
+    if cfg.family == "recurrentgemma":
+        x = model._embed(params, batch["tokens"])
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        h, _ = model._trunk(params, x, positions)
+        return model._logits(params, h)
+    x, positions, _ = model._embed_inputs(params, batch)
+    if cfg.scan_layers:
+        h, _, _ = model._trunk_train(params, x, positions)
+    else:
+        h, _, _ = model._trunk(params, x, positions)
+    return model._logits(params, h)
+
+
+CFGS = [
+    ModelConfig(name="dense", family="transformer", vocab_size=V, d_model=32,
+                n_layers=2, n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64,
+                param_dtype="float32"),
+    ModelConfig(name="moe", family="transformer", vocab_size=V, d_model=32,
+                n_layers=2, n_heads=4, n_kv_heads=2, head_dim=8, moe=True,
+                n_experts=4, n_experts_per_token=2, moe_d_ff=48,
+                capacity_factor=8.0, param_dtype="float32"),
+    ModelConfig(name="mamba2", family="mamba2", vocab_size=V, d_model=32,
+                n_layers=2, d_state=8, ssm_head_dim=8, chunk_size=8,
+                param_dtype="float32"),
+    ModelConfig(name="mamba1", family="mamba", vocab_size=V, d_model=32,
+                n_layers=2, d_state=8, param_dtype="float32"),
+    ModelConfig(name="rgemma", family="recurrentgemma", vocab_size=V,
+                d_model=32, n_layers=3, n_heads=4, n_kv_heads=1, head_dim=8,
+                d_ff=96, mlp_type="geglu", lru_width=32, sliding_window=8,
+                scan_layers=False, param_dtype="float32"),
+    ModelConfig(name="whisper", family="whisper", vocab_size=V, d_model=32,
+                n_layers=2, encoder_layers=1, n_heads=4, n_kv_heads=4,
+                head_dim=8, d_ff=64, mlp_type="mlp", norm_type="layernorm",
+                encoder_seq=16, scan_layers=False, param_dtype="float32"),
+]
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.name)
+def test_prefill_decode_equals_full_forward(cfg):
+    S = 24
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = init_params(model.param_specs(), rng, jnp.float32)
+    tokens = jax.random.randint(rng, (2, S), 0, V)
+    batch = {"tokens": tokens}
+    if cfg.family == "whisper":
+        batch["frames"] = jnp.ones((2, cfg.encoder_seq, cfg.d_model),
+                                   jnp.float32)
+    full = _full_logits(model, cfg, params, batch)
+
+    P = S - 4
+    cache = model.init_cache(2, S, jnp.float32)
+    pb = dict(batch, tokens=tokens[:, :P])
+    logits, cache = model.prefill(params, pb, cache)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, P - 1]),
+                               rtol=2e-4, atol=2e-4)
+    for t in range(P, S):
+        logits, cache = model.decode_step(params, tokens[:, t:t + 1], cache,
+                                          jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, t]),
+                                   rtol=5e-4, atol=5e-4, err_msg=f"t={t}")
+
+
+def test_sliding_window_ring_cache_long_decode():
+    """Decode far past the window: ring cache must equal full forward."""
+    cfg = ModelConfig(name="win", family="transformer", vocab_size=V,
+                      d_model=32, n_layers=2, n_heads=4, n_kv_heads=2,
+                      head_dim=8, d_ff=64, sliding_window=8,
+                      param_dtype="float32")
+    S = 40
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = init_params(model.param_specs(), rng, jnp.float32)
+    tokens = jax.random.randint(rng, (1, S), 0, V)
+    full = _full_logits(model, cfg, params, {"tokens": tokens})
+
+    cache = model.init_cache(1, S, jnp.float32)  # clamps to window
+    P = 16
+    logits, cache = model.prefill(params, {"tokens": tokens[:, :P]}, cache)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, P - 1]),
+                               rtol=5e-4, atol=5e-4)
+    for t in range(P, S):
+        logits, cache = model.decode_step(params, tokens[:, t:t + 1], cache,
+                                          jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, t]),
+                                   rtol=1e-3, atol=1e-3, err_msg=f"t={t}")
+
+
+def test_engine_greedy_matches_manual_decode():
+    cfg = CFGS[2]  # mamba2
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    prompts = [list(range(1, 17)) for _ in range(2)]  # equal lengths
+    engine = Engine(model, params, ServeConfig(
+        max_batch=2, prefill_buckets=(16,), max_new_tokens=6))
+    for p in prompts:
+        engine.submit(p)
+    done = engine.run()
+
+    # manual greedy
+    cache = model.init_cache(2, 16 + 6, jnp.float32)
+    toks = jnp.asarray(prompts, jnp.int32)
+    logits, cache = model.prefill(params, {"tokens": toks}, cache)
+    cur = jnp.argmax(logits, -1)
+    outs = [[int(c)] for c in cur]
+    for t in range(1, 6):
+        logits, cache = model.decode_step(params, cur[:, None], cache,
+                                          jnp.int32(16 + t - 1))
+        cur = jnp.argmax(logits, -1)
+        for i in range(2):
+            outs[i].append(int(cur[i]))
+    for r, manual in zip(done, outs):
+        assert r.out_tokens == manual
+
+
+def test_engine_eos_and_stats():
+    cfg = CFGS[0]
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    engine = Engine(model, params, ServeConfig(
+        max_batch=2, prefill_buckets=(8, 16), max_new_tokens=4))
+    engine.submit([1, 2, 3])
+    engine.submit([4, 5, 6, 7, 8, 9])
+    done = engine.run()
+    assert len(done) == 2 and all(r.done for r in done)
+    stats = engine.stats(done)
+    assert stats["generated_tokens"] == sum(len(r.out_tokens) for r in done)

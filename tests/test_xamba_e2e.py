@@ -1,0 +1,82 @@
+"""End-to-end XAMBA behaviour on the paper's models (reduced configs):
+
+* CumBA + ReduBA are *exact* remaps — logits must match the naive baseline.
+* ActiBA is the accuracy/performance trade — logit divergence must be small
+  and shrink as PLU segment count grows (Table 1's mechanism).
+* The Pallas (interpret) kernel path must agree with the XLA path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.xamba import XambaConfig
+from repro.models import build_model
+from repro.nn.params import init_params
+
+
+def _logits(arch, xamba, tokens, params=None):
+    cfg = get_config(arch, reduced=True).replace(
+        param_dtype="float32", xamba=xamba)
+    model = build_model(cfg)
+    if params is None:
+        params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                             jnp.float32)
+    return np.asarray(model.forward(params, tokens)), params
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "mamba-130m"])
+def test_cumba_reduba_exactness(arch):
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0, 512)
+    base, params = _logits(arch, XambaConfig.baseline(), tokens)
+    opt, _ = _logits(arch, XambaConfig.optimized(), tokens, params)
+    np.testing.assert_allclose(base, opt, rtol=1e-3, atol=1e-3)
+
+
+def test_pallas_kernel_path_matches_xla(rng):
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 64), 0, 512)
+    base, params = _logits("mamba2-130m", XambaConfig.optimized(), tokens)
+    # pallas path requires chunk_size % 128 == 0; reduced cfg uses 32, so
+    # the SSD falls back to cumba for segsum but rg/actiba kernels engage.
+    pal, _ = _logits("mamba2-130m",
+                     XambaConfig(cumba="pallas_interpret",
+                                 reduba="pallas_interpret"),
+                     tokens, params)
+    np.testing.assert_allclose(base, pal, rtol=2e-3, atol=2e-3)
+
+
+def test_actiba_divergence_small_and_shrinks():
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 48), 0, 512)
+    exact, params = _logits("mamba2-130m", XambaConfig.optimized(), tokens)
+
+    divs = []
+    # (random-init logits are nearly flat, so argmax is sensitive; trained
+    # models in Table 1 show ~no change.  Thresholds scale with segments.)
+    for segments, min_agree in ((8, 0.8), (32, 0.9)):
+        approx, _ = _logits(
+            "mamba2-130m",
+            XambaConfig(cumba="cumba", reduba="reduba", actiba=True,
+                        actiba_segments=segments),
+            tokens, params)
+        # top-1 agreement (the Table-1 quality proxy)
+        agree = (exact.argmax(-1) == approx.argmax(-1)).mean()
+        divs.append(np.abs(exact - approx).mean())
+        assert agree > min_agree, (segments, agree)
+    assert divs[1] <= divs[0] * 1.5  # more segments -> no worse
+
+
+def test_actiba_applies_to_attention_archs_too():
+    """ActiBA touches SwiGLU/GeGLU models (the applicable technique)."""
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 32), 0, 512)
+    cfg = get_config("gemma-2b", reduced=True).replace(param_dtype="float32")
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    batch = {"tokens": tokens, "labels": tokens}
+    loss_exact = float(model.loss(params, batch)[0])
+
+    cfg2 = cfg.replace(xamba=XambaConfig.full(segments=32))
+    model2 = build_model(cfg2)
+    loss_pwl = float(model2.loss(params, batch)[0])
+    assert abs(loss_exact - loss_pwl) < 0.05, (loss_exact, loss_pwl)
