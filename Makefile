@@ -1,0 +1,17 @@
+# Tier-1 verification + serving smoke, runnable locally and from CI.
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test smoke-serve bench-serve ci
+
+test:
+	$(PY) -m pytest -x -q
+
+smoke-serve:
+	$(PY) -m repro.launch.serve --arch mamba2-130m --reduced \
+	    --engine continuous --requests 4 --batch 2 --max-new 4
+
+bench-serve:
+	PYTHONPATH=src:. $(PY) -m benchmarks.bench_serve_continuous
+
+ci: test smoke-serve

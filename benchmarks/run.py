@@ -9,7 +9,7 @@ import argparse
 import sys
 import traceback
 
-BENCHES = ("fig1", "fig4a", "fig4c", "table1", "kpi", "roofline")
+BENCHES = ("fig1", "fig4a", "fig4c", "table1", "kpi", "roofline", "serve")
 
 
 def main() -> None:
@@ -35,6 +35,8 @@ def main() -> None:
                 from benchmarks import bench_kpi_decode as m
             elif key == "roofline":
                 from benchmarks import roofline as m
+            elif key == "serve":
+                from benchmarks import bench_serve_continuous as m
             else:
                 raise ValueError(f"unknown benchmark {key!r}")
             m.run()

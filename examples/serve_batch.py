@@ -1,9 +1,11 @@
-"""Batched serving through the static-shape engine (paper Step-1).
+"""Batched serving through the static-shape engines (paper Step-1).
 
-Shows bucketed prefill + wave decoding across mixed prompt lengths, for
-both an SSM (mamba2) and an attention arch (gemma-like reduced config).
+Shows bucketed prefill + decoding across mixed prompt lengths, with
+either the lockstep wave engine or the continuous-batching engine
+(``--engine continuous``: finished slots refill mid-decode).
 
-    PYTHONPATH=src python examples/serve_batch.py --arch mamba2-130m
+    PYTHONPATH=src python examples/serve_batch.py --arch mamba2-130m \
+        --engine continuous
 """
 import argparse
 import time
@@ -14,12 +16,14 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.nn.params import init_params
-from repro.serve import Engine, Request, ServeConfig
+from repro.serve import ContinuousEngine, Engine, Request, ServeConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--engine", choices=("wave", "continuous"),
+                    default="wave")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
@@ -29,7 +33,8 @@ def main():
     model = build_model(cfg)
     params = init_params(model.param_specs(), jax.random.PRNGKey(0),
                          cfg.dtype)
-    engine = Engine(model, params, ServeConfig(
+    engine_cls = ContinuousEngine if args.engine == "continuous" else Engine
+    engine = engine_cls(model, params, ServeConfig(
         max_batch=4, prefill_buckets=(16, 64, 128),
         max_new_tokens=args.max_new, temperature=args.temperature))
 

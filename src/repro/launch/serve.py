@@ -1,5 +1,6 @@
 """Serving driver: ``python -m repro.launch.serve --arch mamba2-130m
---reduced`` — batched requests through the static-shape engine."""
+--reduced [--engine continuous]`` — batched requests through the
+static-shape serve subsystem (wave or continuous-batching engine)."""
 from __future__ import annotations
 
 import argparse
@@ -11,7 +12,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.nn.params import init_params
-from repro.serve import Engine, ServeConfig
+from repro.serve import ContinuousEngine, Engine, ServeConfig
 
 log = logging.getLogger("repro.serve")
 
@@ -20,11 +21,15 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-130m")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--engine", choices=("wave", "continuous"),
+                    default="wave")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--policy", choices=("fcfs", "priority"),
+                    default="fcfs")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO, format="%(message)s")
@@ -33,10 +38,12 @@ def main(argv=None):
     model = build_model(cfg)
     params = init_params(model.param_specs(), jax.random.PRNGKey(args.seed),
                          cfg.dtype)
-    engine = Engine(model, params, ServeConfig(
+    scfg = ServeConfig(
         max_batch=args.batch, prefill_buckets=(32, 128),
         max_new_tokens=args.max_new, temperature=args.temperature,
-        seed=args.seed))
+        seed=args.seed, policy=args.policy)
+    engine_cls = ContinuousEngine if args.engine == "continuous" else Engine
+    engine = engine_cls(model, params, scfg)
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -47,6 +54,11 @@ def main(argv=None):
         log.info("req %d: %d prompt toks -> %s%s", r.uid, len(r.prompt),
                  r.out_tokens[:8], "..." if len(r.out_tokens) > 8 else "")
     log.info("stats: %s", engine.stats(done))
+    m = engine.metrics.summary()
+    log.info("occupancy: %.2f  ttft_mean_s: %.4f  goodput_tok_s: %.1f",
+             m["slot_occupancy"], m["ttft_mean_s"],
+             m["goodput_tokens_per_s"])
+    log.info("compile counters: %s", engine.counters)
     return done
 
 

@@ -148,7 +148,10 @@ class MambaLM:
         return logits[:, 0], new_states
 
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
-        del index  # recurrence carries position implicitly
+        """index: () or (b,) — accepted for engine uniformity and ignored;
+        the recurrence carries position implicitly, which is why SSM slots
+        are trivially relocatable under continuous batching."""
+        del index
         x = layers.embed(params["embed"], token)
         x, new_states = self._trunk(params, x, cache)
         logits = self._logits(params, x)

@@ -181,8 +181,13 @@ class RecurrentGemma:
         return logits[:, 0], new_caches
 
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
+        """index: () or (b,) int32 — per-row positions realign the local
+        attention layers (RG-LRU layers carry position in their state)."""
         x = self._embed(params, token)
-        positions = jnp.full((token.shape[0], 1), index, jnp.int32)
+        idx = jnp.asarray(index, jnp.int32)
+        positions = jnp.broadcast_to(
+            idx.reshape(-1, 1) if idx.ndim else idx,
+            (token.shape[0], 1))
         x, new_caches = self._trunk(params, x, positions, cache,
                                     cache_index=index)
         logits = self._logits(params, x)

@@ -190,12 +190,20 @@ class TransformerLM:
         return logits[:, 0], new_caches
 
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
-        """token: (b, 1); index: () int32 — position of this token."""
+        """token: (b, 1); index: () or (b,) int32 — position of this token.
+
+        A vector index gives every batch row its own position (continuous
+        batching: slots prefilled at different buckets decode at different
+        offsets); RoPE and the KV-cache write both realign per row.
+        """
         cfg = self.cfg
         x = layers.embed(params["embed"], token)
         if cfg.embed_scale:
             x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
-        positions = jnp.full((token.shape[0], 1), index, jnp.int32)
+        idx = jnp.asarray(index, jnp.int32)
+        positions = jnp.broadcast_to(
+            idx.reshape(-1, 1) if idx.ndim else idx,
+            (token.shape[0], 1))
         x, new_caches, _ = self._trunk(params, x, positions, cache,
                                        cache_index=index)
         logits = self._logits(params, x)

@@ -168,8 +168,10 @@ def decode_attention(q: Array, cache: KVCache, cache_len: Array, *,
                      logit_softcap: Optional[float] = None) -> Array:
     """Single-position query against the cache.
 
-    q: (b, 1, nq, hd); cache k/v: (b, T, nkv, hd); cache_len: () int32 —
-    number of valid positions (the new token's kv must already be written).
+    q: (b, 1, nq, hd); cache k/v: (b, T, nkv, hd); cache_len: () or (b,)
+    int32 — number of valid positions per row (the new token's kv must
+    already be written).  A vector cache_len lets continuous-batching slots
+    sit at different offsets.
     """
     b, _, nq, hd = q.shape
     T, nkv = cache.k.shape[1], cache.k.shape[2]
@@ -178,11 +180,14 @@ def decode_attention(q: Array, cache: KVCache, cache_len: Array, *,
     s = jnp.einsum("bsgqd,btgd->bgqst", qg, cache.k.astype(jnp.float32))
     if logit_softcap is not None:
         s = jnp.tanh(s / logit_softcap) * logit_softcap
+    cl = jnp.asarray(cache_len, jnp.int32)
+    if cl.ndim == 0:
+        cl = jnp.full((b,), cl)
     k_ids = jnp.arange(T)[None, :]
-    valid = k_ids < cache_len
+    valid = k_ids < cl[:, None]
     if window is not None:
-        valid &= k_ids > (cache_len - 1 - window)
-    s = jnp.where(valid[None, None, None], s, -1e30)
+        valid &= k_ids > (cl[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgqst,btgd->bsgqd", p, cache.v.astype(jnp.float32))
     return out.reshape(q.shape).astype(q.dtype)
@@ -259,14 +264,21 @@ def apply(params: dict, cfg, x: Array, *, positions: Array,
             out = decode_attention(q, cache, cache_len,
                                    logit_softcap=cfg.attn_logit_softcap)
         else:
-            idx = cache_index
+            # cache_index: () — all rows at one position (wave decode) — or
+            # (b,) — per-row positions (continuous-batching slots).
+            idx = jnp.asarray(cache_index, jnp.int32)
             T = cache.k.shape[1]
             ring = window is not None and T == window
             slot = jnp.mod(idx, T) if ring else idx
-            ck = jax.lax.dynamic_update_slice(
-                cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+            if idx.ndim:
+                rows = jnp.arange(k.shape[0])
+                ck = cache.k.at[rows, slot].set(k[:, 0].astype(cache.k.dtype))
+                cv = cache.v.at[rows, slot].set(v[:, 0].astype(cache.v.dtype))
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
             new_cache = KVCache(ck, cv)
             cache_len = jnp.minimum(idx + 1, T) if ring else idx + 1
             out = decode_attention(

@@ -1,1 +1,18 @@
-from repro.serve.engine import Engine, Request, ServeConfig  # noqa: F401
+"""Serving subsystem: static-shape engines over a shared slot/state pool.
+
+Two engines share one set of building blocks:
+
+* :class:`Engine` (``engine.py``) — wave policy: lockstep batches.
+* :class:`ContinuousEngine` (``continuous.py``) — slot policy: finished
+  slots are refilled from the queue mid-decode (continuous batching).
+
+Building blocks: :class:`Scheduler` (admission / priorities / deadlines),
+:class:`StatePool` (per-slot cache rows with scatter/gather primitives),
+:class:`ServeMetrics` (TTFT / occupancy / goodput), ``sampling``
+(vectorized Gumbel-max).  See ``docs/serving.md``.
+"""
+from repro.serve.continuous import ContinuousEngine  # noqa: F401
+from repro.serve.engine import Engine, ServeConfig  # noqa: F401
+from repro.serve.metrics import ServeMetrics  # noqa: F401
+from repro.serve.scheduler import Request, Scheduler, bucket_for  # noqa: F401
+from repro.serve.state_pool import StatePool  # noqa: F401

@@ -1,0 +1,196 @@
+"""Continuous-batching engine: slot-level refill under static shapes.
+
+The wave engine decodes lockstep batches: one straggler request holds
+every finished slot hostage, and queued requests wait for the whole wave
+to drain.  This engine keeps ``max_batch`` persistent *slots* backed by a
+:class:`~repro.serve.state_pool.StatePool`; the moment a slot's request
+finishes (EOS / token budget), the scheduler admits the next queued
+request into that slot mid-decode.
+
+Compile-once discipline (the paper's Step-1 constraint) is preserved with
+exactly three compiled programs (plus one prefill variant per bucket):
+
+* **decode**  — ``(params, tok (slots,1), cache, pos (slots,))``; the
+  position vector gives every slot its own offset, so freshly admitted
+  requests decode next to old ones without recompiling.  Dead slots keep
+  decoding into a sink row (static shapes, zero recompiles).
+* **prefill** — per-bucket, always at batch ``slots`` (unused rows are
+  padding): a refill of one slot reuses the same program as a full wave.
+* **insert**  — the pool's row scatter moves a prefilled request's state
+  (SSM state + conv tail / KV rows) into its slot; slot index is traced.
+
+Position realignment: a request prefilled at bucket ``B`` starts decoding
+at position ``B`` regardless of what its neighbours are doing — SSM rows
+carry position in their state, attention rows take the per-row position
+vector (RoPE + KV write + causal mask all realign per row).
+"""
+from __future__ import annotations
+
+import logging
+import time
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import EngineBase, ServeConfig
+from repro.serve.scheduler import Request, bucket_for
+from repro.serve.state_pool import StatePool
+
+log = logging.getLogger("repro.serve")
+
+
+class ContinuousEngine(EngineBase):
+    """Slot-scheduled serving over a shared per-slot state pool."""
+
+    def __init__(self, model, params, cfg: ServeConfig):
+        super().__init__(model, params, cfg)
+        self.slots = cfg.max_batch
+        self.buckets = tuple(sorted(cfg.prefill_buckets))
+        # One static cache length covers every tenant a slot can host.
+        self.max_seq = self.buckets[-1] + cfg.max_new_tokens
+        dtype = model.cfg.dtype
+        self.pool = StatePool(model, self.slots, self.max_seq, dtype)
+        # Zeroed prefill input cache, reused by every admission (prefill is
+        # functional; its output rows are scattered into the pool).
+        self._scratch = model.init_cache(self.slots, self.max_seq, dtype)
+        self.scheduler = self._scheduler
+        self._slot_req: List[Optional[Request]] = [None] * self.slots
+        self._pos = np.zeros(self.slots, np.int32)
+        self._next_tok = np.full(self.slots, cfg.pad_id, np.int32)
+        self._finished: List[Request] = []
+
+    def _buckets(self):
+        return self.buckets
+
+    @property
+    def busy(self) -> bool:
+        return (len(self.scheduler) > 0 or
+                any(r is not None for r in self._slot_req))
+
+    @property
+    def counters(self) -> dict:
+        return {**super().counters,
+                **{f"pool_{k}_compiles": v
+                   for k, v in self.pool.compile_counts().items()}}
+
+    # ------------------------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._slot_req) if r is None]
+
+    def _finish(self, req: Request, now: float) -> None:
+        req.done = True
+        req.finish_s = now
+        req.latency_s = now - req.arrival_s
+        self.metrics.record_finish(req.latency_s, len(req.out_tokens))
+        self._finished.append(req)
+
+    def _admit(self, now: float) -> int:
+        """Fill free slots from the queue; returns requests admitted."""
+        cfg = self.cfg
+        free = self._free_slots()
+        n_shed0 = len(self.scheduler.expired)
+        batch = []
+        while free and len(self.scheduler):
+            req = self.scheduler.pop_ready(now)
+            if req is None:
+                break
+            batch.append((free.pop(0), req))
+        for _ in range(len(self.scheduler.expired) - n_shed0):
+            self.metrics.record_shed()
+        if not batch:
+            return 0
+
+        groups = {}
+        for slot, req in batch:
+            b, _ = bucket_for(self.buckets, len(req.prompt))
+            groups.setdefault(b, []).append((slot, req))
+
+        for bucket, group in groups.items():
+            tokens = np.full((self.slots, bucket), cfg.pad_id, np.int32)
+            for row, (_, req) in enumerate(group):
+                p = req.prompt[-bucket:]
+                tokens[row, bucket - len(p):] = p
+            logits, cache = self._prefill(
+                self.params, {"tokens": jnp.asarray(tokens)}, self._scratch)
+            first = self._sample(logits)
+            self.pool.insert_rows(cache,
+                                  [row for row in range(len(group))],
+                                  [slot for slot, _ in group])
+            t_first = time.time()
+            for row, (slot, req) in enumerate(group):
+                req.bucket = bucket
+                budget = max(1, min(req.max_new_tokens,
+                                    self.max_seq - bucket))
+                if budget < req.max_new_tokens:
+                    log.warning(
+                        "request %d: max_new_tokens %d exceeds slot budget; "
+                        "clamping to %d", req.uid, req.max_new_tokens, budget)
+                    req.max_new_tokens = budget
+                tok = int(first[row])
+                req.first_token_s = t_first
+                self.metrics.record_first_token(t_first - req.arrival_s)
+                self.metrics.record_token()
+                req.emit(tok)
+                if (cfg.eos_id >= 0 and tok == cfg.eos_id) or \
+                        len(req.out_tokens) >= req.max_new_tokens:
+                    # EOS on the prefill token (or a 1-token budget): the
+                    # request never occupies a decode step; slot stays free.
+                    self._finish(req, t_first)
+                else:
+                    self._slot_req[slot] = req
+                    self._pos[slot] = bucket
+                    self._next_tok[slot] = tok
+        return len(batch)
+
+    # ------------------------------------------------------------------
+    def poll(self) -> List[Request]:
+        """Admit waiting requests into free slots, then run one decode
+        step across all slots; returns requests completed this poll."""
+        cfg = self.cfg
+        done0 = len(self._finished)
+        now = time.time()
+        # Re-admit until slots are full or the queue drains (a request that
+        # EOS'd on its prefill token frees its slot immediately).
+        while self._free_slots() and len(self.scheduler):
+            if not self._admit(now):
+                break
+            now = time.time()
+
+        live = [i for i, r in enumerate(self._slot_req) if r is not None]
+        if live:
+            t0 = time.perf_counter()
+            logits, cache = self._decode(
+                self.params, jnp.asarray(self._next_tok[:, None]),
+                self.pool.cache, jnp.asarray(self._pos))
+            nxt = self._sample(logits)
+            self.pool.cache = cache
+            self.metrics.record_step(len(live), time.perf_counter() - t0)
+            # Dead slots decode into a sink: their position pins to the last
+            # cache column until a refill overwrites the whole row.
+            self._pos = np.minimum(self._pos + 1, self.max_seq - 1)
+            now = time.time()
+            for i in live:
+                req = self._slot_req[i]
+                tok = int(nxt[i])
+                req.emit(tok)
+                self.metrics.record_token()
+                self._next_tok[i] = tok
+                if (cfg.eos_id >= 0 and tok == cfg.eos_id) or \
+                        len(req.out_tokens) >= req.max_new_tokens:
+                    self._finish(req, now)
+                    self._slot_req[i] = None
+        return self._finished[done0:]
+
+    def run(self) -> List[Request]:
+        """Serve until queue and slots drain; returns completed requests."""
+        t0 = time.perf_counter()
+        done: List[Request] = []
+        while self.busy:
+            done.extend(self.poll())
+        self.metrics.record_wall(time.perf_counter() - t0)
+        return done
+
+    def stats(self, requests: Optional[List[Request]] = None) -> dict:
+        del requests  # parity with Engine.stats; metrics already aggregate
+        return self.metrics.summary()

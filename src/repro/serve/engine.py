@@ -1,26 +1,26 @@
-"""Static-shape serving engine — the paper's Step-1 as a subsystem.
+"""Wave-mode serving engine — lockstep batches over the shared state pool.
 
 NPUs (and jit) require fixed shapes, so the paper enables SSMs with a
 fixed-token prefill model (padding shorter inputs) plus a separate
-cached-state decode model.  This engine generalizes that to every assigned
-architecture:
+cached-state decode model.  The serve subsystem realizes that discipline
+twice, over the same building blocks (``scheduler`` admission, ``sampling``,
+``state_pool`` allocation, ``metrics``):
 
-* **Bucketed prefill**: prompts left-pad to the smallest configured bucket;
-  one compiled prefill program per bucket (compile-once, reuse forever).
-* **Wave decoding**: requests are grouped into fixed-size batches that
-  decode in lockstep with a single compiled decode program; EOS'd rows keep
-  decoding into a sink but stop being reported (static shapes, zero
-  recompile).
-* Caches are whatever the model family needs — KV ring buffers, SSM states,
-  conv states — allocated once per wave.
+* **this module** — *wave* policy: requests are grouped into fixed-size
+  batches that prefill together (bucketed, left-padded) and decode in
+  lockstep; EOS'd rows keep decoding into a sink but stop being reported.
+  Simple, but a straggler holds every finished slot until the wave drains.
+* **``continuous``** — slot policy: finished slots are refilled from the
+  queue mid-decode (see ``repro/serve/continuous.py``).
 
-Left-padding keeps every live request aligned at the same position index,
-which is what lets SSM (position-free) and attention (position-indexed)
-families share one engine.
+Left-padding keeps every live request in a wave aligned at the same
+position index, which is what lets SSM (position-free) and attention
+(position-indexed) families share one engine.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -28,7 +28,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve import sampling
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import (Request, Scheduler, bucket_for,
+                                   build_request)
+from repro.serve.state_pool import StatePool, jit_cache_size
+
 Array = jax.Array
+log = logging.getLogger("repro.serve")
 
 
 @dataclasses.dataclass
@@ -40,19 +47,15 @@ class ServeConfig:
     pad_id: int = 0
     temperature: float = 0.0    # 0 => greedy
     seed: int = 0
+    policy: str = "fcfs"        # admission order: fcfs | priority
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: List[int]
-    max_new_tokens: int
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    latency_s: float = 0.0
+class EngineBase:
+    """Plumbing shared by the wave and continuous engines: the two jitted
+    programs, uid / sampling-step counters, submit-time bookkeeping, and
+    compile counters.  Subclasses provide the serving policy (``run``)
+    and must create ``self._scheduler``."""
 
-
-class Engine:
     def __init__(self, model, params, cfg: ServeConfig):
         self.model = model
         self.params = params
@@ -61,43 +64,82 @@ class Engine:
             lambda p, batch, cache: model.prefill(p, batch, cache))
         self._decode = jax.jit(
             lambda p, tok, cache, idx: model.decode_step(p, tok, cache, idx))
+        self._scheduler = Scheduler(getattr(cfg, "policy", "fcfs"))
         self._uid = 0
-        self._queue: List[Request] = []
-        self._rng = np.random.default_rng(cfg.seed)
+        self._step = 0              # sampling-rng step counter
+        self.metrics = ServeMetrics(cfg.max_batch)
 
-    # ------------------------------------------------------------------
+    def _buckets(self) -> Sequence[int]:
+        return self.cfg.prefill_buckets
+
     def submit(self, prompt: Sequence[int],
-               max_new_tokens: Optional[int] = None) -> int:
+               max_new_tokens: Optional[int] = None, *,
+               priority: int = 0, deadline_s: Optional[float] = None,
+               on_token=None) -> int:
         self._uid += 1
-        self._queue.append(Request(
-            uid=self._uid, prompt=list(prompt),
-            max_new_tokens=max_new_tokens or self.cfg.max_new_tokens))
-        return self._uid
+        req = build_request(
+            self._uid, prompt,
+            max_new_tokens or self.cfg.max_new_tokens,
+            priority=priority, deadline_s=deadline_s, on_token=on_token,
+            buckets=self._buckets(), metrics=self.metrics)
+        self._scheduler.submit(req)
+        return req.uid
+
+    def _sample(self, logits) -> np.ndarray:
+        out = sampling.sample(np.asarray(logits, np.float32),
+                              self.cfg.temperature,
+                              sampling.step_rng(self.cfg.seed, self._step))
+        self._step += 1
+        return out
+
+    @property
+    def busy(self) -> bool:
+        return len(self._scheduler) > 0
+
+    @property
+    def counters(self) -> dict:
+        return {"decode_compiles": jit_cache_size(self._decode),
+                "prefill_compiles": jit_cache_size(self._prefill)}
+
+    @property
+    def expired(self) -> List[Request]:
+        """Requests shed because their deadline passed while queued."""
+        return self._scheduler.expired
+
+    def reset_stats(self) -> None:
+        """Drop accumulated metrics (e.g. after a compile warmup)."""
+        self.metrics.reset()
+
+
+class Engine(EngineBase):
+    def __init__(self, model, params, cfg: ServeConfig):
+        super().__init__(model, params, cfg)
+        self._wall_s = 0.0          # summed sequential wave wall time
 
     def _bucket_for(self, length: int) -> int:
-        for b in self.cfg.prefill_buckets:
-            if length <= b:
-                return b
-        return self.cfg.prefill_buckets[-1]
+        return bucket_for(self.cfg.prefill_buckets, length)[0]
 
-    def _sample(self, logits: np.ndarray) -> np.ndarray:
-        if self.cfg.temperature <= 0.0:
-            return np.argmax(logits, axis=-1).astype(np.int32)
-        z = logits / self.cfg.temperature
-        z = z - z.max(axis=-1, keepdims=True)
-        p = np.exp(z)
-        p /= p.sum(axis=-1, keepdims=True)
-        return np.array([self._rng.choice(p.shape[-1], p=row)
-                         for row in p], np.int32)
+    def reset_stats(self) -> None:
+        self._wall_s = 0.0
+        super().reset_stats()
 
     # ------------------------------------------------------------------
     def run(self) -> List[Request]:
         """Serve everything in the queue; returns completed requests."""
         done: List[Request] = []
-        while self._queue:
-            wave = self._queue[:self.cfg.max_batch]
-            self._queue = self._queue[self.cfg.max_batch:]
-            done.extend(self._run_wave(wave))
+        while len(self._scheduler):
+            wave: List[Request] = []
+            now = time.time()
+            n_shed0 = len(self._scheduler.expired)
+            while len(wave) < self.cfg.max_batch and len(self._scheduler):
+                req = self._scheduler.pop_ready(now)
+                if req is None:
+                    break
+                wave.append(req)
+            for _ in range(len(self._scheduler.expired) - n_shed0):
+                self.metrics.record_shed()
+            if wave:
+                done.extend(self._run_wave(wave))
         return done
 
     def _run_wave(self, wave: List[Request]) -> List[Request]:
@@ -111,45 +153,76 @@ class Engine:
         # Left-pad prompts into the bucket (static shape).
         tokens = np.full((b, bucket), cfg.pad_id, np.int32)
         for i, r in enumerate(wave):
+            r.bucket = bucket
             p = r.prompt[-bucket:]
             tokens[i, bucket - len(p):] = p
 
-        cache = self.model.init_cache(b, bucket + max_new,
-                                      self.model.cfg.dtype)
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(tokens)},
-                                      cache)
+        # Wave policy over the shared pool: allocate a slot block for this
+        # wave's lifetime (the continuous engine keeps one pool forever).
+        # The cache length is padded to the configured budget so per-wave
+        # max_new variation doesn't change compiled shapes for attention
+        # families (compile-once per bucket).
+        pool = StatePool(self.model, b,
+                         bucket + max(self.cfg.max_new_tokens, max_new),
+                         self.model.cfg.dtype)
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(tokens)},
+                                      pool.cache)
         next_tok = self._sample(np.asarray(logits, np.float32))
 
+        def finish(r: Request) -> None:
+            r.done = True
+            r.finish_s = time.time()
+            r.latency_s = r.finish_s - r.arrival_s
+            self.metrics.record_finish(r.latency_s, len(r.out_tokens))
+
         alive = np.array([True] * len(wave) + [False] * (b - len(wave)))
+        t_first = time.time()
         for i, r in enumerate(wave):
-            r.out_tokens.append(int(next_tok[i]))
-            if cfg.eos_id >= 0 and next_tok[i] == cfg.eos_id:
-                r.done = True
+            r.first_token_s = t_first
+            self.metrics.record_first_token(t_first - r.arrival_s)
+            self.metrics.record_token()
+            r.emit(int(next_tok[i]))
+            if (cfg.eos_id >= 0 and next_tok[i] == cfg.eos_id) or \
+                    r.max_new_tokens == 1:
                 alive[i] = False
+                finish(r)
 
         for t in range(1, max_new):
+            if not alive[:len(wave)].any():
+                break
+            ts0 = time.perf_counter()
             tok = jnp.asarray(next_tok[:, None])
             logits, cache = self._decode(self.params, tok, cache,
                                          jnp.int32(bucket + t - 1))
             next_tok = self._sample(np.asarray(logits, np.float32))
+            self.metrics.record_step(int(alive[:len(wave)].sum()),
+                                     time.perf_counter() - ts0)
             for i, r in enumerate(wave):
                 if alive[i] and len(r.out_tokens) < r.max_new_tokens:
-                    r.out_tokens.append(int(next_tok[i]))
-                    if cfg.eos_id >= 0 and next_tok[i] == cfg.eos_id:
+                    r.emit(int(next_tok[i]))
+                    self.metrics.record_token()
+                    if (cfg.eos_id >= 0 and next_tok[i] == cfg.eos_id) or \
+                            len(r.out_tokens) >= r.max_new_tokens:
                         alive[i] = False
-                        r.done = True
-            if not alive[:len(wave)].any():
-                break
+                        finish(r)
 
-        dt = time.time() - t0
         for r in wave:
-            r.done = True
-            r.latency_s = dt
+            if not r.done:
+                finish(r)
+        dt = time.time() - t0
+        self._wall_s += dt
+        self.metrics.record_wall(dt)
         return wave
 
     # ------------------------------------------------------------------
     def stats(self, requests: List[Request]) -> Dict[str, float]:
+        """Throughput over the *summed* sequential wave time (waves run one
+        after another; the old max-latency denominator over-reported
+        tokens/s whenever there was more than one wave)."""
         toks = sum(len(r.out_tokens) for r in requests)
-        wall = max(r.latency_s for r in requests) if requests else 0.0
+        wall = self._wall_s or (max((r.latency_s for r in requests),
+                                    default=0.0))
         return {"requests": len(requests), "generated_tokens": toks,
-                "tokens_per_s": toks / wall if wall else 0.0}
+                "tokens_per_s": toks / wall if wall else 0.0,
+                "wall_s": wall}

@@ -1,0 +1,104 @@
+"""Serving metrics: TTFT, per-token latency, slot occupancy, goodput.
+
+Event-driven so both engines can feed it: the engine stamps arrivals,
+first tokens, emitted tokens, completions, and per-decode-step occupancy;
+``summary()`` folds those into the serving KPIs the benchmarks compare.
+
+Definitions:
+
+* **TTFT**          — arrival to first emitted token (includes queueing).
+* **token latency** — decode wall time / decode tokens (steady-state
+  inter-token gap).
+* **occupancy**     — live-slot-seconds / (slots x decode time): the
+  fraction of *decode-step* slot capacity that produced tokens (prefill
+  and host time are excluded by construction, so it isolates the decode
+  scheduling policy).  The wave engine's straggler holes show up
+  directly here.
+* **goodput**       — tokens of *completed* requests per second of wall
+  time (tokens of shed / unfinished requests don't count).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    i = min(len(ys) - 1, int(round(q * (len(ys) - 1))))
+    return ys[i]
+
+
+class ServeMetrics:
+    def __init__(self, slots: int):
+        self.slots = max(1, slots)
+        self.reset()
+
+    def reset(self) -> None:
+        self.arrivals = 0
+        self.completed = 0
+        self.shed = 0
+        self.truncated = 0
+        self.emitted_tokens = 0
+        self.completed_tokens = 0
+        self.ttft_s: List[float] = []
+        self.latency_s: List[float] = []
+        self.decode_steps = 0
+        self.decode_time_s = 0.0
+        self.live_slot_s = 0.0
+        self.wall_s = 0.0
+
+    # -- event hooks -------------------------------------------------------
+    def record_arrival(self) -> None:
+        self.arrivals += 1
+
+    def record_first_token(self, ttft_s: float) -> None:
+        self.ttft_s.append(ttft_s)
+
+    def record_token(self, n: int = 1) -> None:
+        self.emitted_tokens += n
+
+    def record_finish(self, latency_s: float, n_tokens: int) -> None:
+        self.completed += 1
+        self.completed_tokens += n_tokens
+        self.latency_s.append(latency_s)
+
+    def record_shed(self) -> None:
+        self.shed += 1
+
+    def record_step(self, live_slots: int, dt_s: float) -> None:
+        """One decode step: ``live_slots`` rows produced useful tokens."""
+        self.decode_steps += 1
+        self.decode_time_s += dt_s
+        self.live_slot_s += live_slots * dt_s
+
+    def record_wall(self, dt_s: float) -> None:
+        self.wall_s += dt_s
+
+    # -- rollup ------------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        """Throughput figures use recorded wall time; when the caller never
+        stamped one (poll()-style driving), decode time is the best
+        available denominator and throughput is an upper bound."""
+        wall = self.wall_s or self.decode_time_s
+        return {
+            "requests": self.arrivals,
+            "completed": self.completed,
+            "shed": self.shed,
+            "generated_tokens": self.emitted_tokens,
+            "tokens_per_s": self.emitted_tokens / wall if wall else 0.0,
+            "goodput_tokens_per_s":
+                self.completed_tokens / wall if wall else 0.0,
+            "ttft_mean_s": (sum(self.ttft_s) / len(self.ttft_s)
+                            if self.ttft_s else 0.0),
+            "ttft_p90_s": _percentile(self.ttft_s, 0.9),
+            "latency_mean_s": (sum(self.latency_s) / len(self.latency_s)
+                               if self.latency_s else 0.0),
+            "token_latency_s": (self.decode_time_s / self.decode_steps
+                                if self.decode_steps else 0.0),
+            "slot_occupancy": (self.live_slot_s /
+                               (self.slots * self.decode_time_s)
+                               if self.decode_time_s else 0.0),
+            "wall_s": wall,
+        }

@@ -1,0 +1,34 @@
+"""Vectorized token sampling shared by both serving engines.
+
+Temperature sampling uses the Gumbel-max trick — ``argmax(z + g)`` with
+``g ~ Gumbel(0, 1)`` samples exactly from ``softmax(z)`` — which replaces
+the per-row ``np.random.choice`` Python loop with one batched argmax.
+Randomness is derived per decode step from ``(seed, step)`` so a given
+engine configuration replays identically regardless of how many requests
+came before.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_TINY = 1e-20
+
+
+def step_rng(seed: int, step: int) -> np.random.Generator:
+    """Deterministic per-step generator: independent of call history."""
+    return np.random.default_rng([seed, step])
+
+
+def sample(logits: np.ndarray, temperature: float,
+           rng: np.random.Generator) -> np.ndarray:
+    """Greedy (temperature<=0) or Gumbel-max temperature sampling.
+
+    logits: (b, vocab) float; returns (b,) int32 token ids.
+    """
+    logits = np.asarray(logits, np.float32)
+    if temperature <= 0.0:
+        return np.argmax(logits, axis=-1).astype(np.int32)
+    z = logits / temperature
+    u = rng.random(size=z.shape)
+    g = -np.log(-np.log(u + _TINY) + _TINY)
+    return np.argmax(z + g, axis=-1).astype(np.int32)

@@ -1,0 +1,129 @@
+"""Request admission: queue policy, priorities, deadlines, bucketing.
+
+The scheduler owns everything that happens *before* a request touches an
+accelerator: FCFS or priority ordering, deadline-based load shedding, and
+the prompt->prefill-bucket mapping (with explicit truncation accounting —
+nothing is silently clipped).  Both engines (wave and continuous) share it,
+which is what keeps their admission semantics comparable in benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import logging
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+log = logging.getLogger("repro.serve")
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    latency_s: float = 0.0        # arrival -> completion (wall)
+    # -- admission metadata -------------------------------------------------
+    truncated: bool = False       # prompt exceeded the largest prefill bucket
+    priority: int = 0             # lower = served sooner (priority policy)
+    deadline_s: Optional[float] = None   # absolute time.time() admission SLA
+    expired: bool = False         # shed: deadline passed while queued
+    bucket: int = 0               # prefill bucket chosen at admission
+    # -- timing (absolute time.time() stamps) -------------------------------
+    arrival_s: float = 0.0
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    # -- streaming ----------------------------------------------------------
+    on_token: Optional[Callable[[int, int], None]] = None  # (uid, token)
+
+    def emit(self, token: int) -> None:
+        self.out_tokens.append(token)
+        if self.on_token is not None:
+            self.on_token(self.uid, token)
+
+
+def bucket_for(buckets: Sequence[int], length: int) -> Tuple[int, bool]:
+    """Smallest configured bucket that fits ``length``.
+
+    Returns ``(bucket, truncated)`` — ``truncated`` is True when the prompt
+    is longer than the largest bucket and only its last ``bucket`` tokens
+    can be prefilled.
+    """
+    for b in buckets:
+        if length <= b:
+            return b, False
+    return buckets[-1], True
+
+
+def flag_truncation(req: Request, buckets: Sequence[int]) -> None:
+    """Mark (and warn about) prompts that overflow the largest bucket."""
+    bucket, truncated = bucket_for(buckets, len(req.prompt))
+    if truncated:
+        req.truncated = True
+        log.warning(
+            "request %d: prompt length %d exceeds largest prefill bucket %d; "
+            "truncating to the last %d tokens", req.uid, len(req.prompt),
+            bucket, bucket)
+
+
+def build_request(uid: int, prompt: Sequence[int], max_new_tokens: int, *,
+                  priority: int = 0, deadline_s: Optional[float] = None,
+                  on_token=None, buckets: Sequence[int] = (),
+                  metrics=None) -> Request:
+    """Shared submit-time bookkeeping for both engines: construct the
+    Request, flag truncation, and stamp arrival metrics."""
+    req = Request(uid=uid, prompt=list(prompt),
+                  max_new_tokens=max_new_tokens, priority=priority,
+                  deadline_s=deadline_s, arrival_s=time.time(),
+                  on_token=on_token)
+    if buckets:
+        flag_truncation(req, buckets)
+    if metrics is not None:
+        metrics.record_arrival()
+        if req.truncated:
+            metrics.truncated += 1
+    return req
+
+
+class Scheduler:
+    """Admission queue shared by both serving engines.
+
+    * ``fcfs``      — strict arrival order.
+    * ``priority``  — lower ``Request.priority`` first, FCFS within a level.
+
+    Requests with an absolute ``deadline_s`` that has already passed when a
+    slot frees up are shed (``expired=True``) instead of occupying a slot —
+    they land in ``self.expired`` for the caller to report.
+    """
+
+    def __init__(self, policy: str = "fcfs"):
+        if policy not in ("fcfs", "priority"):
+            raise ValueError(f"unknown scheduler policy {policy!r}")
+        self.policy = policy
+        self._heap: List[Tuple[Tuple[int, int], Request]] = []
+        self._seq = 0
+        self.expired: List[Request] = []
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def submit(self, req: Request) -> None:
+        self._seq += 1
+        level = req.priority if self.policy == "priority" else 0
+        heapq.heappush(self._heap, ((level, self._seq), req))
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        """Next admissible request, shedding any whose deadline passed."""
+        while self._heap:
+            _, req = heapq.heappop(self._heap)
+            if req.deadline_s is not None and now > req.deadline_s:
+                req.expired = True
+                req.done = True
+                self.expired.append(req)
+                log.warning("request %d: deadline missed while queued; "
+                            "shedding", req.uid)
+                continue
+            return req
+        return None

@@ -1,0 +1,150 @@
+"""Per-slot cache state pool: allocate once, scatter/gather rows forever.
+
+Continuous batching hinges on one property XAMBA's Step-1 already bought
+us: decode state is a *fixed-shape* pytree with one batch row per request
+(SSM state + conv tail for Mamba, KV ring buffers for attention,
+per-layer mixtures for Griffin).  The pool allocates that pytree once for
+``slots`` rows and exposes three row-wise primitives —
+
+* ``insert_rows``  — scatter freshly-prefilled rows into live slots,
+* ``extract_rows`` — gather slot rows out (debug / migration),
+* ``reset_rows``   — zero slot rows,
+
+each compiled exactly once (slot indices are traced scalars), so slot
+turnover never recompiles anything.
+
+The batch axis is *probed*, not assumed: ``init_cache`` is called at two
+batch sizes and each leaf's differing axis is recorded.  That keeps the
+pool agnostic to layout differences like scan-stacked layers
+(``(n_layers, b, ...)``, batch axis 1) vs per-layer lists (batch axis 0).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def infer_batch_axes(model, max_seq: int, dtype) -> Any:
+    """Pytree of ints: the batch axis of every cache leaf, found by probing
+    ``init_cache`` at two batch sizes."""
+    a = model.init_cache(2, max_seq, dtype)
+    b = model.init_cache(3, max_seq, dtype)
+
+    def one(x, y):
+        diffs = [i for i, (p, q) in enumerate(zip(x.shape, y.shape))
+                 if p != q]
+        if len(diffs) != 1:
+            raise ValueError(
+                f"cannot infer batch axis: shapes {x.shape} vs {y.shape}")
+        return diffs[0]
+
+    return jax.tree.map(one, a, b)
+
+
+def jit_cache_size(fn) -> int:
+    """Number of compiled programs behind a jitted callable (-1 if the
+    running jax version does not expose it)."""
+    try:
+        return fn._cache_size()
+    except Exception:
+        return -1
+
+
+class StatePool:
+    """Slot-indexed decode-state arena for one model family.
+
+    ``self.cache`` is the live pytree the decode program reads and writes;
+    the row primitives functionally update it (callers never touch leaf
+    layout).  Axis probing is lazy so wave-style users that only need the
+    one-shot allocation pay nothing for it.
+    """
+
+    def __init__(self, model, slots: int, max_seq: int, dtype):
+        self.model = model
+        self.slots = slots
+        self.max_seq = max_seq
+        self.dtype = dtype
+        self.cache = model.init_cache(slots, max_seq, dtype)
+        self._axes = None
+        self._insert = None
+        self._extract = None
+        self._reset = None
+
+    # ------------------------------------------------------------------
+    @property
+    def batch_axes(self):
+        if self._axes is None:
+            self._axes = infer_batch_axes(self.model, self.max_seq,
+                                          self.dtype)
+        return self._axes
+
+    def _build_ops(self):
+        axes = self.batch_axes
+
+        def insert(dst, src, src_row, slot):
+            def leaf(d, s, ax):
+                row = jax.lax.dynamic_slice_in_dim(s, src_row, 1, axis=ax)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    d, row.astype(d.dtype), slot, axis=ax)
+            return jax.tree.map(leaf, dst, src, axes)
+
+        def extract(src, slot):
+            return jax.tree.map(
+                lambda s, ax: jax.lax.dynamic_slice_in_dim(s, slot, 1,
+                                                           axis=ax),
+                src, axes)
+
+        def reset(dst, slot):
+            def leaf(d, ax):
+                shape = list(d.shape)
+                shape[ax] = 1
+                return jax.lax.dynamic_update_slice_in_dim(
+                    d, jnp.zeros(shape, d.dtype), slot, axis=ax)
+            return jax.tree.map(leaf, dst, axes)
+
+        self._insert = jax.jit(insert)
+        self._extract = jax.jit(extract)
+        self._reset = jax.jit(reset)
+
+    # ------------------------------------------------------------------
+    def insert_rows(self, src_cache, src_rows: Sequence[int],
+                    slots: Sequence[int]) -> None:
+        """Scatter ``src_cache`` row ``src_rows[i]`` into live slot
+        ``slots[i]`` (e.g. rows of a fresh per-bucket prefill)."""
+        if self._insert is None:
+            self._build_ops()
+        for r, s in zip(src_rows, slots):
+            self.cache = self._insert(self.cache, src_cache,
+                                      jnp.int32(r), jnp.int32(s))
+
+    def extract_rows(self, slots: Sequence[int]):
+        """Gather slot rows; returns a cache pytree with batch = len(slots)
+        (rows concatenated along each leaf's batch axis)."""
+        if self._extract is None:
+            self._build_ops()
+        rows = [self._extract(self.cache, jnp.int32(s)) for s in slots]
+        if len(rows) == 1:
+            return rows[0]
+        return jax.tree.map(
+            lambda ax, *ls: jnp.concatenate(ls, axis=ax),
+            self.batch_axes, *rows)
+
+    def reset_rows(self, slots: Sequence[int]) -> None:
+        """Zero slot rows (freed slots carry no state into their next
+        tenant; insert_rows overwrites anyway, this is belt-and-braces)."""
+        if self._reset is None:
+            self._build_ops()
+        for s in slots:
+            self.cache = self._reset(self.cache, jnp.int32(s))
+
+    # ------------------------------------------------------------------
+    def compile_counts(self) -> dict:
+        return {"insert": jit_cache_size(self._insert) if self._insert
+                else 0,
+                "extract": jit_cache_size(self._extract) if self._extract
+                else 0,
+                "reset": jit_cache_size(self._reset) if self._reset else 0}

@@ -116,11 +116,11 @@ def make_train_step(model, train_cfg: TrainConfig, mesh=None):
                     lambda m: jax.lax.pmean(m, "pod"), metrics)
                 return grads, new_err, metrics
 
-            grads, new_err, metrics = jax.shard_map(
+            grads, new_err, metrics = collectives.shard_map(
                 podwise, mesh=mesh, axis_names={"pod"},
                 in_specs=(P("pod"), P(), P()),
-                out_specs=(P(), P(), P()),
-                check_vma=False)(batch, state["params"], state["err"])
+                out_specs=(P(), P(), P()))(batch, state["params"],
+                                           state["err"])
         else:
             grads, metrics = compute_grads(state["params"], batch)
             new_err = state.get("err")

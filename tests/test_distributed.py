@@ -133,7 +133,7 @@ def test_compressed_pod_psum_close_to_exact():
         from jax.sharding import PartitionSpec as P
         from repro.launch.mesh import make_mesh
         from repro.distributed.collectives import (compressed_pod_psum,
-                                                   init_errors)
+                                                   init_errors, shard_map)
 
         mesh = make_mesh((4, 2), ("pod", "data"))
         rng = np.random.default_rng(0)
@@ -144,15 +144,14 @@ def test_compressed_pod_psum_close_to_exact():
             red, new_err = compressed_pod_psum(g, e, axis="pod")
             return red, new_err
 
-        red, new_err = jax.jit(jax.shard_map(
+        red, new_err = jax.jit(shard_map(
             f, mesh=mesh, axis_names={"pod"},
-            in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod")),
-            check_vma=False))(g, err)
+            in_specs=(P("pod"), P("pod")),
+            out_specs=(P("pod"), P("pod"))))(g, err)
         # exact: each pod shard holds g-rows; psum over pod of each row-shard
-        exact = jax.jit(jax.shard_map(
+        exact = jax.jit(shard_map(
             lambda g: jax.lax.psum(g, "pod"), mesh=mesh, axis_names={"pod"},
-            in_specs=P("pod"), out_specs=P("pod"),
-            check_vma=False))(g)
+            in_specs=P("pod"), out_specs=P("pod")))(g)
         rel = float(jnp.abs(red["w"] - exact["w"]).max() /
                     (jnp.abs(exact["w"]).max() + 1e-9))
         assert rel < 0.05, rel           # int8 quantization error bound
