@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test smoke-serve bench-serve ci
+.PHONY: test smoke-serve smoke-decode bench-serve bench-json ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -11,7 +11,13 @@ smoke-serve:
 	$(PY) -m repro.launch.serve --arch mamba2-130m --reduced \
 	    --engine continuous --requests 4 --batch 2 --max-new 4
 
+smoke-decode:
+	$(PY) -m pytest tests/test_decode_step.py -q
+
 bench-serve:
 	PYTHONPATH=src:. $(PY) -m benchmarks.bench_serve_continuous
 
-ci: test smoke-serve
+bench-json:
+	PYTHONPATH=src:. $(PY) -m benchmarks.run --json --smoke
+
+ci: test smoke-decode smoke-serve bench-json

@@ -1,41 +1,159 @@
-"""KPI reproduction: decoding tokens/s for mamba-130m (paper: 100 -> 260
-tok/s with ActiBA on the NPU, vs a 50 tok/s KPI target).
+"""KPI reproduction: decode tokens/s through the fused stacked-layer path.
 
-CPU wall-clock tokens/s for the full 130M models through the serving
-engine's decode path, per XAMBA variant.
+Two views:
+
+* **per-family decode tokens/s** (reduced configs, the numbers tracked
+  across PRs in ``BENCH_decode.json``): the *baseline* arm reproduces the
+  pre-refactor program structure — rolled scan over stacked layers with
+  in-program weight slicing (mamba) / per-layer Python dispatch over the
+  grouped weights (rgemma), seq-axis (b, 1, d) operands, fresh state
+  pytree every step — against the *fused* arm: pre-sliced decode view,
+  token-major fused step, cache donated into the jitted program.  The
+  baseline's contraction runs the paper's ``naive`` mul+ReduceSum chain
+  (the deleted step used a dot-based contraction — a few percent at
+  these shapes; the speedup comes from scan structure, layout and
+  donation).  Both arms share one stacked weight tree.
+* **full-size mamba KPI** (paper: 100 -> 260 tok/s with ActiBA on the NPU
+  vs a 50 tok/s KPI target): full 130M models, baseline vs xamba variants
+  (skipped under ``--smoke``).
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit
 from repro.configs import get_config
 from repro.core.xamba import XambaConfig
 from repro.models import build_model
 from repro.nn.params import init_params
+from repro.serve.state_pool import format_compile_count, jit_cache_size
+
+FAMILIES = ("mamba-130m", "mamba2-130m", "recurrentgemma-2b")
 
 
-def run() -> list:
-    rows = []
+def _make_variant(cfg, params, *, donate: bool, batch: int,
+                  decode_view: bool = False):
+    """Build a ready-to-time decode-step closure for ``cfg``."""
+    model = build_model(cfg)
+    cache = model.init_cache(batch, 64, jnp.float32)
+    tok = jnp.ones((batch, 1), jnp.int32)
+    if decode_view:
+        params = model.decode_view(params)   # engine-style pre-sliced view
+    donate_kw = {"donate_argnums": (2,)} if donate else {}
+    step = jax.jit(lambda p, t, c: model.decode_step(p, t, c, jnp.int32(4)),
+                   **donate_kw)
+    box = {"cache": cache}
+
+    def call():
+        logits, box["cache"] = step(params, tok, box["cache"])
+        jax.block_until_ready(logits)
+
+    return call, step
+
+
+def _time_interleaved(calls, iters=24, warmup=3):
+    """Median seconds per call for each variant, with the variants'
+    timed calls ROUND-ROBIN interleaved: background load on a shared box
+    drifts over seconds, so timing A fully before B biases the ratio —
+    alternating samples cancels the drift."""
+    for call in calls:
+        for _ in range(warmup):
+            call()
+    ts = [[] for _ in calls]
+    for _ in range(iters):
+        for i, call in enumerate(calls):
+            t0 = time.perf_counter()
+            call()
+            ts[i].append(time.perf_counter() - t0)
+    return [float(np.median(t)) for t in ts]
+
+
+def bench_families(smoke: bool = False, batch: int = 1) -> dict:
+    iters = 12 if smoke else 40
+    out = {}
+    for arch in FAMILIES:
+        base_cfg = get_config(arch, reduced=True).replace(
+            param_dtype="float32")
+        # Pre-refactor reproduction — what the decode program was before
+        # this subsystem existed: mamba families ran a ROLLED scan over
+        # stacked layers (in-program weight slicing, XLA while loop);
+        # recurrentgemma Python-looped per layer, slicing the grouped
+        # weights in-program.  Dense ``naive`` step math, no donation.
+        pre_scan = arch.startswith("mamba")
+        pre_cfg = base_cfg.replace(scan_layers=pre_scan,
+                                   xamba=XambaConfig.baseline())
+        # Fused: unrolled stacked scan / pre-sliced decode view,
+        # dispatched (MXU) step, cache donated into the program.
+        fused_cfg = base_cfg.replace(scan_layers=True,
+                                     xamba=XambaConfig.optimized())
+
+        # Stacked (mamba) / group-stacked (rgemma) weights serve both arms.
+        pre_params = init_params(build_model(pre_cfg).param_specs(),
+                                 jax.random.PRNGKey(0), jnp.float32)
+        fused_params = pre_params
+
+        call_pre, _ = _make_variant(pre_cfg, pre_params, donate=False,
+                                    batch=batch)
+        call_fused, step_fused = _make_variant(fused_cfg, fused_params,
+                                               donate=True, batch=batch,
+                                               decode_view=True)
+        t_pre, t_fused = _time_interleaved([call_pre, call_fused],
+                                           iters=iters)
+        compiles = jit_cache_size(step_fused)
+        speedup = t_pre / t_fused
+        out[arch] = {
+            "prerefactor_tok_s": round(batch / t_pre, 1),
+            "fused_tok_s": round(batch / t_fused, 1),
+            "speedup": round(speedup, 2),
+            "decode_mode": fused_cfg.xamba.decode,
+            "decode_compiles": format_compile_count(compiles),
+        }
+        emit(f"kpi.decode.{arch}.prerefactor", t_pre * 1e6,
+             f"tokens_per_s={batch / t_pre:.1f}")
+        emit(f"kpi.decode.{arch}.fused", t_fused * 1e6,
+             f"tokens_per_s={batch / t_fused:.1f};speedup={speedup:.2f}x")
+    return out
+
+
+def bench_kpi_full() -> dict:
+    """Full 130M models through the decode path, per XAMBA variant."""
+    out = {}
     for arch in ("mamba-130m", "mamba2-130m"):
-        for vname, xamba in (("baseline", XambaConfig.baseline()),
-                             ("xamba", XambaConfig.full(segments=16))):
+        variants = (("baseline", XambaConfig.baseline()),
+                    ("xamba", XambaConfig.full(segments=16)))
+        calls = []
+        for _, xamba in variants:
             cfg = get_config(arch).replace(param_dtype="float32",
                                            xamba=xamba)
-            model = build_model(cfg)
-            params = init_params(model.param_specs(), jax.random.PRNGKey(0),
-                                 jnp.float32)
-            cache = model.init_cache(1, 64, jnp.float32)
-            tok = jnp.ones((1, 1), jnp.int32)
+            params = init_params(build_model(cfg).param_specs(),
+                                 jax.random.PRNGKey(0), jnp.float32)
+            call, _ = _make_variant(cfg, params, donate=True, batch=1,
+                                    decode_view=True)
+            calls.append(call)
+        for (vname, _), t in zip(variants,
+                                 _time_interleaved(calls, iters=8)):
+            out[f"{arch}.{vname}"] = round(1.0 / t, 1)
+            emit(f"kpi.decode.{arch}.{vname}", t * 1e6,
+                 f"tokens_per_s={1.0 / t:.1f}")
+    return out
 
-            step = jax.jit(lambda p, t, c: model.decode_step(p, t, c,
-                                                             jnp.int32(4)))
-            t = time_fn(step, params, tok, cache, iters=8)
-            rows.append(emit(f"kpi.decode.{arch}.{vname}", t * 1e6,
-                             f"tokens_per_s={1.0 / t:.1f}"))
-    return rows
+
+def run(smoke: bool = False) -> dict:
+    """Harness entrypoint; the returned dict is ``BENCH_decode.json``."""
+    families = bench_families(smoke=smoke)
+    result = {
+        "benchmark": "decode",
+        "batch": 1,
+        "families": families,
+        "speedup_reduced_mamba2": families["mamba2-130m"]["speedup"],
+    }
+    if not smoke:
+        result["kpi_full_tok_s"] = bench_kpi_full()
+    return result
 
 
 if __name__ == "__main__":

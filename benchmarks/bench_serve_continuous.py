@@ -81,7 +81,7 @@ def _warmup(engine, vocab, rng):
 
 
 def bench(arch="mamba2-130m", requests=32, batch=4, arrival_ms=5.0,
-          seed=0):
+          seed=0, smoke=False):
     cfg = get_config(arch, reduced=True)
     model = build_model(cfg)
     params = init_params(model.param_specs(), jax.random.PRNGKey(seed),
@@ -101,32 +101,44 @@ def bench(arch="mamba2-130m", requests=32, batch=4, arrival_ms=5.0,
         done, wall = _drain(engine, workload, poll)
         goodput = sum(len(r.out_tokens) for r in done if r.done) / wall
         m = engine.metrics.summary()
+        # Compile counters report "unavailable" on jax versions without
+        # a jit cache-size probe; only difference real counts.
+        c0, c1 = decode_compiles_warm, engine.counters["decode_compiles"]
+        recompiles = (c1 - c0 if isinstance(c0, int) and isinstance(c1, int)
+                      else "unavailable")
         results[name] = {
-            "goodput": goodput, "wall": wall,
-            "occupancy": m["slot_occupancy"],
-            "ttft_mean_s": m["ttft_mean_s"],
-            "decode_recompiles":
-                engine.counters["decode_compiles"] - decode_compiles_warm,
+            "goodput_tok_s": round(goodput, 2), "wall_s": round(wall, 3),
+            "occupancy": round(m["slot_occupancy"], 3),
+            "ttft_mean_s": round(m["ttft_mean_s"], 4),
+            "decode_recompiles": recompiles,
         }
         emit(f"serve_{name}_goodput_tok_s", wall * 1e6 / max(len(done), 1),
              round(goodput, 2))
         emit(f"serve_{name}_occupancy", 0.0, round(m["slot_occupancy"], 3))
         assert len(done) == requests, (name, len(done))
 
-    ratio = results["continuous"]["goodput"] / results["wave"]["goodput"]
+    ratio = results["continuous"]["goodput_tok_s"] / \
+        results["wave"]["goodput_tok_s"]
+    results["continuous_over_wave_goodput"] = round(ratio, 3)
     emit("serve_continuous_over_wave_goodput", 0.0, round(ratio, 3))
 
-    assert results["continuous"]["decode_recompiles"] == 0, \
+    rc = results["continuous"]["decode_recompiles"]
+    assert rc == 0 or rc == "unavailable", \
         "continuous engine retraced decode after warmup"
-    assert ratio >= 1.5, (
-        f"continuous goodput only {ratio:.2f}x wave "
-        f"(continuous={results['continuous']['goodput']:.1f} tok/s, "
-        f"wave={results['wave']['goodput']:.1f} tok/s)")
+    if not smoke:
+        # The goodput margin needs the full straggler workload; the smoke
+        # run only checks the engines drain and never recompile.
+        assert ratio >= 1.5, (
+            f"continuous goodput only {ratio:.2f}x wave "
+            f"(continuous={results['continuous']['goodput_tok_s']:.1f} "
+            f"tok/s, wave={results['wave']['goodput_tok_s']:.1f} tok/s)")
     return results
 
 
-def run() -> dict:
-    """Harness entrypoint (``python -m benchmarks.run --only serve``)."""
+def run(smoke: bool = False) -> dict:
+    """Harness entrypoint; the returned dict is ``BENCH_serve.json``."""
+    if smoke:
+        return bench(requests=10, arrival_ms=2.0, smoke=True)
     return bench()
 
 

@@ -40,8 +40,28 @@ def main():
             print(f"step {i:3d}  loss={float(metrics['loss']):.4f}  "
                   f"acc={float(metrics['accuracy']):.3f}")
 
-    # --- serve: batched requests, prefill + decode -------------------------
-    engine = Engine(model, state["params"], ServeConfig(
+    # --- generate by hand: the explicit prefill / decode_step API ----------
+    # prefill runs the chunked parallel form over the prompt and emits the
+    # recurrent state; decode_step is the O(1) fused recurrence.  The
+    # engines below wrap exactly this pair (plus donation + slot refill).
+    params = state["params"]
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (1, 16), 1,
+                                cfg.vocab_size)
+    cache = model.init_cache(1, 32, cfg.dtype)
+    logits, cache = model.prefill(params, {"tokens": prompt}, cache)
+    toks = [int(jnp.argmax(logits, -1)[0])]
+    for t in range(5):
+        tok = jnp.asarray([[toks[-1]]], jnp.int32)
+        logits, cache = model.decode_step(params, tok, cache,
+                                          jnp.int32(16 + t))
+        toks.append(int(jnp.argmax(logits, -1)[0]))
+    print("manual greedy decode:", toks)
+    # (the pre-refactor call signature still works, with a warning:
+    #  model.apply(params, tok, state=cache, index=...) — see
+    #  docs/architecture.md for the migration.)
+
+    # --- serve: batched requests through the engine ------------------------
+    engine = Engine(model, params, ServeConfig(
         max_batch=4, prefill_buckets=(32, 64), max_new_tokens=12))
     for seed in range(4):
         prompt = jax.random.randint(jax.random.PRNGKey(seed), (20,), 1,

@@ -27,9 +27,15 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.8)
+    from repro.core.xamba import DECODE_MODES
+    ap.add_argument("--decode-mode", default=None, choices=DECODE_MODES,
+                    help="XambaConfig.decode: how the fused single-token "
+                         "step executes (default: the config's mode)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
+    if args.decode_mode:
+        cfg = cfg.with_decode_mode(args.decode_mode)
     model = build_model(cfg)
     params = init_params(model.param_specs(), jax.random.PRNGKey(0),
                          cfg.dtype)

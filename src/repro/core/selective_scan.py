@@ -123,15 +123,26 @@ def selective_scan(u: Array, delta: Array, A: Array, B: Array, C: Array,
 
 def selective_scan_decode_step(state: Array, u_t: Array, delta_t: Array,
                                A: Array, B_t: Array, C_t: Array,
-                               D: Optional[Array] = None
-                               ) -> Tuple[Array, Array]:
-    """One-token recurrent update. state: (b, d, n); u_t, delta_t: (b, d);
+                               D: Optional[Array] = None, *,
+                               mode: str = "cumba") -> Tuple[Array, Array]:
+    """One-token recurrent update, XambaConfig-dispatched (``naive`` =
+    mul + ReduceSum, ``cumba`` = MXU dot_general, ``pallas*`` = the fused
+    Pallas step kernel).  state: (b, d, n); u_t, delta_t: (b, d);
     B_t, C_t: (b, n)."""
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        return kops.sscan_step(state, u_t, delta_t, A, B_t, C_t, D,
+                               interpret=(mode == "pallas_interpret"))
     dtf = delta_t.astype(jnp.float32)
     decay = jnp.exp(dtf[..., None] * A.astype(jnp.float32)[None])
     dBu = (dtf * u_t.astype(jnp.float32))[..., None] * B_t.astype(jnp.float32)[:, None, :]
     new_state = state.astype(jnp.float32) * decay + dBu
-    y = jnp.einsum("bdn,bn->bd", new_state, C_t.astype(jnp.float32))
+    Cf = C_t.astype(jnp.float32)
+    if mode == "naive":
+        y = jnp.sum(new_state * Cf[:, None, :], axis=-1)
+    else:
+        y = jnp.einsum("bdn,bn->bd", new_state, Cf,
+                       preferred_element_type=jnp.float32)
     if D is not None:
         y = y + u_t.astype(jnp.float32) * D.astype(jnp.float32)[None]
     return new_state, y.astype(u_t.dtype)

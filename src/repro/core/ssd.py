@@ -245,20 +245,42 @@ def ssd_reference(x, dt, A, B, C, *, initial_state=None):
 
 
 def ssd_decode_step(state: Array, x_t: Array, dt_t: Array, A: Array,
-                    B_t: Array, C_t: Array) -> Tuple[Array, Array]:
-    """Single-token recurrent update (the paper's Step-1 decode model).
+                    B_t: Array, C_t: Array, *,
+                    mode: str = "cumba") -> Tuple[Array, Array]:
+    """Single-token recurrent update (the paper's Step-1 decode model),
+    XambaConfig-dispatched like the prefill path:
+
+    * ``naive``  — broadcast-multiply + ReduceSum chains (the dense op
+      structure the NPU compiler produced and the paper measured);
+    * ``cumba``  — the state->output contraction as one MXU ``dot_general``
+      over grouped heads (no materialized B/C head-repeat);
+    * ``pallas`` / ``pallas_interpret`` — the fused Pallas step kernel
+      (``kernels/decode_step.py``).
 
     state: (b, h, p, n); x_t: (b, h, p); dt_t: (b, h);
     B_t, C_t: (b, g, n).  Returns (new_state, y_t: (b, h, p)).
     """
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        return kops.ssd_step(state, x_t, dt_t, A, B_t, C_t,
+                             interpret=(mode == "pallas_interpret"))
     b, h, p, n = state.shape
     g = B_t.shape[1]
     hpg = h // g
-    Bh = jnp.repeat(B_t, hpg, axis=1).astype(jnp.float32)   # (b, h, n)
-    Ch = jnp.repeat(C_t, hpg, axis=1).astype(jnp.float32)
     dtf = dt_t.astype(jnp.float32)
     decay = jnp.exp(dtf * A.astype(jnp.float32)[None, :])   # (b, h)
-    dBx = dtf[..., None, None] * Bh[:, :, None, :] * x_t.astype(jnp.float32)[..., None]
-    new_state = state.astype(jnp.float32) * decay[..., None, None] + dBx
-    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
-    return new_state, y.astype(x_t.dtype)
+    # Grouped layout: B/C broadcast against per-head streams instead of
+    # being materialized h/g times (matches the prefill path's grouping).
+    st_g = state.astype(jnp.float32).reshape(b, g, hpg, p, n)
+    x_g = x_t.astype(jnp.float32).reshape(b, g, hpg, p)
+    dt_g = dtf.reshape(b, g, hpg)
+    Bf = B_t.astype(jnp.float32)                            # (b, g, n)
+    Cf = C_t.astype(jnp.float32)
+    dBx = (dt_g[..., None] * x_g)[..., None] * Bf[:, :, None, None, :]
+    new_g = st_g * decay.reshape(b, g, hpg)[..., None, None] + dBx
+    if mode == "naive":
+        y_g = xreduce.contract("bgqpn,bgn->bgqp", new_g, Cf, mode="naive")
+    else:
+        y_g = xreduce.contract("bgqpn,bgn->bgqp", new_g, Cf, mode="reduba")
+    new_state = new_g.reshape(b, h, p, n)
+    return new_state, y_g.reshape(b, h, p).astype(x_t.dtype)

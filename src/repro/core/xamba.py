@@ -22,6 +22,7 @@ from typing import Tuple
 
 CUMSUM_MODES = ("naive", "cumba", "pallas", "pallas_interpret")
 REDUCE_MODES = ("naive", "reduba", "pallas", "pallas_interpret")
+DECODE_MODES = ("naive", "cumba", "pallas", "pallas_interpret")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +33,10 @@ class XambaConfig:
     cumba: str = "cumba"
     # Step-2b: ReduceSum -> MXU contraction (paper Fig. 2c, "ReduBA").
     reduba: str = "reduba"
+    # Single-token decode step: ``naive`` = broadcast-mul + ReduceSum chains
+    # (the dense NPU-baseline op structure), ``cumba`` = fused MXU remap,
+    # ``pallas`` = the fused decode-step kernel (``kernels/decode_step.py``).
+    decode: str = "cumba"
     # Step-3: activations -> piecewise-linear (paper Fig. 2e, "ActiBA").
     actiba: bool = False
     actiba_segments: int = 32
@@ -44,6 +49,8 @@ class XambaConfig:
             raise ValueError(f"cumba mode {self.cumba!r} not in {CUMSUM_MODES}")
         if self.reduba not in REDUCE_MODES:
             raise ValueError(f"reduba mode {self.reduba!r} not in {REDUCE_MODES}")
+        if self.decode not in DECODE_MODES:
+            raise ValueError(f"decode mode {self.decode!r} not in {DECODE_MODES}")
         if self.actiba_segments < 2:
             raise ValueError("actiba_segments must be >= 2")
 
@@ -51,21 +58,22 @@ class XambaConfig:
     @classmethod
     def baseline(cls) -> "XambaConfig":
         """The unoptimized NPU-style execution (paper's baseline)."""
-        return cls(cumba="naive", reduba="naive", actiba=False)
+        return cls(cumba="naive", reduba="naive", decode="naive", actiba=False)
 
     @classmethod
     def optimized(cls) -> "XambaConfig":
         """CumBA + ReduBA (paper step-2, exact numerics)."""
-        return cls(cumba="cumba", reduba="reduba", actiba=False)
+        return cls(cumba="cumba", reduba="reduba", decode="cumba",
+                   actiba=False)
 
     @classmethod
     def full(cls, segments: int = 32) -> "XambaConfig":
         """CumBA + ReduBA + ActiBA (paper step-2 + step-3)."""
-        return cls(cumba="cumba", reduba="reduba", actiba=True,
-                   actiba_segments=segments)
+        return cls(cumba="cumba", reduba="reduba", decode="cumba",
+                   actiba=True, actiba_segments=segments)
 
     @classmethod
     def pallas(cls, interpret: bool = False) -> "XambaConfig":
         """Kernel-backed variants (TPU target; interpret=True on CPU)."""
         mode = "pallas_interpret" if interpret else "pallas"
-        return cls(cumba=mode, reduba=mode, actiba=True)
+        return cls(cumba=mode, reduba=mode, decode=mode, actiba=True)

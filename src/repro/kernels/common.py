@@ -7,6 +7,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+# Griffin's fixed RG-LRU gate exponent — single source for the mixer
+# (nn/ssm.py), the fused decode kernel and its oracle.
+RG_LRU_C = 8.0
 
 
 def compiler_params(dimension_semantics):

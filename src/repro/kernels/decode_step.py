@@ -1,0 +1,335 @@
+"""Fused single-token decode-step Pallas kernels (one per mixer family).
+
+The continuous-batching engine calls ``decode_step`` once per generated
+token, so the per-step op chain — conv-tail shift, SiLU, Softplus(dt),
+the SSM state update and the output gate — is the hottest code in the
+repo.  XLA executes it as dozens of tiny HBM-roundtripping ops; these
+kernels run the whole post-``in_proj`` / pre-``out_proj`` chain for one
+batch row in VMEM, writing each state exactly once:
+
+* ``mamba2_step``  — conv shift + SiLU + softplus(dt) + SSD recurrence +
+                     D-skip + gated RMSNorm + SiLU(z) gate;
+* ``mamba1_step``  — conv shift + SiLU + x_proj/dt_proj matmuls +
+                     softplus + selective-scan recurrence + SiLU(z) gate;
+* ``rglru_step``   — conv shift + r/i sigmoid gates + RG-LRU update +
+                     GeLU(gate) output gate;
+* ``ssd_step`` / ``sscan_step`` — the bare recurrent updates, used when
+  ``core/{ssd,selective_scan}.py`` are called directly in ``pallas`` mode.
+
+Activations honor ActiBA: callers pass the (compile-time) activation
+callables from ``core.pwl.activation`` so the PWL tables are baked into
+the kernel body, exactly like the NPU's C-LUT programming.
+
+Grids are one program per batch row (decode batches are slot counts —
+small); every ref keeps >= 2 dims for TPU layout friendliness.  On CPU
+use ``interpret=True``; numerics are fp32 throughout, tied to the
+``kernels/ref.py`` oracles at <= 1e-5.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+Array = jax.Array
+
+
+def _row(shape):
+    """BlockSpec for a per-batch-row block: (1, ...) indexed by program 0."""
+    ndim = len(shape)
+    return pl.BlockSpec((1,) + tuple(shape),
+                        lambda i, _nd=ndim: (i,) + (0,) * _nd)
+
+
+def _rep(shape):
+    """BlockSpec for a broadcast (weight) block shared by every program."""
+    ndim = len(shape)
+    return pl.BlockSpec(tuple(shape), lambda i, _nd=ndim: (0,) * (_nd))
+
+
+def _f32(ref):
+    return ref[...].astype(jnp.float32)
+
+
+# ============================================================================
+# Bare recurrent updates (core-level dispatch targets)
+# ============================================================================
+
+def _ssd_update(st, x, dt, A, B, C):
+    """st (h,p,n), x (h,p), dt/A (1,h), B/C (g,n) -> (new_st, y (h,p))."""
+    h, p, n = st.shape
+    g = B.shape[0]
+    hpg = h // g
+    decay = jnp.exp(dt[0] * A[0])                            # (h,)
+    Bh = jnp.broadcast_to(B[:, None, :], (g, hpg, n)).reshape(h, n)
+    Ch = jnp.broadcast_to(C[:, None, :], (g, hpg, n)).reshape(h, n)
+    new = st * decay[:, None, None] + \
+        (dt[0][:, None] * x)[..., None] * Bh[:, None, :]
+    y = jnp.sum(new * Ch[:, None, :], axis=-1)               # (h, p)
+    return new, y
+
+
+def ssd_step(state: Array, x_t: Array, dt_t: Array, A: Array,
+             B_t: Array, C_t: Array, *,
+             interpret: bool = False) -> Tuple[Array, Array]:
+    """state (b,h,p,n), x_t (b,h,p), dt_t (b,h), A (h,), B_t/C_t (b,g,n)."""
+    b, h, p, n = state.shape
+    g = B_t.shape[1]
+    A2 = A.reshape(1, h).astype(jnp.float32)
+
+    def kernel(st_ref, x_ref, dt_ref, a_ref, b_ref, c_ref, ns_ref, y_ref):
+        new, y = _ssd_update(_f32(st_ref)[0], _f32(x_ref)[0], _f32(dt_ref),
+                             _f32(a_ref), _f32(b_ref)[0], _f32(c_ref)[0])
+        ns_ref[0] = new.astype(ns_ref.dtype)
+        y_ref[0] = y.astype(y_ref.dtype)
+
+    new_state, y = common.pallas_call(
+        kernel, grid=(b,),
+        in_specs=[_row((h, p, n)), _row((h, p)), _row((h,)), _rep((1, h)),
+                  _row((g, n)), _row((g, n))],
+        out_specs=(_row((h, p, n)), _row((h, p))),
+        out_shape=(jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+                   jax.ShapeDtypeStruct((b, h, p), x_t.dtype)),
+        dimension_semantics=("parallel",),
+        interpret=interpret, name="ssd_decode_step",
+    )(state, x_t, dt_t, A2, B_t, C_t)
+    return new_state, y
+
+
+def _sscan_update(st, u, dt, A, B, C, D):
+    """st (d,n), u/dt (1,d), A (d,n), B/C (1,n), D (1,d) or None."""
+    decay = jnp.exp(dt[0][:, None] * A)                      # (d, n)
+    new = st * decay + (dt[0] * u[0])[:, None] * B[0][None, :]
+    y = jnp.sum(new * C[0][None, :], axis=-1)                # (d,)
+    if D is not None:
+        y = y + D[0] * u[0]
+    return new, y
+
+
+def sscan_step(state: Array, u_t: Array, delta_t: Array, A: Array,
+               B_t: Array, C_t: Array, D: Optional[Array] = None, *,
+               interpret: bool = False) -> Tuple[Array, Array]:
+    """state (b,d,n), u_t/delta_t (b,d), A (d,n), B_t/C_t (b,n), D (d,)."""
+    b, d, n = state.shape
+    has_d = D is not None
+    D2 = (D.reshape(1, d).astype(jnp.float32) if has_d
+          else jnp.zeros((1, d), jnp.float32))
+
+    def kernel(st_ref, u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
+               ns_ref, y_ref):
+        new, y = _sscan_update(_f32(st_ref)[0], _f32(u_ref), _f32(dt_ref),
+                               _f32(a_ref), _f32(b_ref), _f32(c_ref),
+                               _f32(d_ref) if has_d else None)
+        ns_ref[0] = new.astype(ns_ref.dtype)
+        y_ref[0] = y.astype(y_ref.dtype)
+
+    new_state, y = common.pallas_call(
+        kernel, grid=(b,),
+        in_specs=[_row((d, n)), _row((d,)), _row((d,)), _rep((d, n)),
+                  _row((n,)), _row((n,)), _rep((1, d))],
+        out_specs=(_row((d, n)), _row((d,))),
+        out_shape=(jax.ShapeDtypeStruct((b, d, n), jnp.float32),
+                   jax.ShapeDtypeStruct((b, d), u_t.dtype)),
+        dimension_semantics=("parallel",),
+        interpret=interpret, name="sscan_decode_step",
+    )(state, u_t, delta_t, A.astype(jnp.float32), B_t, C_t, D2)
+    return new_state, y
+
+
+# ============================================================================
+# Fused mixer steps (conv tail + activations + recurrence + output gate)
+# ============================================================================
+
+def _conv_shift(conv_state, x_row, w, bias):
+    """conv_state (w-1,d), x_row (1,d), w (width,d), bias (1,d) ->
+    (conv_out (1,d), new_state (w-1,d)) — one causal-conv step."""
+    win = jnp.concatenate([conv_state, x_row], axis=0)       # (width, d)
+    out = jnp.sum(win * w, axis=0, keepdims=True) + bias     # (1, d)
+    return out, win[1:]
+
+
+def mamba2_step(z: Array, xbc: Array, dt: Array, conv_state: Array,
+                ssm_state: Array, conv_w: Array, conv_b: Array,
+                dt_bias: Array, A: Array, D: Array, norm_scale: Array, *,
+                ngroups: int, head_dim: int,
+                silu: Callable = jax.nn.silu,
+                softplus: Callable = jax.nn.softplus,
+                eps: float = 1e-6,
+                interpret: bool = False) -> Tuple[Array, Array, Array]:
+    """Fused Mamba-2 decode step for one token.
+
+    z (b,di), xbc (b,dxbc), dt (b,h) — the ``in_proj`` splits;
+    conv_state (b,w-1,dxbc), ssm_state (b,h,p,n); conv_w (w,dxbc);
+    conv_b (dxbc,), dt_bias/A/D (h,), norm_scale (di,).
+    A is the negative decay rate (``-exp(A_log)``).
+    Returns (y (b,di) — gated, pre-``out_proj``; new_conv; new_ssm).
+    """
+    b, di = z.shape
+    h = dt.shape[1]
+    p = head_dim
+    g = ngroups
+    n = ssm_state.shape[-1]
+    w = conv_w.shape[0]
+    dxbc = xbc.shape[1]
+
+    conv_b2 = conv_b.reshape(1, dxbc).astype(jnp.float32)
+    dtb2 = dt_bias.reshape(1, h).astype(jnp.float32)
+    A2 = A.reshape(1, h).astype(jnp.float32)
+    D2 = D.reshape(1, h).astype(jnp.float32)
+    ns2 = norm_scale.reshape(1, di).astype(jnp.float32)
+
+    def kernel(z_ref, xbc_ref, dt_ref, cs_ref, st_ref, cw_ref, cb_ref,
+               dtb_ref, a_ref, d_ref, nsc_ref, y_ref, nc_ref, nst_ref):
+        conv_out, new_conv = _conv_shift(_f32(cs_ref)[0], _f32(xbc_ref),
+                                         _f32(cw_ref), _f32(cb_ref))
+        act = silu(conv_out)                                 # (1, dxbc)
+        xs = act[0, :di].reshape(h, p)
+        B = act[0, di:di + g * n].reshape(g, n)
+        C = act[0, di + g * n:].reshape(g, n)
+        dt_f = softplus(_f32(dt_ref) + _f32(dtb_ref))        # (1, h)
+        new, y = _ssd_update(_f32(st_ref)[0], xs, dt_f, _f32(a_ref), B, C)
+        y = y + _f32(d_ref)[0][:, None] * xs                 # D skip
+        yf = y.reshape(1, di)
+        ms = jnp.mean(yf * yf, axis=-1, keepdims=True)
+        yn = yf * jax.lax.rsqrt(ms + eps) * _f32(nsc_ref)    # gated RMSNorm
+        out = yn * silu(_f32(z_ref))
+        y_ref[...] = out.astype(y_ref.dtype)
+        nc_ref[0] = new_conv.astype(nc_ref.dtype)
+        nst_ref[0] = new.astype(nst_ref.dtype)
+
+    y, new_conv, new_ssm = common.pallas_call(
+        kernel, grid=(b,),
+        in_specs=[_row((di,)), _row((dxbc,)), _row((h,)),
+                  _row((w - 1, dxbc)), _row((h, p, n)),
+                  _rep((w, dxbc)), _rep((1, dxbc)), _rep((1, h)),
+                  _rep((1, h)), _rep((1, h)), _rep((1, di))],
+        out_specs=(_row((di,)), _row((w - 1, dxbc)), _row((h, p, n))),
+        out_shape=(jax.ShapeDtypeStruct((b, di), z.dtype),
+                   jax.ShapeDtypeStruct((b, w - 1, dxbc), conv_state.dtype),
+                   jax.ShapeDtypeStruct((b, h, p, n), jnp.float32)),
+        dimension_semantics=("parallel",),
+        interpret=interpret, name="mamba2_decode_step",
+    )(z, xbc, dt, conv_state, ssm_state, conv_w.astype(jnp.float32),
+      conv_b2, dtb2, A2, D2, ns2)
+    return y, new_conv, new_ssm
+
+
+def mamba1_step(xs_raw: Array, z: Array, conv_state: Array, ssm_state: Array,
+                conv_w: Array, conv_b: Array, xproj_w: Array, dtproj_w: Array,
+                dtproj_b: Array, A: Array, D: Array, *,
+                dt_rank: int,
+                silu: Callable = jax.nn.silu,
+                softplus: Callable = jax.nn.softplus,
+                interpret: bool = False) -> Tuple[Array, Array, Array]:
+    """Fused Mamba-1 decode step.
+
+    xs_raw/z (b,di) — the ``in_proj`` halves; conv_state (b,w-1,di);
+    ssm_state (b,di,n); xproj_w (di, dt_rank+2n); dtproj_w (dt_rank,di);
+    dtproj_b (di,); A (di,n) negative; D (di,).
+    Returns (y (b,di) — gated, pre-``out_proj``; new_conv; new_ssm).
+    """
+    b, di = z.shape
+    n = ssm_state.shape[-1]
+    w = conv_w.shape[0]
+    r = dt_rank
+
+    conv_b2 = conv_b.reshape(1, di).astype(jnp.float32)
+    dtb2 = dtproj_b.reshape(1, di).astype(jnp.float32)
+    D2 = D.reshape(1, di).astype(jnp.float32)
+
+    def kernel(x_ref, z_ref, cs_ref, st_ref, cw_ref, cb_ref, xp_ref,
+               dtw_ref, dtb_ref, a_ref, d_ref, y_ref, nc_ref, nst_ref):
+        conv_out, new_conv = _conv_shift(_f32(cs_ref)[0], _f32(x_ref),
+                                         _f32(cw_ref), _f32(cb_ref))
+        xs = silu(conv_out)                                  # (1, di)
+        dbc = jnp.dot(xs, _f32(xp_ref),
+                      preferred_element_type=jnp.float32)    # (1, r+2n)
+        dt_low, B, C = dbc[:, :r], dbc[:, r:r + n], dbc[:, r + n:]
+        dt_f = softplus(jnp.dot(dt_low, _f32(dtw_ref),
+                                preferred_element_type=jnp.float32) +
+                        _f32(dtb_ref))                       # (1, di)
+        new, y = _sscan_update(_f32(st_ref)[0], xs, dt_f, _f32(a_ref),
+                               B, C, _f32(d_ref))
+        out = y[None] * silu(_f32(z_ref))
+        y_ref[...] = out.astype(y_ref.dtype)
+        nc_ref[0] = new_conv.astype(nc_ref.dtype)
+        nst_ref[0] = new.astype(nst_ref.dtype)
+
+    y, new_conv, new_ssm = common.pallas_call(
+        kernel, grid=(b,),
+        in_specs=[_row((di,)), _row((di,)), _row((w - 1, di)),
+                  _row((di, n)), _rep((w, di)), _rep((1, di)),
+                  _rep((di, r + 2 * n)), _rep((r, di)), _rep((1, di)),
+                  _rep((di, n)), _rep((1, di))],
+        out_specs=(_row((di,)), _row((w - 1, di)), _row((di, n))),
+        out_shape=(jax.ShapeDtypeStruct((b, di), z.dtype),
+                   jax.ShapeDtypeStruct((b, w - 1, di), conv_state.dtype),
+                   jax.ShapeDtypeStruct((b, di, n), jnp.float32)),
+        dimension_semantics=("parallel",),
+        interpret=interpret, name="mamba1_decode_step",
+    )(xs_raw, z, conv_state, ssm_state, conv_w.astype(jnp.float32),
+      conv_b2, xproj_w, dtproj_w, dtb2, A.astype(jnp.float32), D2)
+    return y, new_conv, new_ssm
+
+
+_RG_C = common.RG_LRU_C  # Griffin's fixed gate exponent
+
+
+def rglru_step(u: Array, gate: Array, conv_state: Array, h_state: Array,
+               conv_w: Array, conv_b: Array, rg_w: Array, rg_b: Array,
+               ig_w: Array, ig_b: Array, lam: Array, *,
+               sigmoid: Callable = jax.nn.sigmoid,
+               softplus: Callable = jax.nn.softplus,
+               gelu: Callable = jax.nn.gelu,
+               interpret: bool = False) -> Tuple[Array, Array, Array]:
+    """Fused RG-LRU decode step.
+
+    u/gate (b,w) — the ``in_x``/``in_gate`` projections; conv_state
+    (b,wc-1,w); h_state (b,w); rg_w/ig_w (w,w) with (w,) biases; lam (w,).
+    Returns (y (b,w) — gated, pre-``out``; new_conv; new_h).
+    """
+    b, wd = u.shape
+    wc = conv_w.shape[0]
+
+    conv_b2 = conv_b.reshape(1, wd).astype(jnp.float32)
+    rgb2 = rg_b.reshape(1, wd).astype(jnp.float32)
+    igb2 = ig_b.reshape(1, wd).astype(jnp.float32)
+    lam2 = lam.reshape(1, wd).astype(jnp.float32)
+
+    def kernel(u_ref, g_ref, cs_ref, h_ref, cw_ref, cb_ref, rw_ref, rb_ref,
+               iw_ref, ib_ref, lam_ref, y_ref, nc_ref, nh_ref):
+        u_c, new_conv = _conv_shift(_f32(cs_ref)[0], _f32(u_ref),
+                                    _f32(cw_ref), _f32(cb_ref))
+        r = sigmoid(jnp.dot(u_c, _f32(rw_ref),
+                            preferred_element_type=jnp.float32) + _f32(rb_ref))
+        i = sigmoid(jnp.dot(u_c, _f32(iw_ref),
+                            preferred_element_type=jnp.float32) + _f32(ib_ref))
+        log_a = -_RG_C * softplus(_f32(lam_ref)) * r
+        a = jnp.exp(log_a)
+        gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+            * (i * u_c)
+        h_new = a * _f32(h_ref) + gated_in                   # (1, w)
+        out = h_new * gelu(_f32(g_ref))
+        y_ref[...] = out.astype(y_ref.dtype)
+        nc_ref[0] = new_conv.astype(nc_ref.dtype)
+        nh_ref[...] = h_new.astype(nh_ref.dtype)
+
+    y, new_conv, new_h = common.pallas_call(
+        kernel, grid=(b,),
+        in_specs=[_row((wd,)), _row((wd,)), _row((wc - 1, wd)), _row((wd,)),
+                  _rep((wc, wd)), _rep((1, wd)), _rep((wd, wd)),
+                  _rep((1, wd)), _rep((wd, wd)), _rep((1, wd)),
+                  _rep((1, wd))],
+        out_specs=(_row((wd,)), _row((wc - 1, wd)), _row((wd,))),
+        out_shape=(jax.ShapeDtypeStruct((b, wd), u.dtype),
+                   jax.ShapeDtypeStruct((b, wc - 1, wd), conv_state.dtype),
+                   jax.ShapeDtypeStruct((b, wd), jnp.float32)),
+        dimension_semantics=("parallel",),
+        interpret=interpret, name="rglru_decode_step",
+    )(u, gate, conv_state, h_state, conv_w.astype(jnp.float32), conv_b2,
+      rg_w, rgb2, ig_w, igb2, lam2)
+    return y, new_conv, new_h

@@ -12,10 +12,12 @@ from typing import Optional
 
 import jax
 
+from repro.core import pwl
 from repro.core.pwl import PWLTable
 from repro.kernels import (actiba as _actiba, cumba as _cumba,
-                           flash_attention as _fa, matmul_pwl as _mpwl,
-                           reduba as _reduba, rg_lru as _rg, ref)
+                           decode_step as _ds, flash_attention as _fa,
+                           matmul_pwl as _mpwl, reduba as _reduba,
+                           rg_lru as _rg, ref)
 
 Array = jax.Array
 
@@ -72,6 +74,64 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 def rg_lru_scan(a: Array, b: Array, *, interpret: bool = False) -> Array:
     """Gated linear recurrence h_t = a_t h_{t-1} + b_t."""
     return _rg.rg_lru_scan(a, b, interpret=interpret)
+
+
+# ----------------------------------------------------------------------------
+# Fused single-token decode steps (``XambaConfig.decode`` pallas modes)
+# ----------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_step(state, x_t, dt_t, A, B_t, C_t, *, interpret: bool = False):
+    """Bare SSD recurrent update (core/ssd.py pallas dispatch target)."""
+    return _ds.ssd_step(state, x_t, dt_t, A, B_t, C_t, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def sscan_step(state, u_t, delta_t, A, B_t, C_t, D=None, *,
+               interpret: bool = False):
+    """Bare selective-scan update (core/selective_scan.py pallas target)."""
+    return _ds.sscan_step(state, u_t, delta_t, A, B_t, C_t, D,
+                          interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("ngroups", "head_dim", "xamba",
+                                   "interpret"))
+def mamba2_decode_step(z, xbc, dt, conv_state, ssm_state, conv_w, conv_b,
+                       dt_bias, A, D, norm_scale, *, ngroups: int,
+                       head_dim: int, xamba=None, interpret: bool = False):
+    """Fused Mamba-2 single-token step (conv + SiLU + softplus + SSD +
+    gated norm).  ``xamba`` (hashable config) bakes ActiBA tables in."""
+    return _ds.mamba2_step(
+        z, xbc, dt, conv_state, ssm_state, conv_w, conv_b, dt_bias, A, D,
+        norm_scale, ngroups=ngroups, head_dim=head_dim,
+        silu=pwl.activation("silu", xamba),
+        softplus=pwl.activation("softplus", xamba), interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("dt_rank", "xamba", "interpret"))
+def mamba1_decode_step(xs_raw, z, conv_state, ssm_state, conv_w, conv_b,
+                       xproj_w, dtproj_w, dtproj_b, A, D, *, dt_rank: int,
+                       xamba=None, interpret: bool = False):
+    """Fused Mamba-1 single-token step (conv + SiLU + dt projections +
+    selective scan + gate)."""
+    return _ds.mamba1_step(
+        xs_raw, z, conv_state, ssm_state, conv_w, conv_b, xproj_w,
+        dtproj_w, dtproj_b, A, D, dt_rank=dt_rank,
+        silu=pwl.activation("silu", xamba),
+        softplus=pwl.activation("softplus", xamba), interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("xamba", "interpret"))
+def rglru_decode_step(u, gate, conv_state, h_state, conv_w, conv_b, rg_w,
+                      rg_b, ig_w, ig_b, lam, *, xamba=None,
+                      interpret: bool = False):
+    """Fused RG-LRU single-token step (conv + sigmoid gates + recurrence
+    + GeLU output gate)."""
+    return _ds.rglru_step(
+        u, gate, conv_state, h_state, conv_w, conv_b, rg_w, rg_b, ig_w,
+        ig_b, lam, sigmoid=pwl.activation("sigmoid", xamba),
+        softplus=pwl.activation("softplus", xamba),
+        gelu=pwl.activation("gelu", xamba), interpret=interpret)
 
 
 # Re-export oracles for convenience in tests/benchmarks.

@@ -84,6 +84,110 @@ def attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
     return out.astype(q.dtype)
 
 
+def _conv_shift_ref(conv_state, x, w, b):
+    """One causal-conv decode step: conv_state (bt,w-1,d), x (bt,d)."""
+    win = jnp.concatenate([conv_state.astype(jnp.float32),
+                           x.astype(jnp.float32)[:, None]], axis=1)
+    out = jnp.sum(win * w.astype(jnp.float32)[None], axis=1) + \
+        b.astype(jnp.float32)[None]
+    return out, win[:, 1:]
+
+
+def ssd_step_ref(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token SSD recurrence oracle (shapes as core.ssd)."""
+    b, h, p, n = state.shape
+    hpg = h // B_t.shape[1]
+    Bh = jnp.repeat(B_t.astype(jnp.float32), hpg, axis=1)
+    Ch = jnp.repeat(C_t.astype(jnp.float32), hpg, axis=1)
+    dtf = dt_t.astype(jnp.float32)
+    decay = jnp.exp(dtf * A.astype(jnp.float32)[None, :])
+    dBx = dtf[..., None, None] * Bh[:, :, None, :] * \
+        x_t.astype(jnp.float32)[..., None]
+    new = state.astype(jnp.float32) * decay[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bhn->bhp", new, Ch)
+    return new, y.astype(x_t.dtype)
+
+
+def sscan_step_ref(state, u_t, delta_t, A, B_t, C_t, D=None):
+    """Single-token selective-scan oracle (shapes as core.selective_scan)."""
+    dtf = delta_t.astype(jnp.float32)
+    decay = jnp.exp(dtf[..., None] * A.astype(jnp.float32)[None])
+    dBu = (dtf * u_t.astype(jnp.float32))[..., None] * \
+        B_t.astype(jnp.float32)[:, None, :]
+    new = state.astype(jnp.float32) * decay + dBu
+    y = jnp.einsum("bdn,bn->bd", new, C_t.astype(jnp.float32))
+    if D is not None:
+        y = y + u_t.astype(jnp.float32) * D.astype(jnp.float32)[None]
+    return new, y.astype(u_t.dtype)
+
+
+def mamba2_step_ref(z, xbc, dt, conv_state, ssm_state, conv_w, conv_b,
+                    dt_bias, A, D, norm_scale, *, ngroups, head_dim,
+                    silu=jax.nn.silu, softplus=jax.nn.softplus, eps=1e-6):
+    """Fused Mamba-2 decode-step oracle (shapes as kernels.decode_step)."""
+    b, di = z.shape
+    g, p = ngroups, head_dim
+    n = ssm_state.shape[-1]
+    h = dt.shape[1]
+    conv_out, new_conv = _conv_shift_ref(conv_state, xbc, conv_w, conv_b)
+    act = silu(conv_out)
+    xs = act[:, :di].reshape(b, h, p)
+    B = act[:, di:di + g * n].reshape(b, g, n)
+    C = act[:, di + g * n:].reshape(b, g, n)
+    dt_f = softplus(dt.astype(jnp.float32) +
+                    dt_bias.astype(jnp.float32)[None])
+    new, y = ssd_step_ref(ssm_state, xs, dt_f, A, B, C)
+    y = y + D.astype(jnp.float32)[None, :, None] * xs
+    yf = y.reshape(b, di)
+    ms = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(ms + eps) * norm_scale.astype(jnp.float32)[None]
+    out = yn * silu(z.astype(jnp.float32))
+    return (out.astype(z.dtype), new_conv.astype(conv_state.dtype),
+            new.astype(jnp.float32))
+
+
+def mamba1_step_ref(xs_raw, z, conv_state, ssm_state, conv_w, conv_b,
+                    xproj_w, dtproj_w, dtproj_b, A, D, *, dt_rank,
+                    silu=jax.nn.silu, softplus=jax.nn.softplus):
+    """Fused Mamba-1 decode-step oracle (shapes as kernels.decode_step)."""
+    n = ssm_state.shape[-1]
+    r = dt_rank
+    conv_out, new_conv = _conv_shift_ref(conv_state, xs_raw, conv_w, conv_b)
+    xs = silu(conv_out)
+    dbc = jnp.dot(xs, xproj_w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    dt_low, B, C = dbc[:, :r], dbc[:, r:r + n], dbc[:, r + n:]
+    dt_f = softplus(jnp.dot(dt_low, dtproj_w.astype(jnp.float32),
+                            preferred_element_type=jnp.float32) +
+                    dtproj_b.astype(jnp.float32)[None])
+    new, y = sscan_step_ref(ssm_state, xs, dt_f, A, B, C, D)
+    out = y * silu(z.astype(jnp.float32))
+    return (out.astype(z.dtype), new_conv.astype(conv_state.dtype),
+            new.astype(jnp.float32))
+
+
+def rglru_step_ref(u, gate, conv_state, h_state, conv_w, conv_b, rg_w,
+                   rg_b, ig_w, ig_b, lam, *, sigmoid=jax.nn.sigmoid,
+                   softplus=jax.nn.softplus, gelu=None):
+    """Fused RG-LRU decode-step oracle (shapes as kernels.decode_step)."""
+    from functools import partial
+    gelu = gelu or partial(jax.nn.gelu, approximate=True)
+    from repro.kernels.common import RG_LRU_C
+    u_c, new_conv = _conv_shift_ref(conv_state, u, conv_w, conv_b)
+    r = sigmoid(jnp.dot(u_c, rg_w.astype(jnp.float32)) +
+                rg_b.astype(jnp.float32)[None])
+    i = sigmoid(jnp.dot(u_c, ig_w.astype(jnp.float32)) +
+                ig_b.astype(jnp.float32)[None])
+    log_a = -RG_LRU_C * softplus(lam.astype(jnp.float32))[None] * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i * u_c)
+    h_new = a * h_state.astype(jnp.float32) + gated_in
+    out = h_new * gelu(gate.astype(jnp.float32))
+    return (out.astype(u.dtype), new_conv.astype(conv_state.dtype),
+            h_new.astype(jnp.float32))
+
+
 def rg_lru_scan_ref(a: Array, b: Array) -> Array:
     """h_t = a_t h_{t-1} + b_t via lax.scan (exact sequential semantics)."""
     af = a.astype(jnp.float32)

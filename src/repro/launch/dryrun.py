@@ -75,11 +75,17 @@ def shard_cache(tree, mesh, cfg, batch: int):
         bsize *= mesh.shape[a]
     msize = mesh.shape.get("model", 1)
 
+    # Leading stack axes that must stay unsharded: scan-stacked layers and
+    # recurrentgemma's group-stacked serving caches.
+    stack_sizes = {cfg.n_layers}
+    if cfg.block_pattern:
+        stack_sizes.add(cfg.n_layers // len(cfg.block_pattern))
+
     def one(x):
         spec = [None] * x.ndim
         used_b = False
         for d, size in enumerate(x.shape):
-            if d == 0 and size == cfg.n_layers and cfg.scan_layers:
+            if d == 0 and size in stack_sizes and cfg.scan_layers:
                 continue
             if not used_b and size == batch and size % bsize == 0:
                 spec[d] = baxes

@@ -10,6 +10,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.xamba import DECODE_MODES
 from repro.models import build_model
 from repro.nn.params import init_params
 from repro.serve import ContinuousEngine, Engine, ServeConfig
@@ -30,11 +31,16 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--policy", choices=("fcfs", "priority"),
                     default="fcfs")
+    ap.add_argument("--decode-mode", default=None, choices=DECODE_MODES,
+                    help="XambaConfig.decode mode for the fused "
+                         "single-token step")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO, format="%(message)s")
 
     cfg = get_config(args.arch, reduced=args.reduced)
+    if args.decode_mode:
+        cfg = cfg.with_decode_mode(args.decode_mode)
     model = build_model(cfg)
     params = init_params(model.param_specs(), jax.random.PRNGKey(args.seed),
                          cfg.dtype)

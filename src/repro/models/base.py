@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -10,6 +11,62 @@ import jax.numpy as jnp
 from repro.core.xamba import XambaConfig
 
 Array = jax.Array
+
+
+class DecodeAPI:
+    """The serving surface every model family implements:
+
+    * ``prefill(params, batch, cache) -> (last_logits, cache)`` — run the
+      chunked/parallel form over the prompt and emit the recurrent state;
+    * ``decode_step(params, token, cache, index) -> (logits, cache)`` —
+      the O(1) cached-state step (``index``: ``()`` or ``(b,)`` int32).
+
+    ``apply`` is a deprecation shim for the pre-split call signature
+    (``model.apply(params, tokens, state=...)``); external callers should
+    migrate to the explicit pair above.
+    """
+
+    def decode_view(self, params):
+        """Decode-optimized *view* of ``params``: scan-stacked layer
+        pytrees are pre-sliced into per-layer tuples ONCE (outside the
+        jitted program).  XLA materializes a fresh copy of every sliced
+        weight on each call when the slice happens in-program, so the
+        serving engines build this view at init and feed it to the decode
+        program; parameter *storage* (checkpoints, training, prefill)
+        stays stacked.  Families without a stacked ``layers`` trunk
+        return ``params`` unchanged (RecurrentGemma overrides for its
+        group-stacked layout)."""
+        layers_p = params.get("layers") if isinstance(params, dict) else None
+        if layers_p is None or not getattr(self.cfg, "scan_layers", False) \
+                or isinstance(layers_p, tuple):
+            return params
+        return dict(params, layers=tuple(
+            jax.tree.map(lambda a: a[i], layers_p)
+            for i in range(self.cfg.n_layers)))
+
+    def apply(self, params, tokens, state=None, index=None):
+        warnings.warn(
+            "model.apply(state=...) is deprecated; call model.prefill() / "
+            "model.decode_step() explicitly (see docs/architecture.md)",
+            DeprecationWarning, stacklevel=2)
+        batch = tokens if isinstance(tokens, dict) else {"tokens": tokens}
+        toks = batch["tokens"]
+        if state is None:
+            fwd = getattr(self, "forward", None)
+            if fwd is None:
+                raise TypeError(
+                    f"{type(self).__name__}.apply() without state= has no "
+                    "stateless equivalent; use loss()/prefill() instead")
+            return fwd(params, toks)
+        if toks.shape[1] == 1:
+            if index is None:
+                # Defaulting to position 0 would silently misplace KV rows
+                # for attention-bearing families; make the caller say it.
+                raise TypeError(
+                    "apply(state=...) with a single token dispatches to "
+                    "decode_step and needs index= (the token's position)")
+            return self.decode_step(params, toks, state, index)
+        return self.prefill(params, batch, state)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +152,11 @@ class ModelConfig:
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)
+
+    def with_decode_mode(self, mode: str) -> "ModelConfig":
+        """Config with ``XambaConfig.decode`` overridden (CLI plumbing)."""
+        return self.replace(xamba=dataclasses.replace(self.xamba,
+                                                      decode=mode))
 
 
 def cross_entropy_loss(logits: Array, labels: Array,

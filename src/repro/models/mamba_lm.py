@@ -21,7 +21,7 @@ from repro.nn.params import stack_specs
 Array = jax.Array
 
 
-class MambaLM:
+class MambaLM(base.DecodeAPI):
     """family == "mamba" (v1, selective scan) or "mamba2" (SSD)."""
 
     def __init__(self, cfg: base.ModelConfig):
@@ -72,13 +72,33 @@ class MambaLM:
                       if cfg.remat == "dots" else None)
             block = jax.checkpoint(block, policy=policy)
 
-        if cfg.scan_layers:
+        if cfg.scan_layers and isinstance(params["layers"], tuple):
+            # Decode view: layer weights are pre-sliced buffers; only the
+            # (small) stacked states are sliced/restacked in-program.
+            ns = []
+            for i, p_i in enumerate(params["layers"]):
+                st_i = jax.tree.map(lambda a: a[i], states)
+                x, n_i = block(p_i, x, st_i)
+                x = dist_api.shard_tokens3d(x)
+                ns.append(n_i)
+            new_states = jax.tree.map(lambda *ls: jnp.stack(ls), *ns)
+        elif cfg.scan_layers:
             def body(x, xs):
                 p, state = xs
                 y, new_state = block(p, x, state)
                 y = dist_api.shard_tokens3d(y)
                 return y, new_state
-            x, new_states = jax.lax.scan(body, x, (params["layers"], states))
+            # Decode (one token) fully unrolls the layer scan: one trace of
+            # the stacked pytree (no per-layer Python dispatch) and no
+            # XLA while-loop overhead per generated token.  ``naive``
+            # decode mode keeps the rolled scan, matching the program
+            # structure decode had before the fused path existed (the
+            # benchmark baseline; its step math is the paper's
+            # mul+ReduceSum chain, see nn/ssm.py).
+            unroll = (True if x.shape[1] == 1 and
+                      cfg.xamba.decode != "naive" else 1)
+            x, new_states = jax.lax.scan(body, x, (params["layers"], states),
+                                         unroll=unroll)
         else:
             new_states = []
             for i in range(cfg.n_layers):
@@ -139,13 +159,14 @@ class MambaLM:
         if cfg.scan_layers:
             return jax.tree.map(
                 lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
-        return [one for _ in range(cfg.n_layers)]
+        # Distinct buffers per layer: an aliased list (same arrays repeated)
+        # cannot be donated into the jitted decode program.
+        return [jax.tree.map(jnp.copy, one) for _ in range(cfg.n_layers)]
 
     def prefill(self, params, batch, cache) -> Tuple[Array, Any]:
         x = layers.embed(params["embed"], batch["tokens"])
         x, new_states = self._trunk(params, x, cache)
-        logits = self._logits(params, x[:, -1:])
-        return logits[:, 0], new_states
+        return self._logits(params, x[:, -1]), new_states
 
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
         """index: () or (b,) — accepted for engine uniformity and ignored;
@@ -154,5 +175,6 @@ class MambaLM:
         del index
         x = layers.embed(params["embed"], token)
         x, new_states = self._trunk(params, x, cache)
-        logits = self._logits(params, x)
-        return logits[:, 0], new_states
+        # Final norm + unembed on the squeezed (b, d) token — the batched
+        # (b, 1, d) gemm is a pathological layout for single-token decode.
+        return self._logits(params, x[:, 0]), new_states

@@ -26,14 +26,19 @@ from repro.nn.params import stack_specs
 Array = jax.Array
 
 
-class RecurrentGemma:
+class RecurrentGemma(base.DecodeAPI):
     """Layer stack = N full (r, r, a) pattern groups + a tail remainder.
 
     Training scans over the stacked pattern GROUPS (homogeneous pytree ->
     one scan body holding one group's heterogeneous layers), which keeps the
-    512-device HLO bounded; serving uses the per-layer loop (heterogeneous
-    caches, tiny modules).  Parameters live in group-stacked form; the
-    serving path slices layer i out of group i//P, position i%P.
+    512-device HLO bounded.  Serving follows the same shape when
+    ``scan_layers`` is on: caches live GROUP-STACKED (``{"groups": {pos:
+    (n_groups, b, ...) tree}, "tail": [...]}`` — pattern position is a dict
+    key, so each scanned leaf is homogeneous) and prefill/decode scan over
+    groups instead of Python-dispatching 26 layers.  With ``scan_layers``
+    off, serving keeps the per-layer loop over per-layer cache lists; the
+    grouped parameter layout serves both (``_layer_params`` slices layer i
+    out of group i//P, position i%P).
     """
 
     def __init__(self, cfg: base.ModelConfig):
@@ -81,8 +86,20 @@ class RecurrentGemma:
         p_len = len(self.pattern)
         if i < self.n_groups * p_len:
             g, j = divmod(i, p_len)
+            if isinstance(params["groups"], tuple):
+                return params["groups"][g][str(j)]
             return jax.tree.map(lambda a: a[g], params["groups"][str(j)])
         return params["tail"][str(i - self.n_groups * p_len)]
+
+    def decode_view(self, params):
+        """Pre-slice the group-stacked weights into a per-group tuple (see
+        ``base.DecodeAPI.decode_view``)."""
+        if not self.cfg.scan_layers or self.n_groups == 0 or \
+                isinstance(params.get("groups"), tuple):
+            return params
+        return dict(params, groups=tuple(
+            jax.tree.map(lambda a: a[g], params["groups"])
+            for g in range(self.n_groups)))
 
     def _block(self, p, kind, x, positions, cache, cache_index):
         cfg = self.cfg
@@ -124,6 +141,52 @@ class RecurrentGemma:
                 x = dist_api.shard_tokens3d(x)
             return x, None
 
+        if isinstance(caches, dict):
+            # Serving path, group-stacked caches: one scan body holds one
+            # pattern group; cache turnover stays a single compiled scan.
+            if isinstance(params.get("groups"), tuple):
+                # Decode view: pre-sliced group weights (see
+                # base.DecodeAPI.decode_view); loop groups in-program.
+                ngs = []
+                for g, gp in enumerate(params["groups"]):
+                    ncs = {}
+                    for j, kind in enumerate(self.pattern):
+                        gc = jax.tree.map(lambda a: a[g],
+                                          caches["groups"][str(j)])
+                        x, nc = block(gp[str(j)], kind, x, positions, gc,
+                                      cache_index)
+                        ncs[str(j)] = nc
+                    x = dist_api.shard_tokens3d(x)
+                    ngs.append(ncs)
+                new_groups = {
+                    str(j): jax.tree.map(lambda *ls: jnp.stack(ls),
+                                         *(ng[str(j)] for ng in ngs))
+                    for j in range(len(self.pattern))}
+            else:
+                def group_body(x, xs):
+                    gp, gc = xs
+                    ncs = {}
+                    for j, kind in enumerate(self.pattern):
+                        x, nc = block(gp[str(j)], kind, x, positions,
+                                      gc[str(j)], cache_index)
+                        ncs[str(j)] = nc
+                    return dist_api.shard_tokens3d(x), ncs
+
+                unroll = (True if x.shape[1] == 1 and
+                          self.cfg.xamba.decode != "naive" else 1)
+                x, new_groups = jax.lax.scan(
+                    group_body, x, (params["groups"], caches["groups"]),
+                    unroll=unroll)
+            new_tail: List[Any] = []
+            base_i = self.n_groups * len(self.pattern)
+            for i in range(self.n_tail):
+                x, nc = block(params["tail"][str(i)],
+                              self.layer_kinds[base_i + i], x, positions,
+                              caches["tail"][i], cache_index)
+                x = dist_api.shard_tokens3d(x)
+                new_tail.append(nc)
+            return x, {"groups": new_groups, "tail": new_tail}
+
         new_caches: List[Any] = []
         for i, kind in enumerate(self.layer_kinds):
             cache = None if caches is None else caches[i]
@@ -160,25 +223,38 @@ class RecurrentGemma:
         return loss, metrics
 
     # ---------------- serving ----------------
-    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    def _layer_cache(self, kind: str, batch: int, max_seq: int, dtype):
         cfg = self.cfg
-        caches = []
-        for kind in self.layer_kinds:
-            if kind == "recurrent":
-                caches.append(ssm.rglru_init_state(cfg, batch, dtype))
-            else:
-                window = cfg.sliding_window or max_seq
-                caches.append(attention.init_cache(
-                    cfg, batch, min(max_seq, window), dtype))
-        return caches
+        if kind == "recurrent":
+            return ssm.rglru_init_state(cfg, batch, dtype)
+        window = cfg.sliding_window or max_seq
+        return attention.init_cache(cfg, batch, min(max_seq, window), dtype)
+
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        if self.cfg.scan_layers and self.n_groups > 0:
+            # Group-stacked layout (see class docstring): leading n_groups
+            # axis per leaf; pattern position is a dict key so every
+            # scanned leaf stays homogeneous.
+            groups = {
+                str(j): jax.tree.map(
+                    lambda a: jnp.zeros((self.n_groups,) + a.shape, a.dtype),
+                    self._layer_cache(kind, batch, max_seq, dtype))
+                for j, kind in enumerate(self.pattern)
+            }
+            base_i = self.n_groups * len(self.pattern)
+            tail = [self._layer_cache(self.layer_kinds[base_i + i], batch,
+                                      max_seq, dtype)
+                    for i in range(self.n_tail)]
+            return {"groups": groups, "tail": tail}
+        return [self._layer_cache(kind, batch, max_seq, dtype)
+                for kind in self.layer_kinds]
 
     def prefill(self, params, batch, cache) -> Tuple[Array, Any]:
         x = self._embed(params, batch["tokens"])
         positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
         x, new_caches = self._trunk(params, x, positions,
                                     cache, cache_index=jnp.int32(0))
-        logits = self._logits(params, x[:, -1:])
-        return logits[:, 0], new_caches
+        return self._logits(params, x[:, -1]), new_caches
 
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
         """index: () or (b,) int32 — per-row positions realign the local
@@ -190,5 +266,5 @@ class RecurrentGemma:
             (token.shape[0], 1))
         x, new_caches = self._trunk(params, x, positions, cache,
                                     cache_index=index)
-        logits = self._logits(params, x)
-        return logits[:, 0], new_caches
+        # Squeezed (b, d) final norm + unembed (see models/mamba_lm.py).
+        return self._logits(params, x[:, 0]), new_caches

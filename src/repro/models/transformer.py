@@ -49,7 +49,7 @@ def _block_apply(params, cfg, x, positions, cache, cache_index):
     return x + h, new_cache, aux
 
 
-class TransformerLM:
+class TransformerLM(base.DecodeAPI):
     def __init__(self, cfg: base.ModelConfig):
         self.cfg = cfg
 
@@ -100,15 +100,33 @@ class TransformerLM:
                       if cfg.remat == "dots" else None)
             block = jax.checkpoint(block, policy=policy)
 
-        if cfg.scan_layers:
+        if cfg.scan_layers and isinstance(params["layers"], tuple):
+            # Decode view: pre-sliced layer weights, stacked caches
+            # sliced/restacked in-program (see models/mamba_lm.py).
+            ns = []
+            for i, p_i in enumerate(params["layers"]):
+                c_i = (None if caches is None
+                       else jax.tree.map(lambda a: a[i], caches))
+                x, n_i, a = block(p_i, x, c_i)
+                x = dist_api.shard_tokens3d(x)
+                aux_total += a
+                ns.append(n_i)
+            new_caches = (None if caches is None
+                          else jax.tree.map(lambda *ls: jnp.stack(ls), *ns))
+        elif cfg.scan_layers:
             def body(carry, xs):
                 x, aux = carry
                 p, cache = xs
                 y, new_cache, a = block(p, x, cache)
                 y = dist_api.shard_tokens3d(y)
                 return (y, aux + a), new_cache
+            # Fully unroll the layer scan at decode (see models/mamba_lm.py);
+            # naive decode mode keeps the rolled pre-refactor scan.
+            unroll = (True if x.shape[1] == 1 and
+                      cfg.xamba.decode != "naive" else 1)
             (x, aux_total), new_caches = jax.lax.scan(
-                body, (x, aux_total), (params["layers"], caches))
+                body, (x, aux_total), (params["layers"], caches),
+                unroll=unroll)
         else:
             new_caches = []
             for i in range(cfg.n_layers):
@@ -186,8 +204,7 @@ class TransformerLM:
         x, positions, _ = self._embed_inputs(params, batch)
         x, new_caches, _ = self._trunk(params, x, positions, cache,
                                        cache_index=jnp.int32(0))
-        logits = self._logits(params, x[:, -1:])
-        return logits[:, 0], new_caches
+        return self._logits(params, x[:, -1]), new_caches
 
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
         """token: (b, 1); index: () or (b,) int32 — position of this token.
@@ -206,5 +223,5 @@ class TransformerLM:
             (token.shape[0], 1))
         x, new_caches, _ = self._trunk(params, x, positions, cache,
                                        cache_index=index)
-        logits = self._logits(params, x)
-        return logits[:, 0], new_caches
+        # Squeezed (b, d) final norm + unembed (see models/mamba_lm.py).
+        return self._logits(params, x[:, 0]), new_caches

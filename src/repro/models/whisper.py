@@ -20,7 +20,7 @@ from repro.nn import attention, layers, mlp as mlp_mod
 Array = jax.Array
 
 
-class Whisper:
+class Whisper(base.DecodeAPI):
     def __init__(self, cfg: base.ModelConfig):
         self.cfg = cfg
         self.n_enc = cfg.encoder_layers or cfg.n_layers
@@ -148,8 +148,7 @@ class Whisper:
         positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
         x, new_caches = self._dec_trunk(params, x, positions, enc_out,
                                         cache, cache_index=jnp.int32(0))
-        logits = self._logits(params, x[:, -1:])
-        return logits[:, 0], new_caches
+        return self._logits(params, x[:, -1]), new_caches
 
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
         cfg = self.cfg
@@ -159,5 +158,5 @@ class Whisper:
         positions = jnp.full((token.shape[0], 1), index, jnp.int32)
         x, new_caches = self._dec_trunk(params, x, positions, None,
                                         cache, cache_index=index)
-        logits = self._logits(params, x)
-        return logits[:, 0], new_caches
+        # Squeezed (b, d) final norm + unembed (see models/mamba_lm.py).
+        return self._logits(params, x[:, 0]), new_caches

@@ -112,9 +112,12 @@ def embed(p: dict, tokens: Array) -> Array:
 
 
 def unembed(p: dict, x: Array) -> Array:
-    """Tied logits: x @ table^T in fp32."""
-    return jnp.dot(x, p["table"].T.astype(x.dtype),
-                   preferred_element_type=jnp.float32)
+    """Tied logits: x @ table^T in fp32 (contracted in place — no
+    materialized transpose, which matters at one-token decode rates)."""
+    table = p["table"].astype(x.dtype)
+    return jax.lax.dot_general(
+        x, table, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
 
 
 # ----------------------------------------------------------------------------
@@ -139,3 +142,16 @@ def causal_conv1d(p: dict, x: Array,
     y = y + p["b"].astype(jnp.float32)
     new_state = xp[:, -(width - 1):, :] if width > 1 else state
     return y.astype(x.dtype), new_state
+
+
+def causal_conv1d_step(p: dict, x: Array, state: Array) -> Tuple[Array, Array]:
+    """One decode step of ``causal_conv1d`` without the seq axis.
+
+    x: (b, d); state: (b, width-1, d).  Returns (y (b, d), new_state) —
+    the conv-tail shift is a single window reduction instead of per-tap
+    slices (the fused-step kernels mirror this exact op order).
+    """
+    win = jnp.concatenate([state, x[:, None]], axis=1)   # (b, width, d)
+    y = jnp.sum(win.astype(jnp.float32) * p["w"].astype(jnp.float32)[None],
+                axis=1) + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype), win[:, 1:]

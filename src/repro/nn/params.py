@@ -81,6 +81,20 @@ def stack_specs(specs: PyTree, n: int, axis_name: Optional[str] = "layers"
         specs, is_leaf=is_spec)
 
 
+def restack_layers(per_layer: Dict[str, PyTree]) -> PyTree:
+    """Restack a per-layer ``{"0": tree, "1": tree, ...}`` dict into the
+    scan-over-layers layout (leading layer axis on every leaf).
+
+    This is the bridge from per-layer-dispatch checkpoints (or the
+    pre-refactor decode path) onto the stacked ``jax.lax.scan`` trunk:
+    ``params["layers"] = restack_layers(params["layers"])`` and the same
+    model serves under ``scan_layers=True``.
+    """
+    n = len(per_layer)
+    trees = [per_layer[str(i)] for i in range(n)]
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+
 def count_params(specs: PyTree) -> int:
     leaves = jax.tree.leaves(specs, is_leaf=is_spec)
     return sum(int(np.prod(s.shape)) for s in leaves)

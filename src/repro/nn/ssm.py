@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pwl, selective_scan as sscan, ssd as ssd_mod
+from repro.kernels.common import RG_LRU_C as _RG_C
 from repro.nn import layers
 from repro.nn.params import ParamSpec
 
@@ -69,10 +70,11 @@ def mamba2_init_state(cfg, batch: int, dtype=jnp.float32) -> Mamba2State:
         ssm=jnp.zeros((batch, nheads, cfg.ssm_head_dim, n), jnp.float32))
 
 
-def mamba2_apply(params: dict, cfg, x: Array,
-                 state: Optional[Mamba2State] = None,
-                 ) -> Tuple[Array, Optional[Mamba2State]]:
-    """x: (b, l, d). l==1 + state -> decode step; else full sequence."""
+def _mamba2_decode_naive(params: dict, cfg, x: Array, state: Mamba2State
+                         ) -> Tuple[Array, Mamba2State]:
+    """The unfused dense step (the pre-refactor / NPU-baseline op chain):
+    seq-axis (b, 1, d) operands end to end, per-tap conv slices, and the
+    state contraction as broadcast-multiply + ReduceSum."""
     b, l, d = x.shape
     d_inner, nheads, g, n = mamba2_dims(cfg)
     p_hd = cfg.ssm_head_dim
@@ -83,10 +85,89 @@ def mamba2_apply(params: dict, cfg, x: Array,
     zxbcdt = layers.linear(params["in_proj"], x)
     z, xbc, dt = jnp.split(
         zxbcdt, [d_inner, 2 * d_inner + 2 * g * n], axis=-1)
+    xbc_conv, new_conv = layers.causal_conv1d(params["conv"], xbc,
+                                              state.conv)
+    xbc_conv = silu(xbc_conv)
+    xs, B, C = jnp.split(xbc_conv, [d_inner, d_inner + g * n], axis=-1)
+    xs = xs.reshape(b, l, nheads, p_hd)
+    dt = softplus(dt.astype(jnp.float32) +
+                  params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    new_ssm, y = ssd_mod.ssd_decode_step(
+        state.ssm, xs[:, 0], dt[:, 0], A, B.reshape(b, g, n),
+        C.reshape(b, g, n), mode="naive")
+    y = y[:, None] + xs * params["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, l, d_inner)
+    y = layers.norm(params["norm"], y) * silu(z)
+    out = layers.linear(params["out_proj"], y.astype(x.dtype))
+    return out, Mamba2State(new_conv, new_ssm)
 
-    decode = state is not None and l == 1 and not cfg.force_prefill_path
+
+def _mamba2_decode(params: dict, cfg, x: Array, state: Mamba2State
+                   ) -> Tuple[Array, Mamba2State]:
+    """Fused single-token step, dispatched on ``XambaConfig.decode``."""
+    b = x.shape[0]
+    d_inner, nheads, g, n = mamba2_dims(cfg)
+    p_hd = cfg.ssm_head_dim
+    xamba = cfg.xamba
+    mode = xamba.decode
+    if mode == "naive":
+        return _mamba2_decode_naive(params, cfg, x, state)
+
+    # Token-major 2D layout throughout: (b, 1, d) batched matmuls hit a
+    # slow XLA-CPU gemm path; the whole step runs on (b, d) operands.
+    zxbcdt = layers.linear(params["in_proj"], x[:, 0])       # (b, d_in_proj)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * g * n], axis=-1)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))        # (nheads,)
+
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        y, new_conv, new_ssm = kops.mamba2_decode_step(
+            z, xbc, dt, state.conv, state.ssm,
+            params["conv"]["w"], params["conv"]["b"], params["dt_bias"],
+            A, params["D"], params["norm"]["scale"],
+            ngroups=g, head_dim=p_hd, xamba=xamba,
+            interpret=(mode == "pallas_interpret"))
+    else:
+        silu = pwl.activation("silu", xamba)
+        softplus = pwl.activation("softplus", xamba)
+        xbc_conv, new_conv = layers.causal_conv1d_step(
+            params["conv"], xbc, state.conv)
+        xbc_conv = silu(xbc_conv)
+        xs, B, C = jnp.split(xbc_conv, [d_inner, d_inner + g * n], axis=-1)
+        xs = xs.reshape(b, nheads, p_hd)
+        dt_f = softplus(dt.astype(jnp.float32) +
+                        params["dt_bias"].astype(jnp.float32))
+        new_ssm, y = ssd_mod.ssd_decode_step(
+            state.ssm, xs, dt_f, A, B.reshape(b, g, n), C.reshape(b, g, n),
+            mode=mode)
+        y = y + xs * params["D"].astype(x.dtype)[None, :, None]
+        y = layers.norm(params["norm"], y.reshape(b, d_inner)) * silu(z)
+    out = layers.linear(params["out_proj"], y.astype(x.dtype))[:, None]
+    return out, Mamba2State(new_conv, new_ssm)
+
+
+def mamba2_apply(params: dict, cfg, x: Array,
+                 state: Optional[Mamba2State] = None,
+                 ) -> Tuple[Array, Optional[Mamba2State]]:
+    """x: (b, l, d). l==1 + state -> decode step; else full sequence."""
+    b, l, d = x.shape
+    d_inner, nheads, g, n = mamba2_dims(cfg)
+    p_hd = cfg.ssm_head_dim
+    xamba = cfg.xamba
+
+    if state is not None and l == 1 and not cfg.force_prefill_path:
+        return _mamba2_decode(params, cfg, x, state)
+
+    silu = pwl.activation("silu", xamba)
+    softplus = pwl.activation("softplus", xamba)
+
+    zxbcdt = layers.linear(params["in_proj"], x)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * g * n], axis=-1)
+
     conv_state = state.conv if state is not None else None
-
     xbc_conv, new_conv = layers.causal_conv1d(params["conv"], xbc, conv_state)
     xbc_conv = silu(xbc_conv)
     xs, B, C = jnp.split(xbc_conv, [d_inner, d_inner + g * n], axis=-1)
@@ -97,17 +178,12 @@ def mamba2_apply(params: dict, cfg, x: Array,
                   params["dt_bias"].astype(jnp.float32))     # (b, l, nheads)
     A = -jnp.exp(params["A_log"].astype(jnp.float32))        # (nheads,)
 
-    if decode:
-        new_ssm, y = ssd_mod.ssd_decode_step(
-            state.ssm, xs[:, 0], dt[:, 0], A, B[:, 0], C[:, 0])
-        y = y[:, None]                                        # (b, 1, h, p)
-    else:
-        init = state.ssm if state is not None else None
-        mm_dtype = jnp.bfloat16 if cfg.ssd_dtype == "bfloat16" else None
-        y, new_ssm = ssd_mod.ssd(
-            xs, dt, A, B, C, chunk_size=min(cfg.chunk_size, l),
-            initial_state=init, xamba=xamba, return_final_state=True,
-            matmul_dtype=mm_dtype)
+    init = state.ssm if state is not None else None
+    mm_dtype = jnp.bfloat16 if cfg.ssd_dtype == "bfloat16" else None
+    y, new_ssm = ssd_mod.ssd(
+        xs, dt, A, B, C, chunk_size=min(cfg.chunk_size, l),
+        initial_state=init, xamba=xamba, return_final_state=True,
+        matmul_dtype=mm_dtype)
 
     y = y + xs * params["D"].astype(x.dtype)[None, None, :, None]
     y = y.reshape(b, l, d_inner)
@@ -153,6 +229,75 @@ def mamba1_init_state(cfg, batch: int, dtype=jnp.float32) -> Mamba1State:
         ssm=jnp.zeros((batch, d_inner, cfg.d_state), jnp.float32))
 
 
+def _mamba1_decode_naive(params: dict, cfg, x: Array, state: Mamba1State
+                         ) -> Tuple[Array, Mamba1State]:
+    """The unfused dense step (pre-refactor / NPU-baseline op chain)."""
+    b, l, d = x.shape
+    n = cfg.d_state
+    dt_rank = cfg.dt_rank or math.ceil(d / 16)
+    xamba = cfg.xamba
+    silu = pwl.activation("silu", xamba)
+    softplus = pwl.activation("softplus", xamba)
+
+    xz = layers.linear(params["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, new_conv = layers.causal_conv1d(params["conv"], xs, state.conv)
+    xs = silu(xs)
+    dbc = layers.linear(params["x_proj"], xs)
+    dt, B, C = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+    dt = jnp.dot(dt, params["dt_proj"]["w"].astype(dt.dtype)) + \
+        params["dt_proj"]["b"].astype(dt.dtype)
+    dt = softplus(dt.astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    new_ssm, y = sscan.selective_scan_decode_step(
+        state.ssm, xs[:, 0], dt[:, 0], A, B[:, 0], C[:, 0], params["D"],
+        mode="naive")
+    y = y[:, None] * silu(z)
+    out = layers.linear(params["out_proj"], y.astype(x.dtype))
+    return out, Mamba1State(new_conv, new_ssm)
+
+
+def _mamba1_decode(params: dict, cfg, x: Array, state: Mamba1State
+                   ) -> Tuple[Array, Mamba1State]:
+    """Fused single-token step, dispatched on ``XambaConfig.decode``."""
+    n = cfg.d_state
+    dt_rank = cfg.dt_rank or math.ceil(x.shape[-1] / 16)
+    xamba = cfg.xamba
+    mode = xamba.decode
+    if mode == "naive":
+        return _mamba1_decode_naive(params, cfg, x, state)
+
+    xz = layers.linear(params["in_proj"], x[:, 0])           # (b, 2*d_inner)
+    xs_raw, z = jnp.split(xz, 2, axis=-1)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))        # (d_inner, n)
+
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        y, new_conv, new_ssm = kops.mamba1_decode_step(
+            xs_raw, z, state.conv, state.ssm,
+            params["conv"]["w"], params["conv"]["b"],
+            params["x_proj"]["w"], params["dt_proj"]["w"],
+            params["dt_proj"]["b"], A, params["D"],
+            dt_rank=dt_rank, xamba=xamba,
+            interpret=(mode == "pallas_interpret"))
+    else:
+        silu = pwl.activation("silu", xamba)
+        softplus = pwl.activation("softplus", xamba)
+        xs, new_conv = layers.causal_conv1d_step(
+            params["conv"], xs_raw, state.conv)
+        xs = silu(xs)
+        dbc = layers.linear(params["x_proj"], xs)
+        dt, B, C = jnp.split(dbc, [dt_rank, dt_rank + n], axis=-1)
+        dt = jnp.dot(dt, params["dt_proj"]["w"].astype(dt.dtype)) + \
+            params["dt_proj"]["b"].astype(dt.dtype)
+        dt = softplus(dt.astype(jnp.float32))                # (b, d_inner)
+        new_ssm, y = sscan.selective_scan_decode_step(
+            state.ssm, xs, dt, A, B, C, params["D"], mode=mode)
+        y = y * silu(z)
+    out = layers.linear(params["out_proj"], y.astype(x.dtype))[:, None]
+    return out, Mamba1State(new_conv, new_ssm)
+
+
 def mamba1_apply(params: dict, cfg, x: Array,
                  state: Optional[Mamba1State] = None,
                  ) -> Tuple[Array, Optional[Mamba1State]]:
@@ -161,6 +306,10 @@ def mamba1_apply(params: dict, cfg, x: Array,
     n = cfg.d_state
     dt_rank = cfg.dt_rank or math.ceil(d / 16)
     xamba = cfg.xamba
+
+    if state is not None and l == 1 and not cfg.force_prefill_path:
+        return _mamba1_decode(params, cfg, x, state)
+
     silu = pwl.activation("silu", xamba)
     softplus = pwl.activation("softplus", xamba)
 
@@ -179,16 +328,10 @@ def mamba1_apply(params: dict, cfg, x: Array,
     A = -jnp.exp(params["A_log"].astype(jnp.float32))        # (d_inner, n)
     D = params["D"]
 
-    decode = state is not None and l == 1 and not cfg.force_prefill_path
-    if decode:
-        new_ssm, y = sscan.selective_scan_decode_step(
-            state.ssm, xs[:, 0], dt[:, 0], A, B[:, 0], C[:, 0], D)
-        y = y[:, None]
-    else:
-        init = state.ssm if state is not None else None
-        y, new_ssm = sscan.selective_scan(
-            xs, dt, A, B, C, D, mode=cfg.scan_mode, initial_state=init,
-            xamba=xamba, return_final_state=True)
+    init = state.ssm if state is not None else None
+    y, new_ssm = sscan.selective_scan(
+        xs, dt, A, B, C, D, mode=cfg.scan_mode, initial_state=init,
+        xamba=xamba, return_final_state=True)
 
     y = y * silu(z)
     out = layers.linear(params["out_proj"], y.astype(x.dtype))
@@ -203,9 +346,6 @@ def mamba1_apply(params: dict, cfg, x: Array,
 class RGLRUState(NamedTuple):
     conv: Array  # (b, d_conv-1, lru_width)
     h: Array     # (b, lru_width)
-
-
-_RG_C = 8.0  # Griffin's fixed gate exponent
 
 
 def rglru_specs(cfg) -> dict:
@@ -227,11 +367,75 @@ def rglru_init_state(cfg, batch: int, dtype=jnp.float32) -> RGLRUState:
         h=jnp.zeros((batch, cfg.lru_width), jnp.float32))
 
 
+def _rglru_decode_naive(params: dict, cfg, x: Array, state: RGLRUState
+                        ) -> Tuple[Array, RGLRUState]:
+    """The unfused dense step (pre-refactor / NPU-baseline op chain)."""
+    xamba = cfg.xamba
+    sigmoid = pwl.activation("sigmoid", xamba)
+    softplus = pwl.activation("softplus", xamba)
+    gelu = pwl.activation("gelu", xamba)
+
+    u = layers.linear(params["in_x"], x)                     # (b, 1, w)
+    gate = layers.linear(params["in_gate"], x)
+    u, new_conv = layers.causal_conv1d(params["conv"], u, state.conv)
+    r = sigmoid(layers.linear(params["rg"], u).astype(jnp.float32))
+    i = sigmoid(layers.linear(params["ig"], u).astype(jnp.float32))
+    log_a = -_RG_C * softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i * u.astype(jnp.float32))
+    h_new = a[:, 0] * state.h + gated_in[:, 0]
+    y = h_new[:, None].astype(x.dtype) * gelu(gate)
+    out = layers.linear(params["out"], y)
+    return out, RGLRUState(new_conv, h_new)
+
+
+def _rglru_decode(params: dict, cfg, x: Array, state: RGLRUState
+                  ) -> Tuple[Array, RGLRUState]:
+    """Fused single-token step, dispatched on ``XambaConfig.decode``."""
+    xamba = cfg.xamba
+    mode = xamba.decode
+    if mode == "naive":
+        return _rglru_decode_naive(params, cfg, x, state)
+
+    u = layers.linear(params["in_x"], x[:, 0])               # (b, w)
+    gate = layers.linear(params["in_gate"], x[:, 0])
+
+    if mode in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        y, new_conv, h_new = kops.rglru_decode_step(
+            u, gate, state.conv, state.h,
+            params["conv"]["w"], params["conv"]["b"],
+            params["rg"]["w"], params["rg"]["b"],
+            params["ig"]["w"], params["ig"]["b"], params["lam"],
+            xamba=xamba, interpret=(mode == "pallas_interpret"))
+        y = y.astype(x.dtype)
+    else:
+        sigmoid = pwl.activation("sigmoid", xamba)
+        softplus = pwl.activation("softplus", xamba)
+        gelu = pwl.activation("gelu", xamba)
+        u, new_conv = layers.causal_conv1d_step(params["conv"], u, state.conv)
+        r = sigmoid(layers.linear(params["rg"], u).astype(jnp.float32))
+        i = sigmoid(layers.linear(params["ig"], u).astype(jnp.float32))
+        log_a = -_RG_C * softplus(params["lam"].astype(jnp.float32)) * r
+        a = jnp.exp(log_a)
+        gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+            * (i * u.astype(jnp.float32))
+        h_new = a * state.h + gated_in
+        y = h_new.astype(x.dtype) * gelu(gate)
+    out = layers.linear(params["out"], y)[:, None]
+    return out, RGLRUState(new_conv, h_new)
+
+
 def rglru_apply(params: dict, cfg, x: Array,
                 state: Optional[RGLRUState] = None,
                 ) -> Tuple[Array, Optional[RGLRUState]]:
     b, l, d = x.shape
     xamba = cfg.xamba
+
+    if state is not None and l == 1 and not cfg.force_prefill_path:
+        return _rglru_decode(params, cfg, x, state)
+
     sigmoid = pwl.activation("sigmoid", xamba)
     softplus = pwl.activation("softplus", xamba)
     gelu = pwl.activation("gelu", xamba)
@@ -249,25 +453,20 @@ def rglru_apply(params: dict, cfg, x: Array,
     gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
         (i * u.astype(jnp.float32))
 
-    decode = state is not None and l == 1 and not cfg.force_prefill_path
-    if decode:
-        h_new = a[:, 0] * state.h + gated_in[:, 0]
-        h = h_new[:, None]
+    if xamba.cumba in ("pallas", "pallas_interpret") and state is None:
+        from repro.kernels import ops as kops
+        h = kops.rg_lru_scan(
+            a, gated_in, interpret=(xamba.cumba == "pallas_interpret"))
     else:
-        if xamba.cumba in ("pallas", "pallas_interpret") and state is None:
-            from repro.kernels import ops as kops
-            h = kops.rg_lru_scan(
-                a, gated_in, interpret=(xamba.cumba == "pallas_interpret"))
-        else:
-            def comb(c1, c2):
-                a1, b1 = c1
-                a2, b2 = c2
-                return a1 * a2, b1 * a2 + b2
-            a_sc, h_sc = jax.lax.associative_scan(comb, (a, gated_in), axis=1)
-            h0 = state.h if state is not None else jnp.zeros(
-                (b, cfg.lru_width), jnp.float32)
-            h = h_sc + a_sc * h0[:, None]
-        h_new = h[:, -1]
+        def comb(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+        a_sc, h_sc = jax.lax.associative_scan(comb, (a, gated_in), axis=1)
+        h0 = state.h if state is not None else jnp.zeros(
+            (b, cfg.lru_width), jnp.float32)
+        h = h_sc + a_sc * h0[:, None]
+    h_new = h[:, -1]
 
     y = h.astype(x.dtype) * gelu(gate)
     out = layers.linear(params["out"], y)

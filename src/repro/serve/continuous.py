@@ -13,7 +13,9 @@ exactly three compiled programs (plus one prefill variant per bucket):
 * **decode**  — ``(params, tok (slots,1), cache, pos (slots,))``; the
   position vector gives every slot its own offset, so freshly admitted
   requests decode next to old ones without recompiling.  Dead slots keep
-  decoding into a sink row (static shapes, zero recompiles).
+  decoding into a sink row (static shapes, zero recompiles).  The pool's
+  cache pytree is *donated* into the program: slot state updates in place
+  every step — no per-step state copies, no fresh pytree allocations.
 * **prefill** — per-bucket, always at batch ``slots`` (unused rows are
   padding): a refill of one slot reuses the same program as a full wave.
 * **insert**  — the pool's row scatter moves a prefilled request's state
@@ -161,7 +163,7 @@ class ContinuousEngine(EngineBase):
         if live:
             t0 = time.perf_counter()
             logits, cache = self._decode(
-                self.params, jnp.asarray(self._next_tok[:, None]),
+                self._decode_params, jnp.asarray(self._next_tok[:, None]),
                 self.pool.cache, jnp.asarray(self._pos))
             nxt = self._sample(logits)
             self.pool.cache = cache

@@ -32,7 +32,8 @@ from repro.serve import sampling
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import (Request, Scheduler, bucket_for,
                                    build_request)
-from repro.serve.state_pool import StatePool, jit_cache_size
+from repro.serve.state_pool import (StatePool, format_compile_count,
+                                    jit_cache_size)
 
 Array = jax.Array
 log = logging.getLogger("repro.serve")
@@ -60,10 +61,20 @@ class EngineBase:
         self.model = model
         self.params = params
         self.cfg = cfg
+        # One-time pre-sliced view of stacked layer weights for the decode
+        # program (zero per-step weight copies); prefill keeps the stacked
+        # layout (scan-over-layers, one trace).
+        self._decode_params = getattr(model, "decode_view",
+                                      lambda p: p)(params)
         self._prefill = jax.jit(
             lambda p, batch, cache: model.prefill(p, batch, cache))
+        # The cache pytree is DONATED into the decode program: every step
+        # updates slot state in place (zero per-step state copies) while
+        # the compile-once discipline keeps the program count at one.
+        # (Prefill must NOT donate: its input cache is a reused scratch.)
         self._decode = jax.jit(
-            lambda p, tok, cache, idx: model.decode_step(p, tok, cache, idx))
+            lambda p, tok, cache, idx: model.decode_step(p, tok, cache, idx),
+            donate_argnums=(2,))
         self._scheduler = Scheduler(getattr(cfg, "policy", "fcfs"))
         self._uid = 0
         self._step = 0              # sampling-rng step counter
@@ -98,8 +109,10 @@ class EngineBase:
 
     @property
     def counters(self) -> dict:
-        return {"decode_compiles": jit_cache_size(self._decode),
-                "prefill_compiles": jit_cache_size(self._prefill)}
+        return {"decode_compiles":
+                format_compile_count(jit_cache_size(self._decode)),
+                "prefill_compiles":
+                format_compile_count(jit_cache_size(self._prefill))}
 
     @property
     def expired(self) -> List[Request]:
@@ -193,7 +206,7 @@ class Engine(EngineBase):
                 break
             ts0 = time.perf_counter()
             tok = jnp.asarray(next_tok[:, None])
-            logits, cache = self._decode(self.params, tok, cache,
+            logits, cache = self._decode(self._decode_params, tok, cache,
                                          jnp.int32(bucket + t - 1))
             next_tok = self._sample(np.asarray(logits, np.float32))
             self.metrics.record_step(int(alive[:len(wave)].sum()),

@@ -54,6 +54,13 @@ def jit_cache_size(fn) -> int:
         return -1
 
 
+def format_compile_count(n: int):
+    """Human-facing compile counter: older jax returns -1 from
+    ``jit_cache_size``; surface that as "unavailable" rather than a
+    misleading negative count."""
+    return n if n >= 0 else "unavailable"
+
+
 class StatePool:
     """Slot-indexed decode-state arena for one model family.
 
@@ -106,9 +113,11 @@ class StatePool:
                     d, jnp.zeros(shape, d.dtype), slot, axis=ax)
             return jax.tree.map(leaf, dst, axes)
 
-        self._insert = jax.jit(insert)
+        # The live pool pytree is DONATED into the row ops: slot turnover
+        # updates the arena in place instead of copying every leaf.
+        self._insert = jax.jit(insert, donate_argnums=(0,))
         self._extract = jax.jit(extract)
-        self._reset = jax.jit(reset)
+        self._reset = jax.jit(reset, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     def insert_rows(self, src_cache, src_rows: Sequence[int],
@@ -143,8 +152,9 @@ class StatePool:
 
     # ------------------------------------------------------------------
     def compile_counts(self) -> dict:
-        return {"insert": jit_cache_size(self._insert) if self._insert
-                else 0,
-                "extract": jit_cache_size(self._extract) if self._extract
-                else 0,
-                "reset": jit_cache_size(self._reset) if self._reset else 0}
+        return {"insert": format_compile_count(jit_cache_size(self._insert))
+                if self._insert else 0,
+                "extract": format_compile_count(jit_cache_size(self._extract))
+                if self._extract else 0,
+                "reset": format_compile_count(jit_cache_size(self._reset))
+                if self._reset else 0}
