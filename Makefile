@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test smoke-serve smoke-decode bench-serve bench-json ci
+.PHONY: test smoke-serve smoke-prefill-chunk smoke-decode smoke-quickstart \
+    linkcheck bench-serve bench-json ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -10,6 +11,17 @@ test:
 smoke-serve:
 	$(PY) -m repro.launch.serve --arch mamba2-130m --reduced \
 	    --engine continuous --requests 4 --batch 2 --max-new 4
+
+smoke-prefill-chunk:
+	$(PY) -m repro.launch.serve --arch mamba2-130m --reduced \
+	    --engine continuous --requests 4 --batch 2 --max-new 4 \
+	    --prefill-chunk 8
+
+smoke-quickstart:
+	$(PY) examples/quickstart.py
+
+linkcheck:
+	$(PY) scripts/check_doc_links.py
 
 smoke-decode:
 	$(PY) -m pytest tests/test_decode_step.py -q
@@ -20,4 +32,5 @@ bench-serve:
 bench-json:
 	PYTHONPATH=src:. $(PY) -m benchmarks.run --json --smoke
 
-ci: test smoke-decode smoke-serve bench-json
+ci: test smoke-decode smoke-serve smoke-prefill-chunk smoke-quickstart \
+    linkcheck bench-json

@@ -120,15 +120,42 @@ def bench_families(smoke: bool = False, batch: int = 1) -> dict:
 
 
 def bench_kpi_full() -> dict:
-    """Full 130M models through the decode path, per XAMBA variant."""
+    """Full 130M models through the decode path, per XAMBA variant.
+
+    The headline ``xamba`` arm is ``XambaConfig.optimized()`` — the exact
+    CumBA/ReduBA remap, which is the configuration a deployment should
+    run on this backend.  ActiBA is timed as a separate ``xamba_actiba``
+    arm and is EXPECTED to be slower here: it emulates the NPU's
+    PLU/C-LUT datapath as K-segment piecewise-linear chains (`core/pwl`),
+    which costs ~K extra vector ops per activation on a backend whose
+    native SiLU/softplus are single fused ops.  The paper's 2.6x ActiBA
+    win is an NPU-hardware property, not reproducible as wall-clock on
+    CPU/TPU — see docs/benchmarks.md.  (Earlier revisions folded ActiBA
+    into the headline arm, which is why BENCH_decode.json once showed
+    mamba2 "xamba" at 4.0 tok/s vs 9.6 baseline.)
+
+    Full-size single-token programs are also acutely sensitive to how
+    XLA-CPU schedules the layer stack: at 130M scale mamba1's fused 2D
+    step regresses ~1.7x when the decode cache is scan-stacked (mamba2's
+    regresses ~2.6x when it is per-layer), at IDENTICAL compiled
+    flops/bytes — a backend program-quality artifact, not an algorithmic
+    cost (reduced-size configs show the fused win in both layouts).  Each
+    family therefore runs the serving layout its deployment would pick,
+    recorded as ``decode_layout``.
+    """
+    # scan_layers per family: the layout whose fused step does not regress
+    # at full size on this backend (see docstring).
+    layout = {"mamba-130m": False, "mamba2-130m": True}
     out = {}
     for arch in ("mamba-130m", "mamba2-130m"):
         variants = (("baseline", XambaConfig.baseline()),
-                    ("xamba", XambaConfig.full(segments=16)))
+                    ("xamba", XambaConfig.optimized()),
+                    ("xamba_actiba", XambaConfig.full(segments=16)))
         calls = []
         for _, xamba in variants:
             cfg = get_config(arch).replace(param_dtype="float32",
-                                           xamba=xamba)
+                                           xamba=xamba,
+                                           scan_layers=layout[arch])
             params = init_params(build_model(cfg).param_specs(),
                                  jax.random.PRNGKey(0), jnp.float32)
             call, _ = _make_variant(cfg, params, donate=True, batch=1,
@@ -139,6 +166,14 @@ def bench_kpi_full() -> dict:
             out[f"{arch}.{vname}"] = round(1.0 / t, 1)
             emit(f"kpi.decode.{arch}.{vname}", t * 1e6,
                  f"tokens_per_s={1.0 / t:.1f}")
+        out[f"{arch}.decode_layout"] = (
+            "scan_stacked" if layout[arch] else "per_layer")
+    out["note"] = ("xamba = exact CumBA/ReduBA remap (the non-regressing "
+                   "configuration); xamba_actiba = + PWL activation "
+                   "emulation of the NPU LUT datapath, slower than native "
+                   "activations on this backend by construction; "
+                   "decode_layout = the per-family cache layout that avoids "
+                   "the XLA-CPU full-size scheduling regression")
     return out
 
 

@@ -1,14 +1,20 @@
-"""Wave vs continuous-batching goodput under Poisson arrivals.
+"""Wave vs continuous-batching goodput under Poisson arrivals, and
+monolithic vs chunked prefill under a long-prompt mix.
 
-Workload: Poisson request arrivals with mixed prompt lengths and strongly
-heterogeneous output budgets (the straggler regime continuous batching is
-for).  Both engines serve the *same* arrival trace at equal ``max_batch``
-on the reduced mamba2 config; we report completed tokens/s (goodput),
-slot occupancy, and TTFT, and assert
+Two experiments on the reduced mamba2 config, both replaying a Poisson
+arrival trace in real time:
 
-* continuous goodput >= 1.5x wave goodput, and
-* zero decode recompiles after warmup (compile-once discipline holds
-  while slots turn over).
+* **engines** (``bench``): mixed prompt lengths, strongly heterogeneous
+  output budgets (the straggler regime continuous batching is for); both
+  engines serve the *same* trace at equal ``max_batch``.  Asserts
+  continuous goodput >= 1.5x wave and zero decode recompiles after warmup.
+* **prefill** (``bench_prefill``): mostly-short traffic with a long-prompt
+  tail, continuous engine only, monolithic bucketed prefill vs chunked
+  (``ServeConfig.prefill_chunk``).  A monolithic long prefill blocks the
+  engine loop for the whole prompt, so short requests arriving behind it
+  eat its wall time in their TTFT; chunked prefill bounds that
+  head-of-line blocking at one chunk.  Asserts (full mode) TTFT-p95
+  improves, goodput stays within 5%, and decode never recompiles.
 
     PYTHONPATH=src python -m benchmarks.bench_serve_continuous
 """
@@ -29,28 +35,44 @@ from repro.serve import ContinuousEngine, Engine, ServeConfig
 OUTPUT_MIX = (4, 8, 16, 128)    # heterogeneous budgets -> wave stragglers
 
 
-def make_workload(rng, n, vocab, arrival_mean_s):
+def make_workload(rng, n, vocab, arrival_mean_s, *, n_long=0,
+                  long_len=(96, 129), short_len=(4, 17), output_mix=None):
+    """Poisson arrivals; exactly ``n_long`` long prompts, evenly spaced
+    through the trace (deterministic count — the prefill benchmark's p95
+    must sit in the short population, see ``bench_prefill``)."""
     t = 0.0
     work = []
-    for _ in range(n):
+    mix = output_mix or OUTPUT_MIX
+    long_at = {round((i + 1) * n / (n_long + 1)) for i in range(n_long)}
+    for i in range(n):
         t += float(rng.exponential(arrival_mean_s))
-        plen = int(rng.integers(4, 17))
+        lo, hi = long_len if i in long_at else short_len
+        plen = int(rng.integers(lo, hi))
         work.append((t, rng.integers(1, vocab, plen).tolist(),
-                     int(rng.choice(OUTPUT_MIX))))
+                     int(rng.choice(mix))))
     return work
 
 
 def _drain(engine, workload, poll):
     """Replay the arrival trace in real time; ``poll`` advances the engine
-    by one unit of work (one continuous step / one wave drain)."""
+    by one unit of work (one continuous step / one wave drain).
+
+    Returns ``(done, wall, nominal_ttft)``.  ``nominal_ttft`` maps uid ->
+    first-token latency measured from the trace's NOMINAL arrival time,
+    not the submit stamp: while the engine is blocked inside a compiled
+    call (e.g. a monolithic long-prompt prefill) this loop cannot submit,
+    so engine-internal TTFT starts late and hides exactly the
+    head-of-line blocking the prefill experiment measures."""
     done = []
+    nominal_arrival = {}
     i = 0
     t0 = time.perf_counter()
     while i < len(workload) or engine.busy:
         now = time.perf_counter() - t0
         while i < len(workload) and workload[i][0] <= now:
-            _, prompt, max_new = workload[i]
-            engine.submit(prompt, max_new)
+            t_i, prompt, max_new = workload[i]
+            uid = engine.submit(prompt, max_new)
+            nominal_arrival[uid] = t0 + t_i
             i += 1
         out = poll(engine)
         if out is None:          # nothing to do yet: wait for an arrival
@@ -58,7 +80,11 @@ def _drain(engine, workload, poll):
         else:
             done.extend(out)
     wall = time.perf_counter() - t0
-    return done, wall
+    # perf_counter and time.time share no epoch; re-derive the offset once.
+    epoch = time.time() - time.perf_counter()
+    nominal_ttft = {r.uid: r.first_token_s - (nominal_arrival[r.uid] + epoch)
+                    for r in done if r.first_token_s is not None}
+    return done, wall, nominal_ttft
 
 
 def _wave_poll(engine):
@@ -98,7 +124,7 @@ def bench(arch="mamba2-130m", requests=32, batch=4, arrival_ms=5.0,
         engine = engine_cls(model, params, scfg)
         _warmup(engine, cfg.vocab_size, np.random.default_rng(seed + 1))
         decode_compiles_warm = engine.counters["decode_compiles"]
-        done, wall = _drain(engine, workload, poll)
+        done, wall, _ = _drain(engine, workload, poll)
         goodput = sum(len(r.out_tokens) for r in done if r.done) / wall
         m = engine.metrics.summary()
         # Compile counters report "unavailable" on jax versions without
@@ -135,11 +161,103 @@ def bench(arch="mamba2-130m", requests=32, batch=4, arrival_ms=5.0,
     return results
 
 
+def bench_prefill(arch="mamba2-130m", requests=48, batch=4, arrival_ms=40.0,
+                  chunk=16, seed=0, smoke=False):
+    """Monolithic vs chunked prefill on the continuous engine: mostly-short
+    Poisson traffic with a rare long-prompt tail (the head-of-line-blocking
+    regime chunked prefill is for).
+
+    The workload is deliberately NOT saturated: arrivals are slower than
+    service, so TTFT is dominated by whatever blocks the engine loop when
+    a request lands — which, monolithically, is a whole long-prompt
+    prefill (tens of ms at the large bucket) and, chunked, is at most one
+    chunk (+ one decode step).  Exactly two long prompts are planted (< 5%
+    of requests) because chunking intentionally trades the long request's
+    own TTFT (its chunks interleave with decode) for everyone else's tail
+    latency; with longs above the p95 cut the percentile would sit inside
+    the long population and measure that trade instead of the
+    unblocking."""
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(seed),
+                         cfg.dtype)
+    buckets = (16, 512)
+    workload = make_workload(np.random.default_rng(seed), requests,
+                             cfg.vocab_size, arrival_ms / 1e3,
+                             n_long=2, long_len=(384, 513),
+                             output_mix=(4, 8))
+
+    results = {}
+    for name, pchunk in (("monolithic", None), ("chunked", chunk)):
+        # Default token budget (one chunk call per poll): the whole point
+        # is the minimal per-poll block.  Larger budgets drain long
+        # prompts in fewer polls but re-grow the block shorts wait behind.
+        # NOTE: full-mode assertions compare real-time traces and expect
+        # an otherwise-idle box (like the goodput margin above).
+        scfg = ServeConfig(max_batch=batch, prefill_buckets=buckets,
+                           max_new_tokens=8, seed=seed,
+                           prefill_chunk=pchunk)
+        engine = ContinuousEngine(model, params, scfg)
+        # Warm every compiled program: both prefill buckets (or the single
+        # offset-agnostic chunk program), decode, and the pool scatters.
+        wrng = np.random.default_rng(seed + 1)
+        engine.submit(wrng.integers(1, cfg.vocab_size, 8).tolist(), 2)
+        engine.submit(wrng.integers(1, cfg.vocab_size, 400).tolist(), 2)
+        engine.run()
+        engine.reset_stats()
+        c0 = engine.counters["decode_compiles"]
+        done, wall, nominal_ttft = _drain(engine, workload, _cont_poll)
+        m = engine.metrics.summary()
+        goodput = sum(len(r.out_tokens) for r in done if r.done) / wall
+        c1 = engine.counters["decode_compiles"]
+        recompiles = (c1 - c0 if isinstance(c0, int) and isinstance(c1, int)
+                      else "unavailable")
+        # TTFT against NOMINAL arrivals (see _drain) — the engine's own
+        # stamps cannot see blocking that delays submission itself.
+        from repro.serve.metrics import _percentile
+        ttft = sorted(nominal_ttft.values())
+        ttft_p95 = _percentile(ttft, 0.95)
+        results[name] = {
+            "goodput_tok_s": round(goodput, 2), "wall_s": round(wall, 3),
+            "ttft_mean_s": round(float(np.mean(ttft)), 4),
+            "ttft_p95_s": round(ttft_p95, 4),
+            "prefill_chunks": m["prefill_chunks"],
+            "prefill_time_s": round(m["prefill_time_s"], 3),
+            "decode_recompiles": recompiles,
+        }
+        emit(f"serve_prefill_{name}_ttft_p95_s", 0.0, round(ttft_p95, 4))
+        assert len(done) == requests, (name, len(done))
+        assert recompiles == 0 or recompiles == "unavailable", \
+            f"{name} prefill retraced decode after warmup"
+
+    mono, chk = results["monolithic"], results["chunked"]
+    results["chunk_size"] = chunk
+    results["ttft_p95_improvement"] = round(
+        mono["ttft_p95_s"] / max(chk["ttft_p95_s"], 1e-9), 3)
+    results["chunked_over_monolithic_goodput"] = round(
+        chk["goodput_tok_s"] / max(mono["goodput_tok_s"], 1e-9), 3)
+    emit("serve_prefill_ttft_p95_improvement", 0.0,
+         results["ttft_p95_improvement"])
+    if not smoke:
+        assert results["ttft_p95_improvement"] >= 1.0, (
+            f"chunked prefill worsened TTFT-p95: "
+            f"{chk['ttft_p95_s']:.4f}s vs {mono['ttft_p95_s']:.4f}s")
+        assert results["chunked_over_monolithic_goodput"] >= 0.95, (
+            f"chunked prefill cost >5% goodput: "
+            f"{chk['goodput_tok_s']:.1f} vs {mono['goodput_tok_s']:.1f}")
+    return results
+
+
 def run(smoke: bool = False) -> dict:
     """Harness entrypoint; the returned dict is ``BENCH_serve.json``."""
     if smoke:
-        return bench(requests=10, arrival_ms=2.0, smoke=True)
-    return bench()
+        out = bench(requests=10, arrival_ms=2.0, smoke=True)
+        out["prefill"] = bench_prefill(requests=8, arrival_ms=5.0,
+                                       smoke=True)
+        return out
+    out = bench()
+    out["prefill"] = bench_prefill()
+    return out
 
 
 def main():

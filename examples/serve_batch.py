@@ -31,6 +31,10 @@ def main():
     ap.add_argument("--decode-mode", default=None, choices=DECODE_MODES,
                     help="XambaConfig.decode: how the fused single-token "
                          "step executes (default: the config's mode)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous engine: admit prompts this many "
+                         "tokens per step instead of one monolithic "
+                         "bucketed prefill")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -42,7 +46,9 @@ def main():
     engine_cls = ContinuousEngine if args.engine == "continuous" else Engine
     engine = engine_cls(model, params, ServeConfig(
         max_batch=4, prefill_buckets=(16, 64, 128),
-        max_new_tokens=args.max_new, temperature=args.temperature))
+        max_new_tokens=args.max_new, temperature=args.temperature,
+        prefill_chunk=(args.prefill_chunk
+                       if args.engine == "continuous" else None)))
 
     rng = np.random.default_rng(0)
     t0 = time.time()

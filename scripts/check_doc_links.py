@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""Docs link check: every relative markdown link in README.md and docs/
+must resolve to a real file (anchors and external URLs are skipped).
+
+    python scripts/check_doc_links.py          # from the repo root
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check(root: Path) -> int:
+    failures = 0
+    sources = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    for src in sources:
+        if not src.exists():
+            print(f"MISSING SOURCE {src}")
+            failures += 1
+            continue
+        for lineno, line in enumerate(src.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                resolved = (src.parent / path).resolve()
+                if not resolved.exists():
+                    print(f"{src.relative_to(root)}:{lineno}: "
+                          f"broken link -> {target}")
+                    failures += 1
+    print(f"checked {len(sources)} files: "
+          f"{'OK' if not failures else f'{failures} broken link(s)'}")
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(1 if check(Path(__file__).resolve().parent.parent) else 0)

@@ -15,6 +15,11 @@ which we implement three ways:
                      part becomes matmuls (this is the Mamba-1 analogue of the
                      paper's CumSum->MatMul remap; it is exact in fp32).
 
+``initial_state`` + ``return_final_state`` make every mode resumable:
+feeding a sequence in slices, threading each call's final ``h`` into the
+next call, matches one whole-sequence call (chunked prefill — see
+``models/base.py: DecodeAPI.prefill_chunk``).
+
 Shapes (Mamba-1 convention):
   u:     (batch, seqlen, dinner)
   delta: (batch, seqlen, dinner)   -- post-softplus
@@ -82,7 +87,16 @@ def selective_scan(u: Array, delta: Array, A: Array, B: Array, C: Array,
         y = jnp.einsum("bldn,bln->bld", h_all, Cf)
         hT = h_all[:, -1]
     elif mode == "chunked":
-        assert l % chunk_size == 0, (l, chunk_size)
+        # Pad to a chunk multiple with dt=0 steps (decay=1, input=0): exact
+        # no-ops for outputs and final state, so any prefill-chunk length
+        # works (mirrors core/ssd.py).
+        l_orig = l
+        pad = (-l) % chunk_size
+        if pad:
+            dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dBu = jnp.pad(dBu, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+            l = l + pad
         c = l // chunk_size
         # (b, c, L, d, n)
         dA_c = dA.reshape(b, c, chunk_size, d, n)
@@ -109,7 +123,7 @@ def selective_scan(u: Array, delta: Array, A: Array, B: Array, C: Array,
         decay_in = jnp.exp(cum)                            # (b, c, d, n, L)
         h_all = h_intra + jnp.transpose(decay_in, (0, 1, 4, 2, 3)) * h_enter[:, :, None]
         y = jnp.einsum("bctdn,bctn->bctd", h_all, C_c)
-        y = y.reshape(b, l, d)
+        y = y.reshape(b, l, d)[:, :l_orig]
     else:
         raise ValueError(f"unknown selective_scan mode {mode!r}")
 

@@ -20,6 +20,12 @@ Shapes follow the Mamba-2 convention:
 
 All SSD internals run in float32 (segsum differences are cancellation-prone);
 inputs/outputs keep the caller's dtype.
+
+``initial_state`` + ``return_final_state`` make the inter-chunk recurrence
+resumable: feeding a sequence in slices, threading each call's final state
+into the next call's ``initial_state``, is numerically equivalent to one
+whole-sequence call (the serve engines' chunked prefill is exactly this —
+see ``models/base.py: DecodeAPI.prefill_chunk``).
 """
 from __future__ import annotations
 

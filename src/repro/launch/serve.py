@@ -34,9 +34,20 @@ def main(argv=None):
     ap.add_argument("--decode-mode", default=None, choices=DECODE_MODES,
                     help="XambaConfig.decode mode for the fused "
                          "single-token step")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: prompts advance this many "
+                         "tokens per engine step, interleaved with decode "
+                         "(continuous engine only; default: monolithic "
+                         "bucketed prefill)")
+    ap.add_argument("--prefill-token-budget", type=int, default=0,
+                    help="max prefill tokens per poll under --prefill-chunk "
+                         "(0 = one chunk call per poll)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO, format="%(message)s")
+    if args.prefill_chunk and args.engine != "continuous":
+        log.warning("--prefill-chunk only applies to --engine continuous; "
+                    "the wave engine keeps monolithic bucketed prefill")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.decode_mode:
@@ -47,7 +58,10 @@ def main(argv=None):
     scfg = ServeConfig(
         max_batch=args.batch, prefill_buckets=(32, 128),
         max_new_tokens=args.max_new, temperature=args.temperature,
-        seed=args.seed, policy=args.policy)
+        seed=args.seed, policy=args.policy,
+        prefill_chunk=(args.prefill_chunk
+                       if args.engine == "continuous" else None),
+        prefill_token_budget=args.prefill_token_budget)
     engine_cls = ContinuousEngine if args.engine == "continuous" else Engine
     engine = engine_cls(model, params, scfg)
 

@@ -13,18 +13,45 @@ from repro.core.xamba import XambaConfig
 Array = jax.Array
 
 
+def chunk_positions(index, batch: int, seq: int):
+    """(b, s) absolute positions for a prefill chunk whose first token sits
+    at ``index`` (``()`` or ``(b,)`` int32)."""
+    idx = jnp.asarray(index, jnp.int32)
+    if idx.ndim == 0:
+        idx = jnp.full((batch,), idx)
+    return idx[:, None] + jnp.arange(seq, dtype=jnp.int32)[None, :]
+
+
 class DecodeAPI:
     """The serving surface every model family implements:
 
     * ``prefill(params, batch, cache) -> (last_logits, cache)`` — run the
-      chunked/parallel form over the prompt and emit the recurrent state;
+      chunked/parallel form over the whole prompt at once and emit the
+      recurrent state;
+    * ``prefill_chunk(params, tokens, cache, index) -> (logits, cache)``
+      — one fixed-size slice of the prompt, carrying state across calls:
+      SSM state + conv tail (Mamba), RG-LRU ``h``, and KV rows appended at
+      ``index`` (attention).  ``index`` is ``()`` or ``(b,)`` int32 — the
+      number of tokens each row has already consumed; feeding a prompt
+      chunk-by-chunk is numerically equivalent to one ``prefill`` call
+      (≤ 1e-5 fp32, greedy-identical continuations).  This is what lets
+      the continuous engine admit long prompts incrementally instead of
+      stalling the decode wave on a monolithic prefill.  (Whisper's
+      override mirrors its ``prefill`` and takes the ``{"tokens",
+      "frames"}`` batch dict instead of a bare token array — like its
+      whole-sequence prefill, it is not servable by the token-only
+      engines);
     * ``decode_step(params, token, cache, index) -> (logits, cache)`` —
       the O(1) cached-state step (``index``: ``()`` or ``(b,)`` int32).
 
     ``apply`` is a deprecation shim for the pre-split call signature
     (``model.apply(params, tokens, state=...)``); external callers should
-    migrate to the explicit pair above.
+    migrate to the explicit trio above.
     """
+
+    def prefill_chunk(self, params, tokens, cache, index):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement prefill_chunk")
 
     def decode_view(self, params):
         """Decode-optimized *view* of ``params``: scan-stacked layer

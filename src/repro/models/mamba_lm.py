@@ -168,6 +168,19 @@ class MambaLM(base.DecodeAPI):
         x, new_states = self._trunk(params, x, cache)
         return self._logits(params, x[:, -1]), new_states
 
+    def prefill_chunk(self, params, tokens, cache, index) -> Tuple[Array, Any]:
+        """One prompt slice with carried state.  ``index`` is accepted for
+        API uniformity and ignored: the SSM recurrence and conv tail carry
+        position in ``cache`` (the same O(1)-state property that makes SSM
+        slots relocatable under continuous batching), so chunked prefill is
+        just the whole-sequence path re-entered with the previous chunk's
+        state — SSD resumes through its inter-chunk recurrence
+        (``initial_state``), selective scan through the carried ``h``."""
+        del index
+        x = layers.embed(params["embed"], tokens)
+        x, new_states = self._trunk(params, x, cache)
+        return self._logits(params, x[:, -1]), new_states
+
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
         """index: () or (b,) — accepted for engine uniformity and ignored;
         the recurrence carries position implicitly, which is why SSM slots

@@ -253,7 +253,21 @@ class RecurrentGemma(base.DecodeAPI):
         x = self._embed(params, batch["tokens"])
         positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
         x, new_caches = self._trunk(params, x, positions,
-                                    cache, cache_index=jnp.int32(0))
+                                    cache, cache_index=None)
+        return self._logits(params, x[:, -1]), new_caches
+
+    def prefill_chunk(self, params, tokens, cache, index) -> Tuple[Array, Any]:
+        """One prompt slice with carried state: RG-LRU layers resume from
+        the carried ``h`` + conv tail (``index`` is irrelevant to them —
+        the recurrence carries position), local-attention layers append
+        the chunk's k/v into their ring caches at (per-row) ``index`` and
+        attend the in-window prefix (``nn/attention.py: chunk_attention``,
+        ring layout)."""
+        x = self._embed(params, tokens)
+        positions = base.chunk_positions(index, *tokens.shape)
+        x, new_caches = self._trunk(params, x, positions, cache,
+                                    cache_index=jnp.asarray(index,
+                                                            jnp.int32))
         return self._logits(params, x[:, -1]), new_caches
 
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:

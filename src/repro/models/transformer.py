@@ -203,7 +203,24 @@ class TransformerLM(base.DecodeAPI):
     def prefill(self, params, batch, cache) -> Tuple[Array, Any]:
         x, positions, _ = self._embed_inputs(params, batch)
         x, new_caches, _ = self._trunk(params, x, positions, cache,
-                                       cache_index=jnp.int32(0))
+                                       cache_index=None)
+        return self._logits(params, x[:, -1]), new_caches
+
+    def prefill_chunk(self, params, tokens, cache, index) -> Tuple[Array, Any]:
+        """One prompt slice with carried KV state: the chunk's k/v append
+        into the cache at (per-row) ``index`` and its queries attend the
+        cached prefix + the chunk itself with absolute positions (RoPE,
+        causal mask and sliding window all realign per row — see
+        ``nn/attention.py: chunk_attention``)."""
+        cfg = self.cfg
+        x = layers.embed(params["embed"], tokens)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        positions = base.chunk_positions(index, *tokens.shape)
+        x = dist_api.shard_tokens3d(x)
+        x, new_caches, _ = self._trunk(params, x, positions, cache,
+                                       cache_index=jnp.asarray(index,
+                                                               jnp.int32))
         return self._logits(params, x[:, -1]), new_caches
 
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:

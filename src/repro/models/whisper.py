@@ -147,7 +147,28 @@ class Whisper(base.DecodeAPI):
             jnp.asarray(pos_tab, cfg.dtype)[None]
         positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None, :]
         x, new_caches = self._dec_trunk(params, x, positions, enc_out,
-                                        cache, cache_index=jnp.int32(0))
+                                        cache, cache_index=None)
+        return self._logits(params, x[:, -1]), new_caches
+
+    def prefill_chunk(self, params, batch, cache, index) -> Tuple[Array, Any]:
+        """One decoder-prompt slice with carried self-attention KV state.
+
+        ``batch`` is ``{"tokens": (b, s), "frames": ...}`` — the encoder
+        (and the idempotent cross-attention cache write) reruns on every
+        chunk because the stub frontend is cheap; a production path would
+        encode once at admission and reuse the cross cache.  Self-attention
+        appends at (per-row) ``index`` like the decoder-only families."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        positions = base.chunk_positions(index, *tokens.shape)
+        x = self._dec_embed(params, tokens) + \
+            layers.sinusoidal_positions_at(positions,
+                                           cfg.d_model).astype(cfg.dtype)
+        x, new_caches = self._dec_trunk(params, x, positions, enc_out,
+                                        cache,
+                                        cache_index=jnp.asarray(index,
+                                                                jnp.int32))
         return self._logits(params, x[:, -1]), new_caches
 
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:

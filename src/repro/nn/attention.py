@@ -193,6 +193,102 @@ def decode_attention(q: Array, cache: KVCache, cache_len: Array, *,
     return out.reshape(q.shape).astype(q.dtype)
 
 
+def chunk_attention(q: Array, k: Array, v: Array, cache: KVCache,
+                    offset: Array, *, window: Optional[int] = None,
+                    logit_softcap: Optional[float] = None,
+                    probs_bf16: bool = False) -> Tuple[Array, KVCache]:
+    """Chunked-prefill attention: append this chunk's k/v to the cache at
+    per-row ``offset`` and attend the chunk's queries against everything
+    cached so far (prefix + the chunk itself).
+
+    q, k, v: (b, s, n, hd) — already RoPE'd at absolute positions;
+    offset: (b,) int32 — tokens already consumed per row (the chunk's
+    first token sits at absolute position ``offset``).
+
+    Two cache layouts, mirroring the decode path:
+
+    * **linear** (``T > window`` or no window): scatter k/v at
+      ``offset + arange(s)`` and mask with per-row absolute positions —
+      the multi-query generalization of ``decode_attention``'s vector
+      ``cache_len``.
+    * **ring** (``T == window``, sliding-window layers): the ring holds
+      only the last ``T`` positions, so a chunk longer than the window
+      would overwrite keys its own early queries still need.  Attention
+      therefore runs over ``[ring-before-write ; chunk]`` with explicit
+      per-slot absolute positions, and the ring is rewritten afterwards
+      to hold the last ``T`` positions ≤ ``offset + s - 1``.
+    """
+    b, s, nq, hd = q.shape
+    T, nkv = cache.k.shape[1], cache.k.shape[2]
+    qpg = nq // nkv
+    rows = jnp.arange(b)[:, None]
+    off = jnp.asarray(offset, jnp.int32)
+    if off.ndim == 0:
+        off = jnp.full((b,), off)
+    q_pos = off[:, None] + jnp.arange(s)[None, :]              # (b, s)
+    qg = (q.astype(jnp.float32) * hd ** -0.5).reshape(b, s, nkv, qpg, hd)
+    ring = window is not None and T == window
+
+    def scores(keys):
+        sc = jnp.einsum("bsgqd,btgd->bgqst", qg,
+                        keys.astype(jnp.float32))
+        if logit_softcap is not None:
+            sc = jnp.tanh(sc / logit_softcap) * logit_softcap
+        return sc
+
+    if not ring:
+        cols = q_pos                                           # (b, s)
+        ck = cache.k.at[rows, cols].set(k.astype(cache.k.dtype))
+        cv = cache.v.at[rows, cols].set(v.astype(cache.v.dtype))
+        new_cache = KVCache(ck, cv)
+        sc = scores(ck)                                        # (b,g,q,s,T)
+        k_ids = jnp.arange(T)[None, None, :]
+        valid = k_ids <= q_pos[..., None]                      # (b, s, T)
+        if window is not None:
+            valid &= k_ids > q_pos[..., None] - window
+        sc = jnp.where(valid[:, None, None], sc, -1e30)
+        p = jax.nn.softmax(sc, axis=-1)
+        pv = p.astype(jnp.bfloat16) if probs_bf16 else p
+        cvf = cv.astype(jnp.bfloat16 if probs_bf16 else jnp.float32)
+        out = jnp.einsum("bgqst,btgd->bsgqd", pv, cvf,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(q.shape).astype(q.dtype), new_cache
+
+    # ---- ring buffer (T == window) ---------------------------------------
+    slots = jnp.arange(T)[None, :]                             # (1, T)
+    last = off[:, None] - 1                                    # (b, 1)
+    # Absolute position held by each ring slot before this chunk's write:
+    # the largest p < offset with p ≡ slot (mod T); negative = never written.
+    ring_pos = last - jnp.mod(last - slots, T)                 # (b, T)
+    sc_ring = scores(cache.k)                                  # (b,g,q,s,T)
+    valid_ring = (ring_pos[:, None, :] >= 0) & \
+        (ring_pos[:, None, :] > q_pos[..., None] - window)     # (b, s, T)
+    sc_chunk = scores(k)                                       # (b,g,q,s,s)
+    i_ids = jnp.arange(s)[:, None]
+    j_ids = jnp.arange(s)[None, :]
+    valid_chunk = (j_ids <= i_ids) & (j_ids > i_ids - window)  # (s, s)
+    valid_chunk = jnp.broadcast_to(valid_chunk, (b, s, s))
+    sc = jnp.concatenate([
+        jnp.where(valid_ring[:, None, None], sc_ring, -1e30),
+        jnp.where(valid_chunk[:, None, None], sc_chunk, -1e30)], axis=-1)
+    p = jax.nn.softmax(sc, axis=-1)
+    vals = jnp.concatenate([cache.v.astype(jnp.float32),
+                            v.astype(jnp.float32)], axis=1)    # (b, T+s, ...)
+    out = jnp.einsum("bgqst,btgd->bsgqd", p, vals,
+                     preferred_element_type=jnp.float32)
+    # Rewrite the ring with the last T positions ≤ offset + s - 1: slots
+    # whose target position falls inside the chunk take the chunk's k/v,
+    # the rest keep their current (older prefix) contents.
+    new_last = off[:, None] + s - 1                            # (b, 1)
+    tgt_pos = new_last - jnp.mod(new_last - slots, T)          # (b, T)
+    src = tgt_pos - off[:, None]                               # chunk index
+    take = (src >= 0)[..., None, None]
+    src_c = jnp.clip(src, 0, s - 1)
+    ck = jnp.where(take, k[rows, src_c].astype(cache.k.dtype), cache.k)
+    cv = jnp.where(take, v[rows, src_c].astype(cache.v.dtype), cache.v)
+    return (out.reshape(q.shape).astype(q.dtype), KVCache(ck, cv))
+
+
 def apply(params: dict, cfg, x: Array, *, positions: Array,
           cache: Optional[KVCache] = None,
           cache_index: Optional[Array] = None,
@@ -205,7 +301,14 @@ def apply(params: dict, cfg, x: Array, *, positions: Array,
 
     Modes:
       cache=None                      -> training forward, no cache out
-      cache given, x.shape[1] > 1     -> prefill: fill cache, full attention
+      cache given, x.shape[1] > 1,
+        cache_index=None              -> whole-sequence prefill: fill cache
+                                         from position 0, full attention
+      cache given, x.shape[1] > 1,
+        cache_index given             -> chunked prefill: append k/v at
+                                         (per-row) cache_index and attend
+                                         against the cached prefix + chunk
+                                         (see ``chunk_attention``)
       cache given, x.shape[1] == 1    -> decode: update cache at cache_index
       is_cross (whisper decoder)      -> k/v from kv_source; at decode time
                                          kv_source may be None (cache reused)
@@ -235,6 +338,12 @@ def apply(params: dict, cfg, x: Array, *, positions: Array,
                              flash_interpret=cfg.flash_interpret,
                              logit_softcap=cfg.attn_logit_softcap,
                              probs_bf16=cfg.attn_probs_bf16)
+    elif x.shape[1] > 1 and cache_index is not None and not is_cross:
+        # chunked prefill: append at cache_index, attend prefix + chunk.
+        out, new_cache = chunk_attention(
+            q, k, v, cache, cache_index, window=window,
+            logit_softcap=cfg.attn_logit_softcap,
+            probs_bf16=cfg.attn_probs_bf16)
     elif x.shape[1] > 1 or (is_cross and k is not None):
         # prefill: write k/v and run full attention.  Windowed layers use a
         # ring cache of size == window; slot(p) = p % window.

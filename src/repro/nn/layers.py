@@ -99,6 +99,17 @@ def sinusoidal_position_at(index: Array, d: int, base: float = 1e4) -> Array:
     return jnp.stack([jnp.sin(ang), jnp.cos(ang)], axis=-1).reshape(d)
 
 
+def sinusoidal_positions_at(positions: Array, d: int,
+                            base: float = 1e4) -> Array:
+    """(..., d) sinusoidal embeddings for an array of dynamic positions
+    (chunked prefill: a chunk's absolute positions are traced offsets, so
+    the static ``sinusoidal_positions`` table cannot be pre-sliced)."""
+    inv = 1.0 / (base ** (np.arange(0, d, 2, dtype=np.float32) / d))
+    ang = positions.astype(jnp.float32)[..., None] * inv       # (..., d/2)
+    return jnp.stack([jnp.sin(ang), jnp.cos(ang)],
+                     axis=-1).reshape(positions.shape + (d,))
+
+
 # ----------------------------------------------------------------------------
 # Embedding
 # ----------------------------------------------------------------------------

@@ -10,7 +10,11 @@ NPU chokes on is mode-switched through XambaConfig:
 
 Each mixer exposes (specs, apply, init_state); ``apply`` handles both
 full-sequence (train/prefill) and single-token (decode) paths with the same
-parameters — the paper's Step-1 two-model enablement.
+parameters — the paper's Step-1 two-model enablement.  Passing ``state``
+with a multi-token ``x`` resumes mid-prompt: the conv tail and SSM/LRU
+state thread through, so feeding a prompt in slices equals one
+whole-sequence call — this is what the serve engines' chunked prefill
+leans on (``models/base.py: DecodeAPI.prefill_chunk``).
 """
 from __future__ import annotations
 

@@ -9,7 +9,9 @@ Two engines share one set of building blocks:
 Building blocks: :class:`Scheduler` (admission / priorities / deadlines),
 :class:`StatePool` (per-slot cache rows with scatter/gather primitives),
 :class:`ServeMetrics` (TTFT / occupancy / goodput), ``sampling``
-(vectorized Gumbel-max).  See ``docs/serving.md``.
+(vectorized Gumbel-max).  The continuous engine optionally admits long
+prompts chunk-by-chunk (``ServeConfig.prefill_chunk``), interleaving one
+prefill chunk with each decode step.  See ``docs/serving.md``.
 """
 from repro.serve.continuous import ContinuousEngine  # noqa: F401
 from repro.serve.engine import Engine, ServeConfig  # noqa: F401

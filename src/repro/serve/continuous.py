@@ -25,6 +25,18 @@ Position realignment: a request prefilled at bucket ``B`` starts decoding
 at position ``B`` regardless of what its neighbours are doing — SSM rows
 carry position in their state, attention rows take the per-row position
 vector (RoPE + KV write + causal mask all realign per row).
+
+Chunked prefill (``ServeConfig.prefill_chunk``): the monolithic per-bucket
+prefill blocks every live slot for the whole prompt — a long prompt stalls
+the decode wave and spikes the running requests' inter-token latency and
+the queue's TTFT tail.  With a chunk size configured, admitted prompts
+left-pad to a chunk multiple and advance **one chunk per poll** (per the
+token budget), batched across all prefilling slots in a second state pool,
+interleaved with the decode step.  That adds ONE more compiled program —
+``prefill_chunk`` at ``(slots, chunk)`` with a per-row offset vector — so
+the compile-once discipline still holds (0 decode recompiles after
+warmup); ``models/base.py: DecodeAPI.prefill_chunk`` guarantees the result
+is numerically the whole-sequence prefill.
 """
 from __future__ import annotations
 
@@ -32,12 +44,14 @@ import logging
 import time
 from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.engine import EngineBase, ServeConfig
-from repro.serve.scheduler import Request, bucket_for
-from repro.serve.state_pool import StatePool
+from repro.serve.scheduler import Request, bucket_for, chunk_span
+from repro.serve.state_pool import (StatePool, format_compile_count,
+                                    jit_cache_size)
 
 log = logging.getLogger("repro.serve")
 
@@ -49,8 +63,15 @@ class ContinuousEngine(EngineBase):
         super().__init__(model, params, cfg)
         self.slots = cfg.max_batch
         self.buckets = tuple(sorted(cfg.prefill_buckets))
-        # One static cache length covers every tenant a slot can host.
-        self.max_seq = self.buckets[-1] + cfg.max_new_tokens
+        # Normalize "disabled" spellings (None and 0) to None so every
+        # downstream gate can test `self.chunk` / `is None` consistently.
+        self.chunk = cfg.prefill_chunk or None
+        # One static cache length covers every tenant a slot can host; with
+        # chunked prefill the longest padded prompt can overshoot the
+        # largest bucket by up to chunk-1 pad tokens.
+        max_prompt = (chunk_span(self.buckets, self.chunk, self.buckets[-1])
+                      if self.chunk else self.buckets[-1])
+        self.max_seq = max_prompt + cfg.max_new_tokens
         dtype = model.cfg.dtype
         self.pool = StatePool(model, self.slots, self.max_seq, dtype)
         # Zeroed prefill input cache, reused by every admission (prefill is
@@ -61,6 +82,21 @@ class ContinuousEngine(EngineBase):
         self._pos = np.zeros(self.slots, np.int32)
         self._next_tok = np.full(self.slots, cfg.pad_id, np.int32)
         self._finished: List[Request] = []
+        if self.chunk:
+            # Chunk-prefill state accumulates in a SECOND pool (one row per
+            # slot, donated into the chunk program) until the prompt is
+            # fully consumed, then the row is scattered into the decode
+            # pool.  Slot i prefills in row i: a request reserves its
+            # decode slot at admission, so prefill work can never outrun
+            # decode capacity.
+            self._ppool = StatePool(model, self.slots, self.max_seq, dtype)
+            self._chunk_step = jax.jit(
+                lambda p, toks, cache, off:
+                model.prefill_chunk(p, toks, cache, off),
+                donate_argnums=(2,))
+            self._pref_req: List[Optional[Request]] = [None] * self.slots
+            self._pref_toks: List[Optional[np.ndarray]] = [None] * self.slots
+            self._pref_off = np.zeros(self.slots, np.int32)
 
     def _buckets(self):
         return self.buckets
@@ -68,17 +104,27 @@ class ContinuousEngine(EngineBase):
     @property
     def busy(self) -> bool:
         return (len(self.scheduler) > 0 or
-                any(r is not None for r in self._slot_req))
+                any(r is not None for r in self._slot_req) or
+                (self.chunk is not None and
+                 any(r is not None for r in self._pref_req)))
 
     @property
     def counters(self) -> dict:
-        return {**super().counters,
-                **{f"pool_{k}_compiles": v
-                   for k, v in self.pool.compile_counts().items()}}
+        out = {**super().counters,
+               **{f"pool_{k}_compiles": v
+                  for k, v in self.pool.compile_counts().items()}}
+        if self.chunk:
+            out["prefill_chunk_compiles"] = format_compile_count(
+                jit_cache_size(self._chunk_step))
+            out.update({f"ppool_{k}_compiles": v
+                        for k, v in self._ppool.compile_counts().items()})
+        return out
 
     # ------------------------------------------------------------------
     def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self._slot_req) if r is None]
+        return [i for i, r in enumerate(self._slot_req)
+                if r is None and
+                (self.chunk is None or self._pref_req[i] is None)]
 
     def _finish(self, req: Request, now: float) -> None:
         req.done = True
@@ -86,6 +132,34 @@ class ContinuousEngine(EngineBase):
         req.latency_s = now - req.arrival_s
         self.metrics.record_finish(req.latency_s, len(req.out_tokens))
         self._finished.append(req)
+
+    def _start_tenant(self, slot: int, req: Request, span: int, tok: int,
+                      t_first: float) -> None:
+        """Request-start semantics shared by both admission paths
+        (monolithic ``_admit`` and chunked ``_prefill_step``): clamp the
+        output budget to the slot's remaining cache, stamp first-token
+        metrics, emit, and either finish immediately (EOS on the prefill
+        token / 1-token budget — the request never occupies a decode
+        step, the slot stays free) or install the request as the slot's
+        decoding tenant at position ``span``."""
+        cfg = self.cfg
+        budget = max(1, min(req.max_new_tokens, self.max_seq - span))
+        if budget < req.max_new_tokens:
+            log.warning(
+                "request %d: max_new_tokens %d exceeds slot budget; "
+                "clamping to %d", req.uid, req.max_new_tokens, budget)
+            req.max_new_tokens = budget
+        req.first_token_s = t_first
+        self.metrics.record_first_token(t_first - req.arrival_s)
+        self.metrics.record_token()
+        req.emit(tok)
+        if (cfg.eos_id >= 0 and tok == cfg.eos_id) or \
+                len(req.out_tokens) >= req.max_new_tokens:
+            self._finish(req, t_first)
+        else:
+            self._slot_req[slot] = req
+            self._pos[slot] = span
+            self._next_tok[slot] = tok
 
     def _admit(self, now: float) -> int:
         """Fill free slots from the queue; returns requests admitted."""
@@ -113,51 +187,129 @@ class ContinuousEngine(EngineBase):
             for row, (_, req) in enumerate(group):
                 p = req.prompt[-bucket:]
                 tokens[row, bucket - len(p):] = p
+            t0 = time.perf_counter()
             logits, cache = self._prefill(
                 self.params, {"tokens": jnp.asarray(tokens)}, self._scratch)
             first = self._sample(logits)
+            self.metrics.record_prefill(bucket * len(group),
+                                        time.perf_counter() - t0)
             self.pool.insert_rows(cache,
                                   [row for row in range(len(group))],
                                   [slot for slot, _ in group])
             t_first = time.time()
             for row, (slot, req) in enumerate(group):
                 req.bucket = bucket
-                budget = max(1, min(req.max_new_tokens,
-                                    self.max_seq - bucket))
-                if budget < req.max_new_tokens:
-                    log.warning(
-                        "request %d: max_new_tokens %d exceeds slot budget; "
-                        "clamping to %d", req.uid, req.max_new_tokens, budget)
-                    req.max_new_tokens = budget
-                tok = int(first[row])
-                req.first_token_s = t_first
-                self.metrics.record_first_token(t_first - req.arrival_s)
-                self.metrics.record_token()
-                req.emit(tok)
-                if (cfg.eos_id >= 0 and tok == cfg.eos_id) or \
-                        len(req.out_tokens) >= req.max_new_tokens:
-                    # EOS on the prefill token (or a 1-token budget): the
-                    # request never occupies a decode step; slot stays free.
-                    self._finish(req, t_first)
-                else:
-                    self._slot_req[slot] = req
-                    self._pos[slot] = bucket
-                    self._next_tok[slot] = tok
+                self._start_tenant(slot, req, bucket, int(first[row]),
+                                   t_first)
         return len(batch)
+
+    # ------------------------------------------------------------------
+    # chunked prefill
+    # ------------------------------------------------------------------
+    def _admit_chunked(self, now: float) -> int:
+        """Reserve free slots for queued requests and stage their padded
+        prompts for chunk-wise prefill.  No model work happens here — the
+        chunks run in ``_prefill_step`` under the poll's token budget."""
+        cfg = self.cfg
+        free = self._free_slots()
+        n_shed0 = len(self.scheduler.expired)
+        admitted = 0
+        while free and len(self.scheduler):
+            req = self.scheduler.pop_ready(now)
+            if req is None:
+                break
+            slot = free.pop(0)
+            p = req.prompt[-self.buckets[-1]:]
+            span = chunk_span(self.buckets, self.chunk, len(p))
+            toks = np.full(span, cfg.pad_id, np.int32)
+            toks[span - len(p):] = p
+            req.bucket = span
+            # The row's previous tenant left state behind; the chunk
+            # program accumulates into the row, so it must start from zero.
+            self._ppool.reset_rows([slot])
+            self._pref_req[slot] = req
+            self._pref_toks[slot] = toks
+            self._pref_off[slot] = 0
+            admitted += 1
+        for _ in range(len(self.scheduler.expired) - n_shed0):
+            self.metrics.record_shed()
+        return admitted
+
+    def _prefill_step(self) -> int:
+        """Advance every prefilling slot by one chunk (one compiled call at
+        ``(slots, chunk)`` + offset vector); finished prompts sample their
+        first token and move their state rows into the decode pool.
+        Returns prompt tokens advanced (0 when nothing is prefilling)."""
+        cfg = self.cfg
+        rows = [i for i, r in enumerate(self._pref_req) if r is not None]
+        if not rows:
+            return 0
+        C = self.chunk
+        tokens = np.full((self.slots, C), cfg.pad_id, np.int32)
+        for i in rows:
+            off = self._pref_off[i]
+            tokens[i] = self._pref_toks[i][off:off + C]
+        t0 = time.perf_counter()
+        logits, self._ppool.cache = self._chunk_step(
+            self.params, jnp.asarray(tokens), self._ppool.cache,
+            jnp.asarray(self._pref_off))
+        done_rows = []
+        for i in rows:
+            self._pref_off[i] += C
+            if self._pref_off[i] >= len(self._pref_toks[i]):
+                done_rows.append(i)
+        if done_rows:
+            first = self._sample(logits)
+            self.metrics.record_prefill(C * len(rows),
+                                        time.perf_counter() - t0)
+            # Row i prefilled in the second pool becomes slot i's decode
+            # state (same index — the slot was reserved at admission).
+            self.pool.insert_rows(self._ppool.cache, done_rows, done_rows)
+            t_first = time.time()
+            for i in done_rows:
+                req = self._pref_req[i]
+                span = len(self._pref_toks[i])
+                self._pref_req[i] = None
+                self._pref_toks[i] = None
+                self._start_tenant(i, req, span, int(first[i]), t_first)
+        else:
+            jax.block_until_ready(logits)
+            self.metrics.record_prefill(C * len(rows),
+                                        time.perf_counter() - t0)
+        return C * len(rows)
 
     # ------------------------------------------------------------------
     def poll(self) -> List[Request]:
         """Admit waiting requests into free slots, then run one decode
-        step across all slots; returns requests completed this poll."""
+        step across all slots; returns requests completed this poll.
+
+        With ``prefill_chunk`` set, admission only *stages* prompts: each
+        poll advances the prefilling slots by one chunk (or more, up to
+        ``prefill_token_budget`` prompt tokens) before the decode step, so
+        long prompts stream in next to the running decode batch instead of
+        stalling it."""
         cfg = self.cfg
         done0 = len(self._finished)
         now = time.time()
-        # Re-admit until slots are full or the queue drains (a request that
-        # EOS'd on its prefill token frees its slot immediately).
-        while self._free_slots() and len(self.scheduler):
-            if not self._admit(now):
-                break
-            now = time.time()
+        if self.chunk:
+            self._admit_chunked(now)
+            spent = self._prefill_step()
+            budget = cfg.prefill_token_budget
+            while spent and budget > spent:
+                # A finished prefill may have freed nothing, but an
+                # EOS-on-prefill finish frees its slot for the queue.
+                self._admit_chunked(time.time())
+                adv = self._prefill_step()
+                if not adv:
+                    break
+                spent += adv
+        else:
+            # Re-admit until slots are full or the queue drains (a request
+            # that EOS'd on its prefill token frees its slot immediately).
+            while self._free_slots() and len(self.scheduler):
+                if not self._admit(now):
+                    break
+                now = time.time()
 
         live = [i for i, r in enumerate(self._slot_req) if r is not None]
         if live:

@@ -49,6 +49,17 @@ class ServeConfig:
     temperature: float = 0.0    # 0 => greedy
     seed: int = 0
     policy: str = "fcfs"        # admission order: fcfs | priority
+    # -- chunked prefill (continuous engine only) ---------------------------
+    # Chunk size in tokens: prompts left-pad to a chunk multiple and prefill
+    # one chunk per engine step, interleaved with the decode batch, instead
+    # of running one monolithic bucketed prefill that stalls every live
+    # slot.  None keeps the monolithic path.  The wave engine ignores it.
+    prefill_chunk: Optional[int] = None
+    # Max prefill tokens processed per poll, counted as chunk_size per
+    # actively-prefilling slot per chunk call.  0 = exactly one chunk call
+    # per poll (the lowest decode-latency jitter); larger budgets drain
+    # long prompts faster at the cost of stalling decode for longer.
+    prefill_token_budget: int = 0
 
 
 class EngineBase:

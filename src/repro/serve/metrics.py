@@ -48,6 +48,9 @@ class ServeMetrics:
         self.decode_time_s = 0.0
         self.live_slot_s = 0.0
         self.wall_s = 0.0
+        self.prefill_chunks = 0
+        self.prefill_tokens = 0
+        self.prefill_time_s = 0.0
 
     # -- event hooks -------------------------------------------------------
     def record_arrival(self) -> None:
@@ -76,6 +79,13 @@ class ServeMetrics:
     def record_wall(self, dt_s: float) -> None:
         self.wall_s += dt_s
 
+    def record_prefill(self, tokens: int, dt_s: float) -> None:
+        """One prefill program call (a monolithic bucket or one chunk);
+        ``tokens`` = prompt tokens it advanced across live rows."""
+        self.prefill_chunks += 1
+        self.prefill_tokens += tokens
+        self.prefill_time_s += dt_s
+
     # -- rollup ------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
         """Throughput figures use recorded wall time; when the caller never
@@ -93,6 +103,10 @@ class ServeMetrics:
             "ttft_mean_s": (sum(self.ttft_s) / len(self.ttft_s)
                             if self.ttft_s else 0.0),
             "ttft_p90_s": _percentile(self.ttft_s, 0.9),
+            "ttft_p95_s": _percentile(self.ttft_s, 0.95),
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_time_s": self.prefill_time_s,
             "latency_mean_s": (sum(self.latency_s) / len(self.latency_s)
                                if self.latency_s else 0.0),
             "token_latency_s": (self.decode_time_s / self.decode_steps

@@ -57,6 +57,15 @@ def bucket_for(buckets: Sequence[int], length: int) -> Tuple[int, bool]:
     return buckets[-1], True
 
 
+def chunk_span(buckets: Sequence[int], chunk: int, length: int) -> int:
+    """Padded prefill length under chunked prefill: the prompt (capped at
+    the largest bucket, same truncation rule as the monolithic path)
+    left-pads to the next ``chunk`` multiple — always at least one chunk,
+    so empty/short prompts still produce a first token."""
+    capped = min(max(length, 1), buckets[-1])
+    return -(-capped // chunk) * chunk
+
+
 def flag_truncation(req: Request, buckets: Sequence[int]) -> None:
     """Mark (and warn about) prompts that overflow the largest bucket."""
     bucket, truncated = bucket_for(buckets, len(req.prompt))

@@ -17,6 +17,11 @@ The batch axis is *probed*, not assumed: ``init_cache`` is called at two
 batch sizes and each leaf's differing axis is recorded.  That keeps the
 pool agnostic to layout differences like scan-stacked layers
 (``(n_layers, b, ...)``, batch axis 1) vs per-layer lists (batch axis 0).
+
+The continuous engine runs TWO pools over the same layout: the decode
+pool (live slot state) and, under chunked prefill, a staging pool whose
+rows accumulate per-chunk state until a prompt completes and its row is
+scattered into the decode pool (``serve/continuous.py``).
 """
 from __future__ import annotations
 

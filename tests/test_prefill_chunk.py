@@ -1,0 +1,280 @@
+"""Chunked prefill: model-level parity with whole-sequence prefill, and
+engine-level identity when the continuous engine admits prompts chunk by
+chunk (``ServeConfig.prefill_chunk``).
+
+The contract under test (``models/base.py: DecodeAPI.prefill_chunk``):
+feeding a prompt in fixed-size slices, threading the cache through, is
+numerically the whole-sequence prefill (≤ 1e-5 fp32) and greedy decoding
+from the resulting state is token-identical.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, build_model
+from repro.nn.params import init_params
+from repro.serve import ContinuousEngine, Engine, ServeConfig
+from repro.serve.scheduler import chunk_span
+
+V = 64
+
+CFGS = {
+    "mamba2": ModelConfig(name="mamba2", family="mamba2", vocab_size=V,
+                          d_model=32, n_layers=2, d_state=8, ssm_head_dim=8,
+                          chunk_size=8, param_dtype="float32"),
+    "mamba1": ModelConfig(name="mamba1", family="mamba", vocab_size=V,
+                          d_model=32, n_layers=2, d_state=8,
+                          param_dtype="float32"),
+    "dense": ModelConfig(name="dense", family="transformer", vocab_size=V,
+                         d_model=32, n_layers=2, n_heads=4, n_kv_heads=2,
+                         head_dim=8, d_ff=64, param_dtype="float32"),
+    # sliding_window == ring KV caches; scan_layers off = per-layer lists
+    "rgemma": ModelConfig(name="rgemma", family="recurrentgemma",
+                          vocab_size=V, d_model=32, n_layers=3, n_heads=4,
+                          n_kv_heads=1, head_dim=8, d_ff=96,
+                          mlp_type="geglu", lru_width=32, sliding_window=8,
+                          scan_layers=False, param_dtype="float32"),
+}
+FAMILIES = list(CFGS)
+
+
+def _model_params(name):
+    cfg = CFGS[name]
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    return model, params
+
+
+def _chunked_prefill(model, params, toks, max_seq, chunk):
+    """Feed ``toks`` through prefill_chunk in ``chunk``-sized slices."""
+    cache = model.init_cache(toks.shape[0], max_seq, jnp.float32)
+    off = 0
+    logits = None
+    while off < toks.shape[1]:
+        s = min(chunk, toks.shape[1] - off)
+        logits, cache = model.prefill_chunk(params, toks[:, off:off + s],
+                                            cache, jnp.int32(off))
+        off += s
+    return logits, cache
+
+
+def _greedy_continue(model, params, logits, cache, start, steps=3):
+    toks = [np.asarray(jnp.argmax(logits, -1), np.int32)]
+    for t in range(steps):
+        tok = jnp.asarray(toks[-1][:, None], jnp.int32)
+        logits, cache = model.decode_step(params, tok, cache,
+                                          jnp.int32(start + t))
+        toks.append(np.asarray(jnp.argmax(logits, -1), np.int32))
+    return np.stack(toks)
+
+
+# ---------------------------------------------------------------------------
+# model-level parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("chunk", [4, 5])   # 5 straddles every boundary
+def test_chunked_matches_whole_sequence(family, chunk):
+    model, params = _model_params(family)
+    rng = np.random.default_rng(1)
+    L, max_seq = 12, 20
+    toks = jnp.asarray(rng.integers(1, V, (2, L)), jnp.int32)
+
+    cache = model.init_cache(2, max_seq, jnp.float32)
+    ref, ref_cache = model.prefill(params, {"tokens": toks}, cache)
+    got, got_cache = _chunked_prefill(model, params, toks, max_seq, chunk)
+
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+    # greedy continuations from both caches are token-identical
+    a = _greedy_continue(model, params, ref, ref_cache, L)
+    b = _greedy_continue(model, params, got, got_cache, L)
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_chunk_edge_sizes(family):
+    """chunk=1 (degenerates to the decode step path) and chunk >= prompt
+    (degenerates to one whole-sequence call) both match prefill."""
+    model, params = _model_params(family)
+    rng = np.random.default_rng(2)
+    L, max_seq = 6, 12
+    toks = jnp.asarray(rng.integers(1, V, (1, L)), jnp.int32)
+    cache = model.init_cache(1, max_seq, jnp.float32)
+    ref, _ = model.prefill(params, {"tokens": toks}, cache)
+    for chunk in (1, 16):
+        got, _ = _chunked_prefill(model, params, toks, max_seq, chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-5, err_msg=f"chunk={chunk}")
+
+
+def test_whisper_chunked_matches_whole_sequence():
+    cfg = ModelConfig(name="whisper", family="whisper", vocab_size=V,
+                      d_model=32, n_layers=2, encoder_layers=1, n_heads=4,
+                      n_kv_heads=4, head_dim=8, d_ff=64, mlp_type="mlp",
+                      norm_type="layernorm", frontend="audio_stub",
+                      encoder_seq=8, param_dtype="float32")
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    rng = np.random.default_rng(3)
+    frames = jnp.asarray(rng.normal(size=(1, 8, 32)), jnp.float32)
+    toks = jnp.asarray(rng.integers(1, V, (1, 9)), jnp.int32)
+    cache = model.init_cache(1, 16, jnp.float32)
+    ref, _ = model.prefill(params, {"tokens": toks, "frames": frames}, cache)
+    cache = model.init_cache(1, 16, jnp.float32)
+    off = 0
+    while off < toks.shape[1]:
+        s = min(4, toks.shape[1] - off)
+        got, cache = model.prefill_chunk(
+            params, {"tokens": toks[:, off:off + s], "frames": frames},
+            cache, jnp.int32(off))
+        off += s
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def test_chunk_span():
+    assert chunk_span((32,), 8, 1) == 8
+    assert chunk_span((32,), 8, 8) == 8
+    assert chunk_span((32,), 8, 9) == 16
+    assert chunk_span((32,), 8, 100) == 32    # capped at largest bucket
+    assert chunk_span((30,), 8, 100) == 32    # cap rounds UP to a multiple
+    assert chunk_span((32,), 8, 0) == 8       # at least one chunk
+
+
+# ---------------------------------------------------------------------------
+# engine-level identity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", FAMILIES)
+def test_engine_chunked_matches_wave_greedy(family):
+    """With the bucket a chunk multiple, chunked admission pads prompts to
+    the same length as the monolithic bucket — outputs must be identical
+    to the wave engine, with one compiled chunk program and one decode."""
+    model, params = _model_params(family)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, V, 16).tolist() for _ in range(6)]
+    budgets = [2, 7, 3, 8, 2, 6]
+
+    wave = Engine(model, params, ServeConfig(
+        max_batch=2, prefill_buckets=(16,), max_new_tokens=8))
+    cont = ContinuousEngine(model, params, ServeConfig(
+        max_batch=2, prefill_buckets=(16,), max_new_tokens=8,
+        prefill_chunk=8))
+    for p, m in zip(prompts, budgets):
+        wave.submit(p, m)
+        cont.submit(p, m)
+    wave_out = {r.uid: r.out_tokens for r in wave.run()}
+    cont_out = {r.uid: r.out_tokens for r in cont.run()}
+    assert set(wave_out) == set(cont_out)
+    for uid in wave_out:
+        assert cont_out[uid] == wave_out[uid], f"uid={uid}"
+    assert cont.counters["decode_compiles"] == 1
+    assert cont.counters["prefill_chunk_compiles"] == 1
+
+
+@pytest.mark.parametrize("family", ["mamba2", "dense"])
+def test_engine_chunked_mid_decode_admission_matches_solo(family):
+    """A request admitted chunk-wise into a freed slot mid-decode generates
+    exactly what it would generate running alone."""
+    model, params = _model_params(family)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, V, 12).tolist() for _ in range(5)]
+    budgets = [2, 6, 3, 6, 4]
+    scfg = ServeConfig(max_batch=2, prefill_buckets=(16,), max_new_tokens=6,
+                       prefill_chunk=8)
+    cont = ContinuousEngine(model, params, scfg)
+    for p, m in zip(prompts, budgets):
+        cont.submit(p, m)
+    batched = {r.uid: r.out_tokens for r in cont.run()}
+    assert len(batched) == 5
+
+    for i, (p, m) in enumerate(zip(prompts, budgets)):
+        solo = ContinuousEngine(model, params, scfg)
+        uid = solo.submit(p, m)
+        (r,) = solo.run()
+        assert r.uid == uid
+        assert batched[i + 1] == r.out_tokens, f"request {i}"
+
+
+def test_engine_ragged_lengths_straddle_chunks():
+    """Prompt lengths straddling chunk boundaries pad to different chunk
+    spans yet share one compiled chunk program; each output matches its
+    solo chunked run."""
+    model, params = _model_params("mamba2")
+    rng = np.random.default_rng(11)
+    scfg = ServeConfig(max_batch=2, prefill_buckets=(24,), max_new_tokens=4,
+                       prefill_chunk=8)
+    cont = ContinuousEngine(model, params, scfg)
+    lengths = (5, 8, 9, 16, 17)
+    prompts = [rng.integers(1, V, n).tolist() for n in lengths]
+    for p in prompts:
+        cont.submit(p)
+    done = {r.uid: r for r in cont.run()}
+    assert len(done) == 5 and all(len(r.out_tokens) == 4
+                                  for r in done.values())
+    assert cont.counters["prefill_chunk_compiles"] == 1
+    assert cont.counters["decode_compiles"] == 1
+    for uid, r in done.items():
+        solo = ContinuousEngine(model, params, scfg)
+        solo.submit(r.prompt)
+        (s,) = solo.run()
+        assert s.out_tokens == r.out_tokens, f"uid={uid}"
+
+
+def test_engine_token_budget_output_invariant():
+    """A larger prefill token budget drains prompts in fewer polls but
+    cannot change any request's tokens."""
+    model, params = _model_params("mamba2")
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(1, V, 20).tolist() for _ in range(4)]
+
+    def run(budget):
+        eng = ContinuousEngine(model, params, ServeConfig(
+            max_batch=2, prefill_buckets=(24,), max_new_tokens=4,
+            prefill_chunk=8, prefill_token_budget=budget))
+        for p in prompts:
+            eng.submit(p)
+        out = {r.uid: r.out_tokens for r in eng.run()}
+        return out, eng.metrics.summary()["prefill_chunks"]
+
+    base, chunks0 = run(0)
+    big, chunks1 = run(64)
+    assert base == big
+    assert chunks1 <= chunks0                        # never more calls
+
+
+def test_engine_chunk_zero_means_disabled():
+    """prefill_chunk=0 (an obvious 'off' spelling) must behave exactly
+    like None: monolithic bucketed prefill, no chunk machinery."""
+    model, params = _model_params("mamba2")
+    rng = np.random.default_rng(15)
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=2, prefill_buckets=(16,), max_new_tokens=3,
+        prefill_chunk=0))
+    eng.submit(rng.integers(1, V, 10).tolist())
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out_tokens) == 3
+    assert "prefill_chunk_compiles" not in eng.counters
+
+
+def test_engine_chunked_eos_on_prefill_token():
+    """EOS sampled from the final chunk finishes the request without it
+    ever occupying a decode step; the slot is immediately reusable."""
+    model, params = _model_params("mamba2")
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(1, V, 10).tolist()
+    toks = np.zeros((1, 16), np.int32)
+    toks[0, 16 - len(prompt):] = prompt
+    cache = model.init_cache(1, 20, jnp.float32)
+    logits, _ = model.prefill(params, {"tokens": jnp.asarray(toks)}, cache)
+    eos = int(np.argmax(np.asarray(logits), -1)[0])
+
+    scfg = ServeConfig(max_batch=1, prefill_buckets=(16,), max_new_tokens=8,
+                       eos_id=eos, prefill_chunk=8)
+    eng = ContinuousEngine(model, params, scfg)
+    eng.submit(prompt)
+    other = rng.integers(1, V, 10).tolist()
+    eng.submit(other)
+    done = {r.uid: r for r in eng.run()}
+    assert len(done) == 2 and all(r.done for r in done.values())
+    assert done[1].out_tokens == [eos]
