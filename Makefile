@@ -2,8 +2,8 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test smoke-serve smoke-prefill-chunk smoke-decode smoke-quickstart \
-    linkcheck bench-serve bench-json ci
+.PHONY: test smoke-serve smoke-prefill-chunk smoke-decode smoke-quant \
+    smoke-quickstart linkcheck bench-serve bench-json hlo-diff ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -16,6 +16,16 @@ smoke-prefill-chunk:
 	$(PY) -m repro.launch.serve --arch mamba2-130m --reduced \
 	    --engine continuous --requests 4 --batch 2 --max-new 4 \
 	    --prefill-chunk 8
+
+# W8 quantization smoke: the interpret-mode parity slice only (kernel vs
+# oracle + mamba2 w8_pallas_interpret vs w8 model parity — `make test`
+# already runs the full suite) + a quantized continuous-serve run.
+smoke-quant:
+	$(PY) -m pytest tests/test_quant.py -q \
+	    -k "qmatmul_kernel or pallas_backend"
+	$(PY) -m repro.launch.serve --arch mamba2-130m --reduced \
+	    --engine continuous --requests 4 --batch 2 --max-new 4 \
+	    --prefill-chunk 8 --quant w8
 
 smoke-quickstart:
 	$(PY) examples/quickstart.py
@@ -32,5 +42,12 @@ bench-serve:
 bench-json:
 	PYTHONPATH=src:. $(PY) -m benchmarks.run --json --smoke
 
-ci: test smoke-decode smoke-serve smoke-prefill-chunk smoke-quickstart \
-    linkcheck bench-json
+# Per-op HLO fingerprint diff of the fused decode step under both cache
+# layouts (the ROADMAP layout-cliff open item; full size by default —
+# add ARGS="--reduced" for a fast structural smoke).
+hlo-diff:
+	$(PY) -m repro.launch.hlo_analysis --arch mamba2-130m $(ARGS)
+	$(PY) -m repro.launch.hlo_analysis --arch mamba-130m $(ARGS)
+
+ci: test smoke-decode smoke-serve smoke-prefill-chunk smoke-quant \
+    smoke-quickstart linkcheck bench-json

@@ -19,6 +19,7 @@ Two views:
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -29,10 +30,15 @@ from benchmarks.common import emit
 from repro.configs import get_config
 from repro.core.xamba import XambaConfig
 from repro.models import build_model
+from repro.nn import quant
 from repro.nn.params import init_params
 from repro.serve.state_pool import format_compile_count, jit_cache_size
 
 FAMILIES = ("mamba-130m", "mamba2-130m", "recurrentgemma-2b")
+
+
+def _w8(xamba: XambaConfig) -> XambaConfig:
+    return dataclasses.replace(xamba, quant="w8")
 
 
 def _make_variant(cfg, params, *, donate: bool, batch: int,
@@ -96,26 +102,39 @@ def bench_families(smoke: bool = False, batch: int = 1) -> dict:
                                  jax.random.PRNGKey(0), jnp.float32)
         fused_params = pre_params
 
+        # W8 arm: the fused configuration on int8 per-channel weights
+        # (XLA dot_general-on-int8 backend) — same program structure,
+        # quarter the weight bytes.
+        w8_cfg = fused_cfg.replace(xamba=_w8(fused_cfg.xamba))
+        w8_params = quant.quantize_params_for_mode(fused_params, "w8")
+
         call_pre, _ = _make_variant(pre_cfg, pre_params, donate=False,
                                     batch=batch)
         call_fused, step_fused = _make_variant(fused_cfg, fused_params,
                                                donate=True, batch=batch,
                                                decode_view=True)
-        t_pre, t_fused = _time_interleaved([call_pre, call_fused],
-                                           iters=iters)
+        call_w8, step_w8 = _make_variant(w8_cfg, w8_params, donate=True,
+                                         batch=batch, decode_view=True)
+        t_pre, t_fused, t_w8 = _time_interleaved(
+            [call_pre, call_fused, call_w8], iters=iters)
         compiles = jit_cache_size(step_fused)
         speedup = t_pre / t_fused
         out[arch] = {
             "prerefactor_tok_s": round(batch / t_pre, 1),
             "fused_tok_s": round(batch / t_fused, 1),
+            "w8_tok_s": round(batch / t_w8, 1),
             "speedup": round(speedup, 2),
             "decode_mode": fused_cfg.xamba.decode,
             "decode_compiles": format_compile_count(compiles),
+            "w8_decode_compiles": format_compile_count(
+                jit_cache_size(step_w8)),
         }
         emit(f"kpi.decode.{arch}.prerefactor", t_pre * 1e6,
              f"tokens_per_s={batch / t_pre:.1f}")
         emit(f"kpi.decode.{arch}.fused", t_fused * 1e6,
              f"tokens_per_s={batch / t_fused:.1f};speedup={speedup:.2f}x")
+        emit(f"kpi.decode.{arch}.w8", t_w8 * 1e6,
+             f"tokens_per_s={batch / t_w8:.1f}")
     return out
 
 
@@ -142,38 +161,65 @@ def bench_kpi_full() -> dict:
     cost (reduced-size configs show the fused win in both layouts).  Each
     family therefore runs the serving layout its deployment would pick,
     recorded as ``decode_layout``.
+
+    The precision arms pin the W8 claim: ``bf16`` is the optimized remap
+    on bfloat16 params (the standard low-precision serving format — on
+    XLA-CPU its gemms run through an upconvert path, so it is SLOWER than
+    fp32 here; on TPU/NPU it is the bandwidth-efficient deployment arm)
+    and ``w8`` is the optimized remap on int8 per-channel weights via
+    dot_general-on-int8 (``nn/quant.py``).  The headline quantization
+    ratio is ``w8_vs_bf16`` — int8 vs the comparable reduced-precision
+    deployment arm; fp32 ``xamba`` stays the absolute-fastest arm on this
+    CPU backend because its gemms avoid any convert (see
+    docs/quantization.md for the honest accounting).
     """
     # scan_layers per family: the layout whose fused step does not regress
     # at full size on this backend (see docstring).
     layout = {"mamba-130m": False, "mamba2-130m": True}
     out = {}
     for arch in ("mamba-130m", "mamba2-130m"):
-        variants = (("baseline", XambaConfig.baseline()),
-                    ("xamba", XambaConfig.optimized()),
-                    ("xamba_actiba", XambaConfig.full(segments=16)))
-        calls = []
-        for _, xamba in variants:
-            cfg = get_config(arch).replace(param_dtype="float32",
+        variants = (("baseline", XambaConfig.baseline(), "float32", None),
+                    ("xamba", XambaConfig.optimized(), "float32", None),
+                    ("xamba_actiba", XambaConfig.full(segments=16),
+                     "float32", None),
+                    ("bf16", XambaConfig.optimized(), "bfloat16", None),
+                    ("w8", _w8(XambaConfig.optimized()), "float32", "w8"))
+        calls, steps = [], {}
+        for vname, xamba, dtype, qmode in variants:
+            cfg = get_config(arch).replace(param_dtype=dtype,
                                            xamba=xamba,
                                            scan_layers=layout[arch])
             params = init_params(build_model(cfg).param_specs(),
-                                 jax.random.PRNGKey(0), jnp.float32)
-            call, _ = _make_variant(cfg, params, donate=True, batch=1,
-                                    decode_view=True)
+                                 jax.random.PRNGKey(0), cfg.dtype)
+            if qmode:
+                params = quant.quantize_params_for_mode(params, qmode)
+            call, step = _make_variant(cfg, params, donate=True, batch=1,
+                                       decode_view=True)
             calls.append(call)
-        for (vname, _), t in zip(variants,
-                                 _time_interleaved(calls, iters=8)):
+            steps[vname] = step
+        times = dict(zip([v[0] for v in variants],
+                         _time_interleaved(calls, iters=8)))
+        for vname, t in times.items():
             out[f"{arch}.{vname}"] = round(1.0 / t, 1)
             emit(f"kpi.decode.{arch}.{vname}", t * 1e6,
                  f"tokens_per_s={1.0 / t:.1f}")
+        out[f"{arch}.w8_vs_bf16"] = round(times["bf16"] / times["w8"], 2)
+        w8_compiles = jit_cache_size(steps["w8"])
+        out[f"{arch}.w8_decode_recompiles_after_warmup"] = (
+            w8_compiles - 1 if w8_compiles >= 0 else "unavailable")
         out[f"{arch}.decode_layout"] = (
             "scan_stacked" if layout[arch] else "per_layer")
     out["note"] = ("xamba = exact CumBA/ReduBA remap (the non-regressing "
                    "configuration); xamba_actiba = + PWL activation "
                    "emulation of the NPU LUT datapath, slower than native "
                    "activations on this backend by construction; "
-                   "decode_layout = the per-family cache layout that avoids "
-                   "the XLA-CPU full-size scheduling regression")
+                   "bf16 = optimized remap on bfloat16 params (XLA-CPU "
+                   "emulates bf16 gemms — the low-precision deployment "
+                   "reference, not a CPU speed recommendation); w8 = int8 "
+                   "per-channel weights (nn/quant.py), headline ratio "
+                   "w8_vs_bf16; decode_layout = the per-family cache "
+                   "layout that avoids the XLA-CPU full-size scheduling "
+                   "regression")
     return out
 
 
@@ -186,6 +232,11 @@ def run(smoke: bool = False) -> dict:
         "families": families,
         "speedup_reduced_mamba2": families["mamba2-130m"]["speedup"],
     }
+    # The accuracy column of the W8 trade rides along with the perf
+    # numbers (full sweep + JSON in benchmarks/bench_table1_quality.py).
+    from benchmarks.bench_table1_quality import w8_quality_metrics
+    result["w8_quality"] = w8_quality_metrics(
+        ("mamba2-130m", "mamba-130m"), n_new=32 if smoke else 64)
     if not smoke:
         result["kpi_full_tok_s"] = bench_kpi_full()
     return result

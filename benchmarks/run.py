@@ -18,7 +18,8 @@ import traceback
 
 BENCHES = ("fig1", "fig4a", "fig4c", "table1", "kpi", "roofline", "serve")
 # Benchmarks with a --smoke-aware run(smoke=...) and a JSON artifact.
-JSON_OUT = {"kpi": "BENCH_decode.json", "serve": "BENCH_serve.json"}
+JSON_OUT = {"kpi": "BENCH_decode.json", "serve": "BENCH_serve.json",
+            "table1": "BENCH_quality.json"}
 
 
 def main() -> None:
@@ -60,6 +61,7 @@ def main() -> None:
             kwargs = {"smoke": args.smoke} if key in JSON_OUT else {}
             result = m.run(**kwargs)
             if args.json and key in JSON_OUT:
+                os.makedirs(args.out_dir, exist_ok=True)
                 path = os.path.join(args.out_dir, JSON_OUT[key])
                 with open(path, "w") as f:
                     json.dump(result, f, indent=2, sort_keys=True)

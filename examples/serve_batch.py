@@ -35,14 +35,28 @@ def main():
                     help="continuous engine: admit prompts this many "
                          "tokens per step instead of one monolithic "
                          "bucketed prefill")
+    from repro.core.xamba import QUANT_MODES
+    ap.add_argument("--quant", default="none", choices=QUANT_MODES,
+                    help="W8 weight-only quantization: serve on int8 "
+                         "per-channel weights (fp state pools/caches); "
+                         "combine with --decode-mode/--prefill-chunk for "
+                         "the fully optimized configuration")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
     if args.decode_mode:
         cfg = cfg.with_decode_mode(args.decode_mode)
+    if args.quant != "none":
+        cfg = cfg.with_quant(args.quant)
     model = build_model(cfg)
     params = init_params(model.param_specs(), jax.random.PRNGKey(0),
                          cfg.dtype)
+    if args.quant != "none":
+        from repro.nn import quant
+        params = quant.quantize_params_for_mode(params, args.quant)
+        s = quant.quant_summary(params)
+        print(f"quant {args.quant}: {s['quantized_tensors']} tensors int8, "
+              f"{s['compression']}x smaller than fp32")
     engine_cls = ContinuousEngine if args.engine == "continuous" else Engine
     engine = engine_cls(model, params, ServeConfig(
         max_batch=4, prefill_buckets=(16, 64, 128),

@@ -1,6 +1,8 @@
 #!/usr/bin/env python
 """Docs link check: every relative markdown link in README.md and docs/
-must resolve to a real file (anchors and external URLs are skipped).
+must resolve to a real file (anchors and external URLs are skipped), and
+every page under docs/ must be *reachable* — linked from README.md or
+another doc — so new pages cannot silently ship orphaned.
 
     python scripts/check_doc_links.py          # from the repo root
 """
@@ -17,6 +19,7 @@ SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
 def check(root: Path) -> int:
     failures = 0
     sources = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    linked: set = set()
     for src in sources:
         if not src.exists():
             print(f"MISSING SOURCE {src}")
@@ -34,8 +37,15 @@ def check(root: Path) -> int:
                     print(f"{src.relative_to(root)}:{lineno}: "
                           f"broken link -> {target}")
                     failures += 1
+                elif src != resolved:
+                    linked.add(resolved)
+    for page in sorted((root / "docs").glob("*.md")):
+        if page.resolve() not in linked:
+            print(f"{page.relative_to(root)}: orphan page — not linked "
+                  "from README.md or any other doc")
+            failures += 1
     print(f"checked {len(sources)} files: "
-          f"{'OK' if not failures else f'{failures} broken link(s)'}")
+          f"{'OK' if not failures else f'{failures} problem(s)'}")
     return failures
 
 

@@ -23,6 +23,11 @@ from typing import Tuple
 CUMSUM_MODES = ("naive", "cumba", "pallas", "pallas_interpret")
 REDUCE_MODES = ("naive", "reduba", "pallas", "pallas_interpret")
 DECODE_MODES = ("naive", "cumba", "pallas", "pallas_interpret")
+# Weight quantization (paper Step-3's precision trade, serving-backend
+# form): ``none`` = fp weights; ``w8`` = int8 per-channel weights executed
+# via dot_general-on-int8 (portable XLA path); ``w8_pallas`` = the fused
+# dequant-matmul kernel (``kernels/qmatmul.py``; ``_interpret`` on CPU).
+QUANT_MODES = ("none", "w8", "w8_pallas", "w8_pallas_interpret")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,8 +48,14 @@ class XambaConfig:
     actiba_range: Tuple[float, float] = (-10.0, 10.0)
     # Non-uniform, curvature-adaptive breakpoints (Flex-SFU style) vs uniform.
     actiba_adaptive: bool = True
+    # W8 weight-only quantization mode (``nn/quant.py``).  The mode names
+    # how quantized weights *execute*; quantization itself happens to the
+    # params pytree once, via ``quant.quantize_params_for_mode``.
+    quant: str = "none"
 
     def __post_init__(self):
+        if self.quant not in QUANT_MODES:
+            raise ValueError(f"quant mode {self.quant!r} not in {QUANT_MODES}")
         if self.cumba not in CUMSUM_MODES:
             raise ValueError(f"cumba mode {self.cumba!r} not in {CUMSUM_MODES}")
         if self.reduba not in REDUCE_MODES:

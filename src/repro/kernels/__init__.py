@@ -4,6 +4,8 @@ cumba            CumSum -> blocked triangular matmul (MXU) w/ prefix carry
 reduba           ReduceSum -> ones-matvec (MXU), tiled accumulation
 actiba           PWL activation (gather-free C-LUT analogue)
 matmul_pwl       matmul with drain-phase-fused PWL epilogue (vertical fusion)
+qmatmul          W8 dequant-matmul: int8 tiles upconverted in-register,
+                 per-channel scale (+ optional PWL epilogue) in the drain
 ssd_chunk        fused Mamba-2 SSD intra-chunk pass (CumBA+ReduBA inside)
 flash_attention  online-softmax attention (causal / window / GQA)
 rg_lru           chunked gated linear recurrence (recurrentgemma)

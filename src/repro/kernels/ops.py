@@ -16,8 +16,8 @@ from repro.core import pwl
 from repro.core.pwl import PWLTable
 from repro.kernels import (actiba as _actiba, cumba as _cumba,
                            decode_step as _ds, flash_attention as _fa,
-                           matmul_pwl as _mpwl, reduba as _reduba,
-                           rg_lru as _rg, ref)
+                           matmul_pwl as _mpwl, qmatmul as _qm,
+                           reduba as _reduba, rg_lru as _rg, ref)
 
 Array = jax.Array
 
@@ -50,6 +50,17 @@ def matmul_pwl(x: Array, w: Array, table: PWLTable,
                interpret: bool = False) -> Array:
     """ActiBA vertical fusion: pwl(x @ w) [* (x @ v)]."""
     return _mpwl.matmul_pwl(x, w, table, v, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("table", "interpret"))
+def qmatmul(x: Array, q: Array, scale: Array, *,
+            table: Optional[PWLTable] = None,
+            qv: Optional[Array] = None, vscale: Optional[Array] = None,
+            interpret: bool = False) -> Array:
+    """W8 fused dequant-matmul: ``epi((x @ q) * scale)`` with int8 weight
+    tiles dequantized in-register; optional PWL epilogue + gated form."""
+    return _qm.qmatmul(x, q, scale, table=table, qv=qv, vscale=vscale,
+                       interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))

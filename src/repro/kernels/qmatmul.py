@@ -1,0 +1,147 @@
+"""Fused W8 dequant-matmul: int8 weight tiles, per-channel scale drain.
+
+The weight-only quantization path (``nn/quant.py``) stores linear weights
+as int8 + an fp32 per-channel scale row.  A naive XLA program would
+materialize ``convert(q) * scale`` — a full fp32 copy of the weight in
+HBM per call, erasing the bandwidth win.  This kernel keeps the weight
+int8 all the way into VMEM: each ``(bk, bn)`` tile is upconverted
+IN-REGISTER for the MXU contraction, and the per-channel scale multiplies
+the fp32 accumulator once in the drain phase — so HBM only ever sees 1
+byte per weight element.
+
+Per-channel symmetric scales commute with the contraction
+(``(x @ q) * scale == x @ (q * scale)``), which is what makes the
+drain-phase rescale exact.  The drain composes with the ActiBA PWL
+epilogue from ``kernels/actiba.py`` (the paper's vertical fusion), and
+with the gated two-weight form used by every assigned MLP
+(``act(x @ w) * (x @ v)``) — mirroring ``kernels/matmul_pwl.py`` with
+both weights int8:
+
+    out = epi(acc_w * scale_w) [* (acc_v * scale_v)]
+
+Oracle: ``kernels/ref.py: qmatmul_ref``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pwl import PWLTable
+from repro.kernels import common
+from repro.kernels.actiba import make_pwl_epilogue
+
+Array = jax.Array
+
+
+def _qmatmul_kernel(table: Optional[PWLTable], nk: int, gated: bool):
+    epi = make_pwl_epilogue(table) if table is not None else (lambda a: a)
+
+    if not gated:
+        def kernel(x_ref, q_ref, s_ref, o_ref, acc_ref):
+            k = pl.program_id(2)
+
+            @pl.when(k == 0)
+            def _init():
+                acc_ref[...] = jnp.zeros_like(acc_ref)
+
+            # In-register dequant: the int8 tile upconverts in VMEM for
+            # the MXU; the scale waits for the drain.
+            acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                                    q_ref[...].astype(jnp.float32),
+                                    preferred_element_type=jnp.float32)
+
+            @pl.when(k == nk - 1)
+            def _drain():
+                o_ref[...] = epi(acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+        return kernel
+
+    def kernel(x_ref, q_ref, s_ref, v_ref, vs_ref, o_ref, acc_ref, gacc_ref):
+        k = pl.program_id(2)
+
+        @pl.when(k == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            gacc_ref[...] = jnp.zeros_like(gacc_ref)
+
+        x = x_ref[...].astype(jnp.float32)
+        acc_ref[...] += jnp.dot(x, q_ref[...].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+        gacc_ref[...] += jnp.dot(x, v_ref[...].astype(jnp.float32),
+                                 preferred_element_type=jnp.float32)
+
+        @pl.when(k == nk - 1)
+        def _drain():
+            o_ref[...] = (epi(acc_ref[...] * s_ref[...]) *
+                          (gacc_ref[...] * vs_ref[...])).astype(o_ref.dtype)
+
+    return kernel
+
+
+def qmatmul(x: Array, q: Array, scale: Array, *,
+            table: Optional[PWLTable] = None,
+            qv: Optional[Array] = None, vscale: Optional[Array] = None,
+            block_m: int = 256, block_n: int = 256, block_k: int = 512,
+            interpret: bool = False) -> Array:
+    """``epi((x @ q) * scale)`` or, gated, ``... * ((x @ qv) * vscale)``.
+
+    x: (m, k) fp; q, qv: (k, n) int8; scale, vscale: (1, n) fp32.
+    ``epi`` is the PWL table epilogue when given, identity otherwise.
+    """
+    m, k = x.shape
+    k2, n = q.shape
+    assert k == k2, (x.shape, q.shape)
+    scale = scale.reshape(1, n)
+    gated = qv is not None
+    if gated:
+        assert vscale is not None, "gated qmatmul needs vscale"
+        vscale = vscale.reshape(1, n)
+
+    bm = min(block_m, common.round_up(m, 8))
+    bn = min(block_n, common.round_up(n, 128))
+    bk = min(block_k, common.round_up(k, 128))
+    mp, np_, kp = (common.round_up(m, bm), common.round_up(n, bn),
+                   common.round_up(k, bk))
+    x2 = common.pad_axis(common.pad_axis(x, 0, mp), 1, kp)
+    q2 = common.pad_axis(common.pad_axis(q, 0, kp), 1, np_)
+    s2 = common.pad_axis(scale, 1, np_)
+    nk = kp // bk
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+    ]
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    operands = [x2, q2, s2]
+    if gated:
+        v2 = common.pad_axis(common.pad_axis(qv, 0, kp), 1, np_)
+        vs2 = common.pad_axis(vscale, 1, np_)
+        in_specs.extend([
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ])
+        scratch.append(pltpu.VMEM((bm, bn), jnp.float32))
+        operands.extend([v2, vs2])
+
+    name = "qmatmul"
+    if table is not None:
+        name += f"_{table.name}"
+    if gated:
+        name += "_gated"
+    out = common.pallas_call(
+        _qmatmul_kernel(table, nk, gated),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=scratch,
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+        interpret=interpret,
+        name=name,
+    )(*operands)
+    return out[:m, :n]

@@ -32,6 +32,24 @@ def matmul_pwl_ref(x: Array, w: Array, table: PWLTable,
     return out.astype(x.dtype)
 
 
+def qmatmul_ref(x: Array, q: Array, scale: Array,
+                table: Optional[PWLTable] = None,
+                qv: Optional[Array] = None,
+                vscale: Optional[Array] = None) -> Array:
+    """W8 dequant-matmul oracle: dequantize-then-dot in fp32 (shapes as
+    kernels/qmatmul.py; per-channel scales commute with the contraction,
+    so this equals the kernel's drain-phase rescale)."""
+    deq = q.astype(jnp.float32) * scale.reshape(1, -1)
+    acc = jnp.dot(x.astype(jnp.float32), deq,
+                  preferred_element_type=jnp.float32)
+    out = eval_pwl(table, acc) if table is not None else acc
+    if qv is not None:
+        deqv = qv.astype(jnp.float32) * vscale.reshape(1, -1)
+        out = out * jnp.dot(x.astype(jnp.float32), deqv,
+                            preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
 def ssd_chunk_ref(x_c: Array, a_c: Array, A_cum: Array, B_c: Array,
                   C_c: Array):
     """Intra-chunk SSD oracle.  Shapes as in kernels/ssd_chunk.py."""

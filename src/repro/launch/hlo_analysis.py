@@ -1,4 +1,5 @@
-"""Compiled-HLO analysis: collective byte accounting + roofline terms.
+"""Compiled-HLO analysis: collective byte accounting, roofline terms, and
+per-op program fingerprints (``make hlo-diff``).
 
 ``compiled.cost_analysis()`` has no collective traffic, so we parse the
 partitioned module text: build an instruction -> shape table from every
@@ -129,6 +130,132 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
     return CollectiveStats(counts, op_bytes, wire, details)
 
 
+# ----------------------------------------------------------------------------
+# Per-op program fingerprints (the XLA-CPU layout-cliff diagnostic)
+# ----------------------------------------------------------------------------
+#
+# ROADMAP open item: at 130M scale the fused single-token decode program
+# regresses 1.7-2.6x depending on the decode-cache layout (scan-stacked vs
+# per-layer) at IDENTICAL compiled flops/bytes.  The cost model cannot see
+# it, so the first diagnostic is structural: histogram the compiled module
+# per opcode (instruction count + defined bytes) and diff the two layouts.
+# A program-quality cliff shows up as op-mix drift — fusion counts, copy /
+# transpose insertions, concatenates — rather than byte deltas.
+
+_OP_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*"
+    r"(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([a-z][a-z0-9\-]*)\(")
+
+
+def op_fingerprint(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    """``{opcode: {"count", "bytes"}}`` over every instruction definition;
+    ``bytes`` sums each defining instruction's output shape (tuple shapes
+    flattened).  Deterministic for a fixed compiled module, so two dumps
+    diff cleanly."""
+    out: Dict[str, Dict[str, int]] = {}
+    for line in hlo_text.splitlines():
+        om = _OP_DEF_RE.match(line)
+        if not om:
+            continue
+        op = om.group(1)
+        b = 0
+        dm = _DEF_RE.match(line)
+        if dm:
+            if dm.group(2) is not None:
+                b = _tuple_bytes(dm.group(2))
+            else:
+                b = _shape_bytes(dm.group(3), dm.group(4))
+        slot = out.setdefault(op, {"count": 0, "bytes": 0})
+        slot["count"] += 1
+        slot["bytes"] += b
+    return out
+
+
+def fingerprint_diff(a: Dict[str, Dict[str, int]],
+                     b: Dict[str, Dict[str, int]]) -> List[dict]:
+    """Per-op rows where the two fingerprints disagree, biggest
+    |count delta| first (count drift is the program-quality signal;
+    byte-identical programs can still schedule very differently)."""
+    rows = []
+    for op in sorted(set(a) | set(b)):
+        ca, cb = a.get(op, {"count": 0, "bytes": 0}), \
+            b.get(op, {"count": 0, "bytes": 0})
+        if ca == cb:
+            continue
+        rows.append({"op": op,
+                     "count_a": ca["count"], "count_b": cb["count"],
+                     "bytes_a": ca["bytes"], "bytes_b": cb["bytes"]})
+    rows.sort(key=lambda r: (-abs(r["count_a"] - r["count_b"]),
+                             -abs(r["bytes_a"] - r["bytes_b"])))
+    return rows
+
+
+def decode_step_hlo(arch: str, *, scan_layers: bool,
+                    reduced: bool = False) -> str:
+    """Compiled (post-optimization) HLO text of one fused decode step for
+    ``arch`` under the given decode-cache layout."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config(arch, reduced=reduced).replace(
+        param_dtype="float32", scan_layers=scan_layers)
+    model = build_model(cfg)
+    from repro.nn.params import init_params
+    params = model.decode_view(
+        init_params(model.param_specs(), jax.random.PRNGKey(0),
+                    jnp.float32))
+    cache = model.init_cache(1, 64, jnp.float32)
+    tok = jnp.ones((1, 1), jnp.int32)
+    step = jax.jit(lambda p, t, c: model.decode_step(p, t, c, jnp.int32(4)),
+                   donate_argnums=(2,))
+    return step.lower(params, tok, cache).compile().as_text()
+
+
+def main(argv=None):
+    """``python -m repro.launch.hlo_analysis --arch mamba2-130m``: dump
+    the per-op fingerprint of the fused decode step under BOTH cache
+    layouts and print the diff — the concrete first step on the layout
+    -cliff open item (``make hlo-diff``)."""
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (fast; the cliff itself only "
+                         "shows at full size)")
+    ap.add_argument("--dump", default=None,
+                    help="write the two fingerprints + diff as JSON here")
+    args = ap.parse_args(argv)
+
+    fps = {}
+    for name, scan in (("scan_stacked", True), ("per_layer", False)):
+        fps[name] = op_fingerprint(
+            decode_step_hlo(args.arch, scan_layers=scan,
+                            reduced=args.reduced))
+        total = sum(v["count"] for v in fps[name].values())
+        print(f"{args.arch} [{name}]: {total} instructions, "
+              f"{len(fps[name])} opcodes")
+    diff = fingerprint_diff(fps["scan_stacked"], fps["per_layer"])
+    print(f"\nop-mix drift (scan_stacked vs per_layer), "
+          f"{len(diff)} differing opcodes:")
+    print(f"{'op':<24}{'n(scan)':>9}{'n(layer)':>9}"
+          f"{'MB(scan)':>10}{'MB(layer)':>10}")
+    for r in diff[:20]:
+        print(f"{r['op']:<24}{r['count_a']:>9}{r['count_b']:>9}"
+              f"{r['bytes_a'] / 1e6:>10.2f}{r['bytes_b'] / 1e6:>10.2f}")
+    if args.dump:
+        with open(args.dump, "w") as f:
+            json.dump({"arch": args.arch, "fingerprints": fps,
+                       "diff": diff}, f, indent=2)
+        print(f"\nwrote {args.dump}")
+    return diff
+
+
 def roofline_terms(flops_per_device: float, bytes_per_device: float,
                    collective_operand_bytes: float,
                    collective_wire_bytes: float) -> dict:
@@ -147,3 +274,5 @@ def roofline_terms(flops_per_device: float, bytes_per_device: float,
     denom = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
     terms["roofline_fraction"] = compute_s / denom if denom else 0.0
     return terms
+if __name__ == "__main__":
+    main()

@@ -10,8 +10,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.xamba import DECODE_MODES
+from repro.core.xamba import DECODE_MODES, QUANT_MODES
 from repro.models import build_model
+from repro.nn import quant
 from repro.nn.params import init_params
 from repro.serve import ContinuousEngine, Engine, ServeConfig
 
@@ -42,6 +43,10 @@ def main(argv=None):
     ap.add_argument("--prefill-token-budget", type=int, default=0,
                     help="max prefill tokens per poll under --prefill-chunk "
                          "(0 = one chunk call per poll)")
+    ap.add_argument("--quant", default="none", choices=QUANT_MODES,
+                    help="W8 weight-only quantization: int8 per-channel "
+                         "weights through prefill, chunked prefill and "
+                         "decode (state pools and caches stay fp)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO, format="%(message)s")
@@ -52,9 +57,17 @@ def main(argv=None):
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.decode_mode:
         cfg = cfg.with_decode_mode(args.decode_mode)
+    if args.quant != "none":
+        cfg = cfg.with_quant(args.quant)
     model = build_model(cfg)
     params = init_params(model.param_specs(), jax.random.PRNGKey(args.seed),
                          cfg.dtype)
+    if args.quant != "none":
+        params = quant.quantize_params_for_mode(params, args.quant)
+        s = quant.quant_summary(params)
+        log.info("quant %s: %d tensors int8, %.1f MB (%.2fx vs fp32)",
+                 args.quant, s["quantized_tensors"], s["bytes"] / 1e6,
+                 s["compression"])
     scfg = ServeConfig(
         max_batch=args.batch, prefill_buckets=(32, 128),
         max_new_tokens=args.max_new, temperature=args.temperature,

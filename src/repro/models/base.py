@@ -185,6 +185,12 @@ class ModelConfig:
         return self.replace(xamba=dataclasses.replace(self.xamba,
                                                       decode=mode))
 
+    def with_quant(self, mode: str) -> "ModelConfig":
+        """Config with ``XambaConfig.quant`` overridden (CLI plumbing);
+        pair with ``nn.quant.quantize_params_for_mode`` on the params."""
+        return self.replace(xamba=dataclasses.replace(self.xamba,
+                                                      quant=mode))
+
 
 def cross_entropy_loss(logits: Array, labels: Array,
                        mask: Optional[Array] = None,

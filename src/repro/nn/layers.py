@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.nn import quant
 from repro.nn.params import ParamSpec
 
 Array = jax.Array
@@ -30,7 +31,15 @@ def linear_specs(d_in: int, d_out: int, *, axes=("embed", "mlp"),
 
 
 def linear(p: dict, x: Array) -> Array:
-    y = jnp.dot(x, p["w"], preferred_element_type=jnp.float32)
+    """Dense projection; transparently runs the W8 path when the weight
+    was quantized (``nn/quant.py``) — every model family's prefill /
+    chunked-prefill / decode goes through here, so quantized params need
+    no per-family plumbing."""
+    w = p["w"]
+    if quant.is_quantized(w):
+        y = quant.qdot(x, w)
+    else:
+        y = jnp.dot(x, w, preferred_element_type=jnp.float32)
     if "b" in p:
         y = y + p["b"].astype(jnp.float32)
     return y.astype(x.dtype)

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pwl
-from repro.nn import layers
+from repro.nn import layers, quant
 
 Array = jax.Array
 
@@ -47,9 +47,15 @@ def apply(params: dict, cfg, x: Array) -> Array:
                                   hi=xamba.actiba_range[1],
                                   adaptive=xamba.actiba_adaptive)
             x2 = x.reshape(-1, x.shape[-1])
-            h = kops.matmul_pwl(
-                x2, params["wg"]["w"], table, params["wi"]["w"],
-                interpret=(xamba.cumba == "pallas_interpret"))
+            wg, wi = params["wg"]["w"], params["wi"]["w"]
+            interp = xamba.cumba == "pallas_interpret"
+            if quant.is_quantized(wg):
+                # W8 + ActiBA composed: int8 tiles dequantized in-register,
+                # PWL epilogue on the rescaled accumulator in the drain.
+                h = kops.qmatmul(x2, wg.q, wg.scale, table=table,
+                                 qv=wi.q, vscale=wi.scale, interpret=interp)
+            else:
+                h = kops.matmul_pwl(x2, wg, table, wi, interpret=interp)
             h = h.reshape(x.shape[:-1] + (h.shape[-1],))
         else:
             act = pwl.activation(act_name, xamba)

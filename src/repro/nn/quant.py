@@ -1,0 +1,279 @@
+"""W8 weight-only quantization: int8 per-channel symmetric weights.
+
+XAMBA's Step-3 trades accuracy for the NPU's low-precision datapath; the
+serving-backend analogue is weight-only int8.  Full-size single-token
+decode is weight-bandwidth-bound (see ``docs/benchmarks.md``), so halving
+or quartering the bytes behind every big matmul translates near-linearly
+into tok/s — without touching the fp32 state recurrences that make SSM
+decode numerically stable.
+
+Scheme
+------
+* **per-channel symmetric**: for a ``(k, n)`` linear weight, each output
+  channel ``j`` stores ``q[:, j] = round(w[:, j] / scale[j])`` with
+  ``scale[j] = max|w[:, j]| / 127`` — int8 payload + fp32 scale row.
+  Per-channel (not per-tensor) keeps the round-trip error proportional to
+  each channel's own range, which is what lets the greedy continuation
+  track the fp32 model.
+* **weight-only**: activations stay fp32/bf16.  Dequantization is exact
+  (``deq = q * scale``), so the only error is the rounding at quantize
+  time — there is no activation-quantization noise and the decode /
+  prefill / chunked-prefill paths all see identical weights.
+* **skip-list**: norms, embeddings, biases, convs and the small SSM
+  parameters (``A_log``, ``dt_bias``, ``D``, ``dt_proj``, ``x_proj``, the
+  MoE router) stay fp — they are a rounding error of total bytes but
+  carry the recurrence dynamics (and the fused Pallas decode-step kernels
+  consume them directly).
+
+Execution backends (``QuantTensor.backend``, static jit metadata):
+
+* ``"xla"``              — ``lax.dot_general`` directly on the int8
+  payload (mixed-dtype dot: XLA upconverts in-register; the weight is
+  *read* from memory as int8) with the per-channel scale applied to the
+  fp32 accumulator.  This is the portable fallback every mode can run.
+* ``"pallas"`` / ``"pallas_interpret"`` — the fused dequant-matmul kernel
+  (``kernels/qmatmul.py``): int8 tiles dequantized in-register in VMEM,
+  per-channel scale (and optionally the ActiBA PWL epilogue) applied in
+  the drain phase.
+
+``QuantTensor`` is a registered pytree node whose children are the int8
+payload and the scale, so the existing machinery — ``decode_view``'s
+per-layer pre-slicing, ``lax.scan`` over stacked layers, checkpoint-style
+tree maps — works unchanged on quantized params: a stacked ``(L, k, n)``
+weight quantizes to ``q (L, k, n)`` + ``scale (L, 1, n)`` and slicing
+layer ``i`` slices both leaves.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# Backends a QuantTensor can execute on (static aux data: switching the
+# backend retraces, carrying it in the pytree leaf would not).
+QUANT_BACKENDS = ("xla", "pallas", "pallas_interpret")
+
+# ``XambaConfig.quant`` mode -> execution backend.
+MODE_BACKENDS = {
+    "w8": "xla",
+    "w8_pallas": "pallas",
+    "w8_pallas_interpret": "pallas_interpret",
+}
+
+# Param-tree path components whose linear weights stay fp (see module
+# docstring).  Matched against every path component, so e.g. the conv
+# inside any mixer is skipped wherever it lives.
+DEFAULT_SKIP = frozenset({
+    "conv",       # depthwise conv taps: tiny, consumed raw by fused kernels
+    "dt_proj",    # mamba1 dt up-projection: small, raw input to the kernel
+    "x_proj",     # mamba1 dt/B/C projection: small, raw input to the kernel
+    "router",     # MoE router: tiny and routing-critical
+    "embed",      # embedding / tied unembedding table
+})
+
+# Smallest weight worth quantizing: below this the scale row overhead and
+# the extra dequant op cost more than the bytes saved.
+DEFAULT_MIN_DIM = 32
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantTensor:
+    """int8 payload + fp32 per-channel scale for one linear weight.
+
+    ``q``: int8 ``(..., k, n)``; ``scale``: fp32 ``(..., 1, n)`` (the
+    contraction axis kept as 1 so any leading stacking axis slices both
+    leaves identically)."""
+
+    __slots__ = ("q", "scale", "backend")
+
+    def __init__(self, q, scale, backend: str = "xla"):
+        self.q = q
+        self.scale = scale
+        self.backend = backend
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.q, self.scale), self.backend
+
+    @classmethod
+    def tree_unflatten(cls, backend, children):
+        q, scale = children
+        return cls(q, scale, backend)
+
+    # -- conveniences -------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.q.shape)
+
+    @property
+    def ndim(self) -> int:
+        return self.q.ndim
+
+    def with_backend(self, backend: str) -> "QuantTensor":
+        if backend not in QUANT_BACKENDS:
+            raise ValueError(
+                f"backend {backend!r} not in {QUANT_BACKENDS}")
+        return QuantTensor(self.q, self.scale, backend)
+
+    def __repr__(self):
+        return (f"QuantTensor(shape={self.shape}, "
+                f"backend={self.backend!r})")
+
+
+def is_quantized(x) -> bool:
+    return isinstance(x, QuantTensor)
+
+
+# ----------------------------------------------------------------------------
+# Quantize / dequantize
+# ----------------------------------------------------------------------------
+
+def quantize_tensor(w: Array, backend: str = "xla") -> QuantTensor:
+    """Per-channel symmetric int8 over the last axis of ``w`` (ndim >= 2);
+    the reduction runs over the contraction axis (-2) only, so a stacked
+    ``(L, k, n)`` weight gets an independent scale per (layer, channel)."""
+    if w.ndim < 2:
+        raise ValueError(f"quantize_tensor needs ndim >= 2, got {w.shape}")
+    wf = jnp.asarray(w, jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)       # (..., 1, n)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QuantTensor(q, scale, backend)
+
+
+def dequantize(qt: QuantTensor) -> Array:
+    """Exact fp32 reconstruction of the quantized weight."""
+    return qt.q.astype(jnp.float32) * qt.scale
+
+
+def maybe_dequant(w) -> Array:
+    """Pass raw arrays through; materialize QuantTensors to fp32 (used by
+    call sites that feed weights into kernels with fp-only signatures —
+    the dequant runs in-program, the weight is still *stored* as int8)."""
+    return dequantize(w) if is_quantized(w) else w
+
+
+def roundtrip_error_bound(qt: QuantTensor) -> Array:
+    """Elementwise bound on ``|w - dequantize(quantize(w))|``: half a
+    quantization step per channel (+ float slack); the round-trip test
+    pins the implementation to it."""
+    return 0.5 * qt.scale + 1e-6
+
+
+# ----------------------------------------------------------------------------
+# Param-tree quantization
+# ----------------------------------------------------------------------------
+
+def _should_quantize(path: Tuple[str, ...], node: dict, skip, min_dim: int
+                     ) -> bool:
+    w = node.get("w")
+    if not isinstance(w, (jax.Array, np.ndarray)) or w.ndim < 2:
+        return False
+    if any(part in skip for part in path):
+        return False
+    return min(w.shape[-1], w.shape[-2]) >= min_dim
+
+
+def quantize_params(params: Any, *, backend: str = "xla",
+                    skip: Sequence[str] = DEFAULT_SKIP,
+                    min_dim: int = DEFAULT_MIN_DIM) -> Any:
+    """Quantize every big linear weight in a params pytree.
+
+    Walks the nested dict/list/tuple structure; any dict that carries a
+    ``"w"`` array (the ``layers.linear_specs`` layout) is a candidate —
+    quantized in place unless a path component is on the skip-list or the
+    weight is too small.  Everything else (norm scales, biases,
+    embeddings, conv taps, SSM params, MoE expert tensors) passes through
+    untouched.  Works on stacked and per-layer layouts alike; run it
+    BEFORE ``decode_view`` so the sliced view shares the int8 buffers.
+    """
+    if backend not in QUANT_BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {QUANT_BACKENDS}")
+    skip = frozenset(skip)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "w" and _should_quantize(path, node, skip, min_dim):
+                    out[k] = quantize_tensor(v, backend)
+                else:
+                    out[k] = walk(v, path + (k,))
+            return out
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            return t(walk(v, path + (str(i),))
+                     for i, v in enumerate(node))
+        return node
+
+    return walk(params, ())
+
+
+def quantize_params_for_mode(params: Any, quant_mode: str, **kw) -> Any:
+    """``XambaConfig.quant``-keyed entry point: ``"none"`` passes params
+    through, the ``w8*`` modes quantize onto the matching backend."""
+    if quant_mode in (None, "none"):
+        return params
+    if quant_mode not in MODE_BACKENDS:
+        raise ValueError(
+            f"quant mode {quant_mode!r} not in "
+            f"{('none',) + tuple(MODE_BACKENDS)}")
+    return quantize_params(params, backend=MODE_BACKENDS[quant_mode], **kw)
+
+
+def quant_summary(params: Any) -> Dict[str, float]:
+    """Byte accounting for logging: actual stored bytes vs what the same
+    pytree would weigh all-fp32 (EVERY leaf counted at 4 bytes/element on
+    the equiv side, so the ratio is well-defined whether the fp leaves
+    are fp32 or bf16 — it is "vs an all-fp32 pytree", not "vs the dtype
+    you happened to init with")."""
+    n_q = n_fp = 0
+    bytes_q = bytes_fp = fp32_equiv = 0
+    for leaf in jax.tree.leaves(params, is_leaf=is_quantized):
+        if is_quantized(leaf):
+            n_q += 1
+            bytes_q += leaf.q.size * leaf.q.dtype.itemsize + \
+                leaf.scale.size * leaf.scale.dtype.itemsize
+            fp32_equiv += leaf.q.size * 4
+        else:
+            n_fp += 1
+            bytes_fp += leaf.size * leaf.dtype.itemsize
+            fp32_equiv += leaf.size * 4
+    total = bytes_q + bytes_fp
+    return {"quantized_tensors": n_q, "fp_tensors": n_fp,
+            "bytes": total, "bytes_fp32_equiv": fp32_equiv,
+            "compression": round(fp32_equiv / total, 2) if total else 1.0}
+
+
+# ----------------------------------------------------------------------------
+# Quantized matmul dispatch
+# ----------------------------------------------------------------------------
+
+def qdot(x: Array, qt: QuantTensor) -> Array:
+    """``x @ dequantize(qt)`` in fp32, executed on the tensor's backend.
+
+    ``x``: ``(..., k)``; ``qt.q``: ``(k, n)`` (stacked weights must be
+    sliced to a layer before application, same as raw weights).  The XLA
+    backend issues ``dot_general`` directly on the int8 payload — the
+    weight crosses the memory bus as 1 byte/element and is upconverted
+    in-register — then scales the fp32 accumulator per channel.  The
+    pallas backends run the fused dequant-matmul kernel.
+    """
+    if qt.q.ndim != 2:
+        raise ValueError(
+            f"qdot needs a sliced 2D weight, got {qt.shape} "
+            "(apply decode_view / scan slicing first)")
+    if qt.backend in ("pallas", "pallas_interpret"):
+        from repro.kernels import qmatmul as _qm
+        x2 = x.reshape(-1, x.shape[-1])
+        y = _qm.qmatmul(x2, qt.q, qt.scale,
+                        interpret=(qt.backend == "pallas_interpret"))
+        return y.reshape(x.shape[:-1] + (qt.q.shape[-1],))
+    y = jax.lax.dot_general(
+        x, qt.q, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return y * qt.scale.reshape(-1)

@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core import pwl, selective_scan as sscan, ssd as ssd_mod
 from repro.kernels.common import RG_LRU_C as _RG_C
-from repro.nn import layers
+from repro.nn import layers, quant
 from repro.nn.params import ParamSpec
 
 Array = jax.Array
@@ -407,11 +407,18 @@ def _rglru_decode(params: dict, cfg, x: Array, state: RGLRUState
 
     if mode in ("pallas", "pallas_interpret"):
         from repro.kernels import ops as kops
+        # The fused step kernel takes raw fp gate weights; under W8 the
+        # rg/ig projections dequantize in-program here, which
+        # MATERIALIZES an fp32 copy per step (pallas_call operands are
+        # concrete) — correctness-first: this path keeps the storage win
+        # but not the bandwidth win until the kernel ingests int8+scale
+        # tiles like kernels/qmatmul.py does.
         y, new_conv, h_new = kops.rglru_decode_step(
             u, gate, state.conv, state.h,
             params["conv"]["w"], params["conv"]["b"],
-            params["rg"]["w"], params["rg"]["b"],
-            params["ig"]["w"], params["ig"]["b"], params["lam"],
+            quant.maybe_dequant(params["rg"]["w"]), params["rg"]["b"],
+            quant.maybe_dequant(params["ig"]["w"]), params["ig"]["b"],
+            params["lam"],
             xamba=xamba, interpret=(mode == "pallas_interpret"))
         y = y.astype(x.dtype)
     else:

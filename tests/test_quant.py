@@ -1,0 +1,340 @@
+"""W8 quantized inference path: round-trip bounds, the fused
+dequant-matmul kernel vs its oracle, per-family parity of the quantized
+model along every serving path (prefill / chunked decode / decode_step),
+and the serve engines' compile-once + donation discipline on quantized
+weights.
+
+Greedy parity vs fp32 is asserted TEACHER-FORCED with a margin-aware
+tolerance: random-init logits sit in near-ties, so free-running greedy
+trivially diverges on any perturbation; the meaningful invariant is that
+wherever the quantized argmax disagrees, the fp32 top-2 margin is within
+the quantization's logit error (i.e. only coin-flips move).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import pwl
+from repro.core.xamba import XambaConfig
+from repro.kernels import ops as kops, ref
+from repro.models import ModelConfig, build_model
+from repro.nn import quant
+from repro.nn.params import init_params
+from repro.serve import ContinuousEngine, ServeConfig
+
+FAMILIES = ("mamba2-130m", "mamba-130m", "recurrentgemma-2b", "gemma-2b")
+
+V = 64
+SMALL_MAMBA2 = ModelConfig(name="m2", family="mamba2", vocab_size=V,
+                           d_model=32, n_layers=2, d_state=8, ssm_head_dim=8,
+                           chunk_size=8, param_dtype="float32")
+SMALL_RGLRU = ModelConfig(name="rg", family="recurrentgemma", vocab_size=V,
+                          d_model=32, n_layers=3, n_heads=4, n_kv_heads=1,
+                          head_dim=8, d_ff=96, mlp_type="geglu", lru_width=32,
+                          sliding_window=8, scan_layers=True,
+                          param_dtype="float32")
+
+
+def _reduced(arch):
+    return get_config(arch, reduced=True).replace(param_dtype="float32")
+
+
+def _params(cfg, seed=0):
+    return init_params(build_model(cfg).param_specs(),
+                       jax.random.PRNGKey(seed), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize round trip
+# ---------------------------------------------------------------------------
+def test_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(96, 130)), jnp.float32)
+    # outlier channel: per-channel scales must keep the others tight
+    w = w.at[:, 7].mul(100.0)
+    qt = quant.quantize_tensor(w)
+    assert qt.q.dtype == jnp.int8 and qt.scale.shape == (1, 130)
+    err = jnp.abs(quant.dequantize(qt) - w)
+    assert bool(jnp.all(err <= quant.roundtrip_error_bound(qt)))
+    # outlier confinement: other channels unaffected by channel 7's range —
+    # each stays within half a step of ITS OWN amax, not the outlier's
+    clean_err = jnp.delete(err, 7, axis=1)
+    clean_amax = jnp.abs(jnp.delete(w, 7, axis=1)).max()
+    assert float(clean_err.max()) <= float(clean_amax) * 0.5 / 127 * 1.01
+
+
+def test_roundtrip_stacked_layer_axis():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(3, 40, 72)), jnp.float32)
+    qt = quant.quantize_tensor(w)
+    assert qt.scale.shape == (3, 1, 72)
+    sl = jax.tree.map(lambda a: a[1], qt)          # decode_view-style slice
+    assert isinstance(sl, quant.QuantTensor) and sl.shape == (40, 72)
+    np.testing.assert_allclose(np.asarray(quant.dequantize(sl)),
+                               np.asarray(quant.dequantize(qt)[1]),
+                               rtol=0, atol=0)
+
+
+def test_quantize_params_respects_skip_list():
+    cfg = _reduced("mamba-130m")
+    params = _params(cfg)
+    qp = quant.quantize_params(params)
+    mixer = qp["layers"]["mixer"]
+    assert quant.is_quantized(mixer["in_proj"]["w"])
+    assert quant.is_quantized(mixer["out_proj"]["w"])
+    # skip-list: small SSM params, convs, projections the fused decode
+    # kernels consume raw, embeddings and norms all stay fp
+    assert not quant.is_quantized(mixer["x_proj"]["w"])
+    assert not quant.is_quantized(mixer["dt_proj"]["w"])
+    assert not quant.is_quantized(mixer["conv"]["w"])
+    assert not quant.is_quantized(mixer["A_log"])
+    assert not quant.is_quantized(qp["embed"]["table"])
+    assert not quant.is_quantized(qp["final_norm"]["scale"])
+    s = quant.quant_summary(qp)
+    assert s["quantized_tensors"] == 2 and s["compression"] > 1.5
+
+
+def test_quantize_params_for_mode():
+    cfg = _reduced("mamba2-130m")
+    params = _params(cfg)
+    assert quant.quantize_params_for_mode(params, "none") is params
+    qp = quant.quantize_params_for_mode(params, "w8_pallas_interpret")
+    leaf = qp["layers"]["mixer"]["in_proj"]["w"]
+    assert leaf.backend == "pallas_interpret"
+    with pytest.raises(ValueError):
+        quant.quantize_params_for_mode(params, "w9")
+    with pytest.raises(ValueError):
+        XambaConfig(quant="w9")
+    assert cfg.with_quant("w8").xamba.quant == "w8"
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle (pallas_interpret on CPU) and XLA fallback
+# ---------------------------------------------------------------------------
+def test_qdot_matches_dequantized_matmul():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(4, 56)), jnp.float32)
+    qt = quant.quantize_tensor(
+        jnp.asarray(rng.normal(size=(56, 88)), jnp.float32))
+    want = jnp.dot(x, quant.dequantize(qt))
+    np.testing.assert_allclose(np.asarray(quant.qdot(x, qt)),
+                               np.asarray(want), rtol=1e-5, atol=1e-4)
+    # bf16 activations: int8 weight x bf16 activation upconverts cleanly
+    got16 = quant.qdot(x.astype(jnp.bfloat16), qt)
+    np.testing.assert_allclose(np.asarray(got16), np.asarray(want),
+                               rtol=2e-2, atol=2e-1)
+
+
+@pytest.mark.parametrize("shape", [(5, 96, 130), (8, 256, 64)])
+@pytest.mark.parametrize("variant", ["plain", "pwl", "gated"])
+def test_qmatmul_kernel_ties_oracle(shape, variant):
+    m, k, n = shape
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    qt = quant.quantize_tensor(jnp.asarray(rng.normal(size=(k, n)),
+                                           jnp.float32))
+    table = (pwl.get_table("silu", segments=16)
+             if variant in ("pwl", "gated") else None)
+    kw = {}
+    if variant == "gated":
+        qv = quant.quantize_tensor(jnp.asarray(rng.normal(size=(k, n)),
+                                               jnp.float32))
+        kw = dict(qv=qv.q, vscale=qv.scale)
+    got = kops.qmatmul(x, qt.q, qt.scale, table=table, interpret=True, **kw)
+    want = ref.qmatmul_ref(x, qt.q, qt.scale, table, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_qdot_pallas_backend_ties_xla_backend():
+    """The same QuantTensor executed on both backends agrees (this is the
+    whole-model dispatch path, not just the kernel)."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(3, 48)), jnp.float32)
+    qt = quant.quantize_tensor(jnp.asarray(rng.normal(size=(48, 64)),
+                                           jnp.float32))
+    y_xla = quant.qdot(x, qt)
+    y_pl = quant.qdot(x, qt.with_backend("pallas_interpret"))
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_xla),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# per-family parity: quantized model along every serving path
+# ---------------------------------------------------------------------------
+def _forced_decode_logits(model, params, toks, stream):
+    """Prefill logits + teacher-forced decode logits along ``stream``."""
+    b, L = toks.shape
+    n = stream.shape[1]
+    cache = model.init_cache(b, L + n, jnp.float32)
+    logits, cache = model.prefill(params, {"tokens": toks}, cache)
+    out = [np.asarray(logits)]
+    dv = model.decode_view(params)
+    step = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i))
+    for t in range(n - 1):
+        logits, cache = step(dv, stream[:, t][:, None], cache,
+                             jnp.int32(L + t))
+        out.append(np.asarray(logits))
+    return np.stack(out, 1)                        # (b, n, vocab)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_greedy_parity_vs_fp32(arch):
+    """64-token teacher-forced parity vs fp32: logit error stays small and
+    every argmax disagreement is a near-tie (fp32 top-2 margin below the
+    quantization's own logit error)."""
+    cfg = _reduced(arch)
+    model = build_model(cfg)
+    params = _params(cfg)
+    qp = quant.quantize_params(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 1,
+                              cfg.vocab_size)
+    stream = jax.random.randint(jax.random.PRNGKey(2), (2, 64), 1,
+                                cfg.vocab_size)
+    lf = _forced_decode_logits(model, params, toks, stream)
+    lq = _forced_decode_logits(model, qp, toks, stream)
+    err = float(np.abs(lf - lq).max())
+    assert err < 1.0, f"{arch}: w8 logit error {err}"
+    af, aq = lf.argmax(-1), lq.argmax(-1)
+    agree = float((af == aq).mean())
+    assert agree >= 0.7, f"{arch}: forced greedy agreement {agree}"
+    top2 = np.sort(lf, -1)
+    margin = top2[..., -1] - top2[..., -2]
+    dis = af != aq
+    if dis.any():
+        assert float(margin[dis].max()) <= 2.0 * err, \
+            f"{arch}: confident argmax flipped under w8"
+
+
+@pytest.mark.parametrize("arch", ("mamba2-130m", "mamba-130m"))
+def test_w8_chunked_prefill_matches_whole_sequence(arch):
+    """Quantized chunked prefill == quantized whole-sequence prefill (the
+    same invariant test_prefill_chunk pins for fp params)."""
+    cfg = _reduced(arch)
+    model = build_model(cfg)
+    qp = quant.quantize_params(_params(cfg))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 24), 1,
+                              cfg.vocab_size)
+    whole, _ = model.prefill(qp, {"tokens": toks},
+                             model.init_cache(2, 32, jnp.float32))
+    cache = model.init_cache(2, 32, jnp.float32)
+    for off in range(0, 24, 8):
+        logits, cache = model.prefill_chunk(qp, toks[:, off:off + 8], cache,
+                                            jnp.int32(off))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(whole),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_whisper_accepts_quantized_params():
+    """The fifth family: encoder-decoder prefill + decode_step run on a
+    quantized pytree and stay close to fp32 (whisper's batch dict carries
+    frames, so it is exercised separately from the token-only loop)."""
+    cfg = get_config("whisper-tiny", reduced=True).replace(
+        param_dtype="float32")
+    model = build_model(cfg)
+    params = _params(cfg)
+    qp = quant.quantize_params(params)
+    assert quant.quant_summary(qp)["quantized_tensors"] > 0
+    b = 2
+    toks = jax.random.randint(jax.random.PRNGKey(6), (b, 8), 1,
+                              cfg.vocab_size)
+    frames = jax.random.normal(jax.random.PRNGKey(7),
+                               (b, cfg.encoder_seq, cfg.d_model),
+                               jnp.float32)
+    batch = {"tokens": toks, "frames": frames}
+    lf, cf = model.prefill(params, batch,
+                           model.init_cache(b, 12, jnp.float32))
+    lq, cq = model.prefill(qp, batch, model.init_cache(b, 12, jnp.float32))
+    assert float(np.abs(np.asarray(lf) - np.asarray(lq)).max()) < 1.0
+    tok = jnp.argmax(lq, -1).astype(jnp.int32)[:, None]
+    logits, _ = model.decode_step(qp, tok, cq, jnp.int32(8))
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_rglru_pallas_decode_accepts_quantized_params():
+    """The fused RG-LRU step kernel consumes the (quantized) rg/ig gate
+    weights via in-program dequant; pallas_interpret ties the cumba mode
+    on the same quantized params."""
+    qp = quant.quantize_params(_params(SMALL_RGLRU))
+    tok = jnp.asarray([[3], [41]], jnp.int32)
+    outs = {}
+    for mode in ("cumba", "pallas_interpret"):
+        cfg = dataclasses.replace(SMALL_RGLRU,
+                                  xamba=XambaConfig(decode=mode))
+        model = build_model(cfg)
+        cache = model.init_cache(2, 16, jnp.float32)
+        toks = jnp.asarray([[5, 6, 7, 8], [9, 10, 11, 12]], jnp.int32)
+        _, cache = model.prefill(qp, {"tokens": toks}, cache)
+        logits, _ = model.decode_step(qp, tok, cache, jnp.int32(4))
+        outs[mode] = np.asarray(logits)
+    np.testing.assert_allclose(outs["pallas_interpret"], outs["cumba"],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_w8_pallas_backend_model_ties_xla_backend_model():
+    """End-to-end: the w8_pallas_interpret params produce the same logits
+    as the w8 (XLA dot_general) params — backend choice is numerics-free
+    up to accumulation order."""
+    model = build_model(SMALL_MAMBA2)
+    params = _params(SMALL_MAMBA2)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 8), 1, V)
+    lx, cx = model.prefill(quant.quantize_params_for_mode(params, "w8"),
+                           {"tokens": toks},
+                           model.init_cache(2, 12, jnp.float32))
+    lp, cp = model.prefill(
+        quant.quantize_params_for_mode(params, "w8_pallas_interpret"),
+        {"tokens": toks}, model.init_cache(2, 12, jnp.float32))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lx),
+                               rtol=1e-4, atol=1e-4)
+    tok = jnp.argmax(lx, -1).astype(jnp.int32)[:, None]
+    dx, _ = model.decode_step(quant.quantize_params_for_mode(params, "w8"),
+                              tok, cx, jnp.int32(8))
+    dp, _ = model.decode_step(
+        quant.quantize_params_for_mode(params, "w8_pallas_interpret"),
+        tok, cp, jnp.int32(8))
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dx),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# serve: compile-once + donation + greedy identity on quantized weights
+# ---------------------------------------------------------------------------
+def test_serve_w8_compile_once_and_greedy_identity():
+    """Continuous engine (chunked prefill on) over quantized params: zero
+    decode recompiles across slot turnover, donated pool survives, and the
+    emitted tokens tie a manual quantized prefill + decode loop."""
+    model = build_model(SMALL_MAMBA2)
+    qp = quant.quantize_params(_params(SMALL_MAMBA2))
+    prompts = [list(range(1, 9)), list(range(9, 17)), list(range(17, 23))]
+    max_new = 4
+    eng = ContinuousEngine(model, qp, ServeConfig(
+        max_batch=2, prefill_buckets=(8,), max_new_tokens=max_new,
+        prefill_chunk=4))
+    for p in prompts:
+        eng.submit(p)
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    assert len(done) == 3
+    assert eng.counters["decode_compiles"] in (1, "unavailable")
+    assert eng.counters["prefill_chunk_compiles"] in (1, "unavailable")
+
+    # manual quantized loop, one request at a time (slot-order agnostic)
+    from repro.serve.scheduler import chunk_span
+    for uid, prompt in zip(sorted(done), prompts):
+        span = chunk_span((8,), 4, len(prompt))
+        toks = np.zeros((1, span), np.int32)
+        toks[0, span - len(prompt):] = prompt
+        cache = model.init_cache(1, 8 + max_new, jnp.float32)
+        logits, cache = model.prefill(qp, {"tokens": jnp.asarray(toks)},
+                                      cache)
+        cur = jnp.argmax(logits, -1)
+        manual = [int(cur[0])]
+        for t in range(1, max_new):
+            logits, cache = model.decode_step(qp, cur[:, None], cache,
+                                              jnp.int32(span + t - 1))
+            cur = jnp.argmax(logits, -1)
+            manual.append(int(cur[0]))
+        assert done[uid] == manual, f"uid={uid}"
