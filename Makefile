@@ -2,8 +2,9 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test smoke-serve smoke-prefill-chunk smoke-decode smoke-quant \
-    smoke-quickstart linkcheck bench-serve bench-json hlo-diff ci
+.PHONY: test smoke-serve smoke-prefill-chunk smoke-prefix smoke-decode \
+    smoke-quant smoke-quickstart linkcheck bench-serve bench-json \
+    hlo-diff ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -27,6 +28,13 @@ smoke-quant:
 	    --engine continuous --requests 4 --batch 2 --max-new 4 \
 	    --prefill-chunk 8 --quant w8
 
+# Prefix-state cache smoke: a tiny shared-system-prompt serve run that
+# asserts >= 1 cross-request cache hit, byte-identical greedy outputs
+# cache on/off, and 0 decode recompiles (benchmarks/bench_serve_prefix.py
+# raises on any violation).
+smoke-prefix:
+	PYTHONPATH=src:. $(PY) -m benchmarks.bench_serve_prefix --smoke
+
 smoke-quickstart:
 	$(PY) examples/quickstart.py
 
@@ -44,10 +52,11 @@ bench-json:
 
 # Per-op HLO fingerprint diff of the fused decode step under both cache
 # layouts (the ROADMAP layout-cliff open item; full size by default —
-# add ARGS="--reduced" for a fast structural smoke).
+# add ARGS="--reduced" for a fast structural smoke, ARGS="--schedule"
+# for the op-order + buffer-assignment view).
 hlo-diff:
 	$(PY) -m repro.launch.hlo_analysis --arch mamba2-130m $(ARGS)
 	$(PY) -m repro.launch.hlo_analysis --arch mamba-130m $(ARGS)
 
-ci: test smoke-decode smoke-serve smoke-prefill-chunk smoke-quant \
-    smoke-quickstart linkcheck bench-json
+ci: test smoke-decode smoke-serve smoke-prefill-chunk smoke-prefix \
+    smoke-quant smoke-quickstart linkcheck bench-json

@@ -107,14 +107,17 @@ def _warmup(engine, vocab, rng):
 
 
 def bench(arch="mamba2-130m", requests=32, batch=4, arrival_ms=5.0,
-          seed=0, smoke=False):
+          seed=0, smoke=False, trace_seed=None):
     cfg = get_config(arch, reduced=True)
     model = build_model(cfg)
     params = init_params(model.param_specs(), jax.random.PRNGKey(seed),
                          cfg.dtype)
     scfg = ServeConfig(max_batch=batch, prefill_buckets=(16,),
                        max_new_tokens=max(OUTPUT_MIX), seed=seed)
-    workload = make_workload(np.random.default_rng(seed), requests,
+    # The arrival trace gets its own seed (reproducible run-to-run and
+    # steerable independently of param init); recorded in the env block.
+    trace_seed = seed if trace_seed is None else trace_seed
+    workload = make_workload(np.random.default_rng(trace_seed), requests,
                              cfg.vocab_size, arrival_ms / 1e3)
 
     results = {}
@@ -162,7 +165,7 @@ def bench(arch="mamba2-130m", requests=32, batch=4, arrival_ms=5.0,
 
 
 def bench_prefill(arch="mamba2-130m", requests=48, batch=4, arrival_ms=40.0,
-                  chunk=16, seed=0, smoke=False):
+                  chunk=16, seed=0, smoke=False, trace_seed=None):
     """Monolithic vs chunked prefill on the continuous engine: mostly-short
     Poisson traffic with a rare long-prompt tail (the head-of-line-blocking
     regime chunked prefill is for).
@@ -182,7 +185,8 @@ def bench_prefill(arch="mamba2-130m", requests=48, batch=4, arrival_ms=40.0,
     params = init_params(model.param_specs(), jax.random.PRNGKey(seed),
                          cfg.dtype)
     buckets = (16, 512)
-    workload = make_workload(np.random.default_rng(seed), requests,
+    trace_seed = seed if trace_seed is None else trace_seed
+    workload = make_workload(np.random.default_rng(trace_seed), requests,
                              cfg.vocab_size, arrival_ms / 1e3,
                              n_long=2, long_len=(384, 513),
                              output_mix=(4, 8))
@@ -248,15 +252,22 @@ def bench_prefill(arch="mamba2-130m", requests=48, batch=4, arrival_ms=40.0,
     return results
 
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, trace_seed: int = 0) -> dict:
     """Harness entrypoint; the returned dict is ``BENCH_serve.json``."""
+    from benchmarks import bench_serve_prefix
     if smoke:
-        out = bench(requests=10, arrival_ms=2.0, smoke=True)
+        out = bench(requests=10, arrival_ms=2.0, smoke=True,
+                    trace_seed=trace_seed)
         out["prefill"] = bench_prefill(requests=8, arrival_ms=5.0,
-                                       smoke=True)
-        return out
-    out = bench()
-    out["prefill"] = bench_prefill()
+                                       smoke=True, trace_seed=trace_seed)
+    else:
+        out = bench(trace_seed=trace_seed)
+        out["prefill"] = bench_prefill(trace_seed=trace_seed)
+    out["prefix"] = bench_serve_prefix.run(smoke=smoke,
+                                           trace_seed=trace_seed)
+    import jax as _jax
+    out["env"] = {"trace_seed": trace_seed, "jax": _jax.__version__,
+                  "backend": _jax.default_backend()}
     return out
 
 
@@ -267,14 +278,20 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--arrival-ms", type=float, default=5.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-seed", type=int, default=None,
+                    help="arrival-trace seed (default: --seed); recorded "
+                         "in the BENCH JSON env block")
     args = ap.parse_args()
     results = bench(args.arch, args.requests, args.batch, args.arrival_ms,
-                    args.seed)
+                    args.seed, trace_seed=args.trace_seed)
     for name, r in results.items():
-        print(f"{name:11s} goodput={r['goodput']:8.1f} tok/s  "
+        if not isinstance(r, dict):
+            print(f"{name}: {r}")
+            continue
+        print(f"{name:11s} goodput={r['goodput_tok_s']:8.1f} tok/s  "
               f"occupancy={r['occupancy']:.2f}  "
               f"ttft={r['ttft_mean_s'] * 1e3:7.1f} ms  "
-              f"wall={r['wall']:.1f} s")
+              f"wall={r['wall_s']:.1f} s")
 
 
 if __name__ == "__main__":

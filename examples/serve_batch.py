@@ -35,6 +35,10 @@ def main():
                     help="continuous engine: admit prompts this many "
                          "tokens per step instead of one monolithic "
                          "bucketed prefill")
+    ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                    help="continuous engine + --prefill-chunk: reuse "
+                         "cached prompt-prefix state across requests "
+                         "(docs/prefix_cache.md); 0 = off")
     from repro.core.xamba import QUANT_MODES
     ap.add_argument("--quant", default="none", choices=QUANT_MODES,
                     help="W8 weight-only quantization: serve on int8 "
@@ -62,7 +66,9 @@ def main():
         max_batch=4, prefill_buckets=(16, 64, 128),
         max_new_tokens=args.max_new, temperature=args.temperature,
         prefill_chunk=(args.prefill_chunk
-                       if args.engine == "continuous" else None)))
+                       if args.engine == "continuous" else None),
+        prefix_cache_mb=(args.prefix_cache_mb
+                         if args.engine == "continuous" else 0.0)))
 
     rng = np.random.default_rng(0)
     t0 = time.time()

@@ -191,10 +191,89 @@ def fingerprint_diff(a: Dict[str, Dict[str, int]],
     return rows
 
 
-def decode_step_hlo(arch: str, *, scan_layers: bool,
-                    reduced: bool = False) -> str:
-    """Compiled (post-optimization) HLO text of one fused decode step for
-    ``arch`` under the given decode-cache layout."""
+def schedule_fingerprint(hlo_text: str) -> List[Tuple[str, int]]:
+    """Ordered ``(opcode, output_bytes)`` sequence over every instruction
+    definition in module order.  Post-optimization HLO prints computations
+    in (approximate) schedule order, so two modules with identical op
+    *counts* but different op *order* — the part ``op_fingerprint`` is
+    blind to — diff cleanly here."""
+    out: List[Tuple[str, int]] = []
+    for line in hlo_text.splitlines():
+        om = _OP_DEF_RE.match(line)
+        if not om:
+            continue
+        b = 0
+        dm = _DEF_RE.match(line)
+        if dm:
+            b = (_tuple_bytes(dm.group(2)) if dm.group(2) is not None
+                 else _shape_bytes(dm.group(3), dm.group(4)))
+        out.append((om.group(1), b))
+    return out
+
+
+def schedule_diff(a: List[Tuple[str, int]],
+                  b: List[Tuple[str, int]]) -> dict:
+    """Order-sensitive comparison of two schedule fingerprints.
+
+    ``similarity`` is difflib's ratio over the opcode sequences;
+    ``first_divergence`` is the instruction index where the op streams
+    first disagree (with a few ops of context from each side); ``moved``
+    summarizes the largest replaced/inserted/deleted blocks — runs of
+    ops one schedule has where the other has something else, which is
+    where copy/bitcast insertion and fusion-boundary drift show up even
+    at identical op counts and bytes."""
+    import difflib
+
+    ops_a = [op for op, _ in a]
+    ops_b = [op for op, _ in b]
+    sm = difflib.SequenceMatcher(a=ops_a, b=ops_b, autojunk=False)
+    first = next((i for i, (x, y) in enumerate(zip(ops_a, ops_b))
+                  if x != y), min(len(ops_a), len(ops_b)))
+    moved = []
+    for tag, i1, i2, j1, j2 in sm.get_opcodes():
+        if tag == "equal":
+            continue
+        moved.append({
+            "tag": tag, "at_a": i1, "at_b": j1,
+            "ops_a": ops_a[i1:i2][:6], "ops_b": ops_b[j1:j2][:6],
+            "len_a": i2 - i1, "len_b": j2 - j1,
+            "bytes_a": sum(x for _, x in a[i1:i2]),
+            "bytes_b": sum(x for _, x in b[j1:j2]),
+        })
+    moved.sort(key=lambda r: -(r["len_a"] + r["len_b"]))
+    return {
+        "n_instructions_a": len(a),
+        "n_instructions_b": len(b),
+        "similarity": round(sm.ratio(), 4),
+        "first_divergence": first,
+        "context_a": ops_a[max(0, first - 2):first + 4],
+        "context_b": ops_b[max(0, first - 2):first + 4],
+        "n_diff_blocks": len(moved),
+        "moved": moved[:12],
+    }
+
+
+def buffer_assignment_stats(compiled) -> dict:
+    """Buffer-assignment sizes of a compiled executable (the memory side
+    of program quality: two byte-identical op mixes can still assign very
+    different temp/alias footprints).  Keys are bytes; absent fields on
+    older jax report as None."""
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {"unavailable": True}
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes"):
+        out[key] = getattr(ma, key, None)
+    return out
+
+
+def decode_step_compiled(arch: str, *, scan_layers: bool,
+                         reduced: bool = False):
+    """Compiled executable of one fused decode step for ``arch`` under the
+    given decode-cache layout."""
     import jax
     import jax.numpy as jnp
 
@@ -212,14 +291,26 @@ def decode_step_hlo(arch: str, *, scan_layers: bool,
     tok = jnp.ones((1, 1), jnp.int32)
     step = jax.jit(lambda p, t, c: model.decode_step(p, t, c, jnp.int32(4)),
                    donate_argnums=(2,))
-    return step.lower(params, tok, cache).compile().as_text()
+    return step.lower(params, tok, cache).compile()
+
+
+def decode_step_hlo(arch: str, *, scan_layers: bool,
+                    reduced: bool = False) -> str:
+    """Compiled (post-optimization) HLO text of one fused decode step for
+    ``arch`` under the given decode-cache layout."""
+    return decode_step_compiled(arch, scan_layers=scan_layers,
+                                reduced=reduced).as_text()
 
 
 def main(argv=None):
     """``python -m repro.launch.hlo_analysis --arch mamba2-130m``: dump
     the per-op fingerprint of the fused decode step under BOTH cache
     layouts and print the diff — the concrete first step on the layout
-    -cliff open item (``make hlo-diff``)."""
+    -cliff open item (``make hlo-diff``).  ``--schedule`` adds the
+    order-sensitive view: op-schedule divergence + buffer-assignment
+    sizes (two programs with near-identical op mixes can still schedule
+    and assign very differently — that is exactly what the cost model
+    cannot see)."""
     import argparse
     import json
 
@@ -228,18 +319,27 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true",
                     help="reduced config (fast; the cliff itself only "
                          "shows at full size)")
+    ap.add_argument("--schedule", action="store_true",
+                    help="also diff op ORDER (schedule fingerprint) and "
+                         "buffer-assignment sizes, not just op counts")
     ap.add_argument("--dump", default=None,
                     help="write the two fingerprints + diff as JSON here")
     args = ap.parse_args(argv)
 
     fps = {}
+    scheds = {}
+    bufs = {}
     for name, scan in (("scan_stacked", True), ("per_layer", False)):
-        fps[name] = op_fingerprint(
-            decode_step_hlo(args.arch, scan_layers=scan,
-                            reduced=args.reduced))
+        compiled = decode_step_compiled(args.arch, scan_layers=scan,
+                                        reduced=args.reduced)
+        text = compiled.as_text()
+        fps[name] = op_fingerprint(text)
         total = sum(v["count"] for v in fps[name].values())
         print(f"{args.arch} [{name}]: {total} instructions, "
               f"{len(fps[name])} opcodes")
+        if args.schedule:
+            scheds[name] = schedule_fingerprint(text)
+            bufs[name] = buffer_assignment_stats(compiled)
     diff = fingerprint_diff(fps["scan_stacked"], fps["per_layer"])
     print(f"\nop-mix drift (scan_stacked vs per_layer), "
           f"{len(diff)} differing opcodes:")
@@ -248,10 +348,28 @@ def main(argv=None):
     for r in diff[:20]:
         print(f"{r['op']:<24}{r['count_a']:>9}{r['count_b']:>9}"
               f"{r['bytes_a'] / 1e6:>10.2f}{r['bytes_b'] / 1e6:>10.2f}")
+
+    sdiff = None
+    if args.schedule:
+        sdiff = schedule_diff(scheds["scan_stacked"], scheds["per_layer"])
+        print(f"\nschedule diff (scan_stacked vs per_layer): "
+              f"similarity {sdiff['similarity']}, first divergence at "
+              f"instruction {sdiff['first_divergence']} "
+              f"({sdiff['context_a']} vs {sdiff['context_b']}), "
+              f"{sdiff['n_diff_blocks']} differing blocks")
+        for r in sdiff["moved"][:8]:
+            print(f"  {r['tag']:<8} @a{r['at_a']}/b{r['at_b']} "
+                  f"len {r['len_a']}->{r['len_b']} "
+                  f"bytes {r['bytes_a']}->{r['bytes_b']} "
+                  f"a={r['ops_a']} b={r['ops_b']}")
+        print("buffer assignment (bytes):")
+        for name in ("scan_stacked", "per_layer"):
+            print(f"  {name}: {bufs[name]}")
     if args.dump:
         with open(args.dump, "w") as f:
             json.dump({"arch": args.arch, "fingerprints": fps,
-                       "diff": diff}, f, indent=2)
+                       "diff": diff, "schedule_diff": sdiff,
+                       "buffer_assignment": bufs or None}, f, indent=2)
         print(f"\nwrote {args.dump}")
     return diff
 

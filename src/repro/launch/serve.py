@@ -43,6 +43,18 @@ def main(argv=None):
     ap.add_argument("--prefill-token-budget", type=int, default=0,
                     help="max prefill tokens per poll under --prefill-chunk "
                          "(0 = one chunk call per poll)")
+    ap.add_argument("--prefix-cache-mb", type=float, default=0.0,
+                    help="prefix-state cache budget in MB: admissions "
+                         "reuse chunk-boundary state snapshots of "
+                         "previously-served prompt prefixes (continuous "
+                         "engine, requires --prefill-chunk; 0 = off)")
+    ap.add_argument("--prefix-chunk", type=int, default=None,
+                    help="snapshot granularity in tokens (multiple of "
+                         "--prefill-chunk; default: one snapshot per "
+                         "prefill chunk)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared 'system prompt' tokens "
+                         "to every request (exercises the prefix cache)")
     ap.add_argument("--quant", default="none", choices=QUANT_MODES,
                     help="W8 weight-only quantization: int8 per-channel "
                          "weights through prefill, chunked prefill and "
@@ -74,14 +86,27 @@ def main(argv=None):
         seed=args.seed, policy=args.policy,
         prefill_chunk=(args.prefill_chunk
                        if args.engine == "continuous" else None),
-        prefill_token_budget=args.prefill_token_budget)
+        prefill_token_budget=args.prefill_token_budget,
+        prefix_cache_mb=(args.prefix_cache_mb
+                         if args.engine == "continuous" else 0.0),
+        prefix_chunk=args.prefix_chunk)
     engine_cls = ContinuousEngine if args.engine == "continuous" else Engine
     engine = engine_cls(model, params, scfg)
 
+    if args.prefix_cache_mb and args.engine != "continuous":
+        log.warning("--prefix-cache-mb only applies to --engine continuous")
+
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(1, cfg.vocab_size, args.shared_prefix).tolist()
     for _ in range(args.requests):
         plen = int(rng.integers(4, args.prompt_len + 1))
-        engine.submit(rng.integers(1, cfg.vocab_size, plen).tolist())
+        # Suffix lengths in whole prefill chunks keep the padded streams
+        # aligned so the shared prefix actually hits (docs/prefix_cache.md).
+        if args.shared_prefix and args.prefill_chunk:
+            plen = max(args.prefill_chunk,
+                       plen - plen % args.prefill_chunk)
+        engine.submit(shared + rng.integers(1, cfg.vocab_size,
+                                            plen).tolist())
     done = engine.run()
     for r in done[:4]:
         log.info("req %d: %d prompt toks -> %s%s", r.uid, len(r.prompt),
@@ -91,6 +116,13 @@ def main(argv=None):
     log.info("occupancy: %.2f  ttft_mean_s: %.4f  goodput_tok_s: %.1f",
              m["slot_occupancy"], m["ttft_mean_s"],
              m["goodput_tokens_per_s"])
+    pcache = getattr(engine, "prefix_cache", None)
+    if pcache is not None:
+        s = pcache.stats()
+        log.info("prefix cache: %d hits / %d misses, %d prompt tokens "
+                 "skipped, %d nodes (%.2f MB resident, %d evictions)",
+                 s["hits"], s["misses"], s["hit_tokens"], s["nodes"],
+                 s["resident_bytes"] / 2 ** 20, s["evictions"])
     log.info("compile counters: %s", engine.counters)
     return done
 

@@ -42,7 +42,12 @@ class DecodeAPI:
       whole-sequence prefill, it is not servable by the token-only
       engines);
     * ``decode_step(params, token, cache, index) -> (logits, cache)`` —
-      the O(1) cached-state step (``index``: ``()`` or ``(b,)`` int32).
+      the O(1) cached-state step (``index``: ``()`` or ``(b,)`` int32);
+    * ``export_state(cache, index, rows)`` / ``import_state(cache, index,
+      rows, snapshot)`` — host-side snapshot / restore of cache rows over
+      the same pytrees ``prefill_chunk`` carries (SSM state + conv tail,
+      RG-LRU ``h``, KV rows clipped to the ``index``-token prefix) — the
+      prefix-state cache's primitives (``docs/prefix_cache.md``).
 
     ``apply`` is a deprecation shim for the pre-split call signature
     (``model.apply(params, tokens, state=...)``); external callers should
@@ -52,6 +57,78 @@ class DecodeAPI:
     def prefill_chunk(self, params, tokens, cache, index):
         raise NotImplementedError(
             f"{type(self).__name__} does not implement prefill_chunk")
+
+    # ---------------- state snapshot / restore ----------------
+    #
+    # The inverse pair over the same pytrees ``prefill_chunk`` carries:
+    # ``export_state`` gathers cache rows out as a host-side snapshot
+    # (the prefix cache's unit of storage, ``serve/prefix_cache.py``),
+    # ``import_state`` scatters a snapshot back into cache rows.  The
+    # device work is the same jitted row gather/scatter the serve pools
+    # use (``serve/state_pool.py: make_row_ops``) — one compiled program
+    # per cache layout, row indices traced, never touching the donated
+    # arenas except to scatter into them — while the per-family
+    # clipping (``_clip_snapshot`` / ``_unclip_snapshot``) runs on the
+    # host copy, so a varying ``index`` never retraces anything.
+
+    def cache_batch_axes(self, cache):
+        """Pytree of ints matching ``cache``: every leaf's batch axis
+        (the layout rule ``state_pool.infer_batch_axes`` probes for,
+        stated structurally per family)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement cache_batch_axes")
+
+    def _clip_snapshot(self, snapshot, axes, index):
+        """Drop state past the ``index``-token prefix from a host snapshot
+        (byte honesty for length-proportional state; see the transformer
+        override).  Default: recurrent state is O(1) — keep everything."""
+        del axes, index
+        return snapshot
+
+    def _unclip_snapshot(self, snapshot, axes, index, like):
+        """Inverse of ``_clip_snapshot``: rebuild full-size rows (zeros
+        past the prefix — exactly what an in-place prefill would have
+        left there) so the row scatter stays one compiled program."""
+        del axes, index, like
+        return snapshot
+
+    def _state_row_ops(self, cache):
+        """(gather, scatter) jitted row ops for this family's cache
+        layout, built once per model instance (jit re-specializes per
+        cache shape, e.g. pool-vs-test batch sizes, on its own)."""
+        ops = getattr(self, "_state_row_ops_cache", None)
+        if ops is None:
+            from repro.serve.state_pool import make_row_ops
+            scatter, gather, _ = make_row_ops(self.cache_batch_axes(cache))
+            ops = self._state_row_ops_cache = (gather, scatter)
+        return ops
+
+    def export_state(self, cache, index, rows):
+        """Host-side snapshot of ``rows``' state after ``index`` consumed
+        tokens: a pytree shaped like ``cache`` with batch ``len(rows)``
+        and length-proportional leaves (attention KV) clipped to the
+        valid prefix (``index=None`` keeps full rows).  The gather runs
+        off the live arena — the snapshot's lifetime is independent of
+        any later donation of ``cache``."""
+        gather, _ = self._state_row_ops(cache)
+        axes = self.cache_batch_axes(cache)
+        parts = [gather(cache, jnp.int32(r)) for r in rows]
+        snap = parts[0] if len(parts) == 1 else jax.tree.map(
+            lambda ax, *ls: jnp.concatenate(ls, axis=ax), axes, *parts)
+        return self._clip_snapshot(jax.device_get(snap), axes, index)
+
+    def import_state(self, cache, index, rows, snapshot):
+        """Scatter snapshot row ``j`` into ``cache`` row ``rows[j]`` —
+        the exact inverse of :meth:`export_state` over the same pytrees.
+        ``cache`` is DONATED (like every serve-pool row op): callers must
+        rebind the return value and drop the argument."""
+        _, scatter = self._state_row_ops(cache)
+        axes = self.cache_batch_axes(cache)
+        full = self._unclip_snapshot(snapshot, axes, index, cache)
+        full = jax.tree.map(jnp.asarray, full)
+        for j, r in enumerate(rows):
+            cache = scatter(cache, full, jnp.int32(j), jnp.int32(r))
+        return cache
 
     def decode_view(self, params):
         """Decode-optimized *view* of ``params``: scan-stacked layer

@@ -163,6 +163,13 @@ class MambaLM(base.DecodeAPI):
         # cannot be donated into the jitted decode program.
         return [jax.tree.map(jnp.copy, one) for _ in range(cfg.n_layers)]
 
+    def cache_batch_axes(self, cache):
+        # Scan-stacked states are (n_layers, b, ...); per-layer lists are
+        # (b, ...).  Either way the snapshot is O(1) in sequence length —
+        # the whole point of prefix-state caching for SSMs.
+        return jax.tree.map(lambda a: 1 if self.cfg.scan_layers else 0,
+                            cache)
+
     def prefill(self, params, batch, cache) -> Tuple[Array, Any]:
         x = layers.embed(params["embed"], batch["tokens"])
         x, new_states = self._trunk(params, x, cache)

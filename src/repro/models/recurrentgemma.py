@@ -249,6 +249,17 @@ class RecurrentGemma(base.DecodeAPI):
         return [self._layer_cache(kind, batch, max_seq, dtype)
                 for kind in self.layer_kinds]
 
+    def cache_batch_axes(self, cache):
+        # Group-stacked serving caches are {"groups": {pos: (n_groups, b,
+        # ...)}, "tail": [(b, ...)]}; per-layer lists are (b, ...).  The
+        # attention entries are ring caches of size == window, so rgemma
+        # snapshots are already window-clipped at init — no seq clipping
+        # needed (RG-LRU ``h`` + conv tail are O(1) anyway).
+        if isinstance(cache, dict):
+            return {"groups": jax.tree.map(lambda a: 1, cache["groups"]),
+                    "tail": jax.tree.map(lambda a: 0, cache["tail"])}
+        return jax.tree.map(lambda a: 0, cache)
+
     def prefill(self, params, batch, cache) -> Tuple[Array, Any]:
         x = self._embed(params, batch["tokens"])
         positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]

@@ -200,6 +200,43 @@ class TransformerLM(base.DecodeAPI):
         return [attention.init_cache(cfg, batch, max_seq, dtype)
                 for _ in range(cfg.n_layers)]
 
+    def cache_batch_axes(self, cache):
+        # KVCache leaves: (n_layers, b, T, nkv, hd) scan-stacked, (b, T,
+        # nkv, hd) per-layer — batch axis 1 or 0, seq axis right after it.
+        return jax.tree.map(lambda a: 1 if self.cfg.scan_layers else 0,
+                            cache)
+
+    def _clip_snapshot(self, snapshot, axes, index):
+        """Keep only the valid KV prefix: a transformer's cached state is
+        length-proportional, so honest snapshot byte accounting clips the
+        seq axis to ``snapshot_keep_len`` (ring caches — sliding-window
+        layers with ``T == window`` — are kept whole: their occupancy is
+        position-dependent).  The dropped region is all zeros by the
+        chunked-prefill write discipline, so ``_unclip_snapshot``'s
+        zero-pad restores it exactly."""
+        if index is None:
+            return snapshot
+        w = self.cfg.sliding_window
+
+        def leaf(a, ax):
+            seq = ax + 1
+            keep = attention.snapshot_keep_len(a.shape[seq], index, w)
+            return a[(slice(None),) * seq + (slice(0, keep),)]
+        return jax.tree.map(leaf, snapshot, axes)
+
+    def _unclip_snapshot(self, snapshot, axes, index, like):
+        del index
+
+        def leaf(s, c, ax):
+            seq = ax + 1
+            pad = c.shape[seq] - s.shape[seq]
+            if not pad:
+                return s
+            widths = [(0, 0)] * s.ndim
+            widths[seq] = (0, pad)
+            return np.pad(np.asarray(s), widths)
+        return jax.tree.map(leaf, snapshot, like, axes)
+
     def prefill(self, params, batch, cache) -> Tuple[Array, Any]:
         x, positions, _ = self._embed_inputs(params, batch)
         x, new_caches, _ = self._trunk(params, x, positions, cache,

@@ -127,6 +127,14 @@ class Whisper(base.DecodeAPI):
         return loss, metrics
 
     # ---------------- serving ----------------
+    def cache_batch_axes(self, cache):
+        # Per-layer list of {"self", "cross"} KVCaches, batch axis 0.
+        # (Whisper is not servable by the token-only engines, but the
+        # snapshot API keeps the DecodeAPI surface uniform: the cross
+        # cache is the audio-conditioned state a future multimodal serve
+        # path would snapshot.)
+        return jax.tree.map(lambda a: 0, cache)
+
     def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
         cfg = self.cfg
         caches = []

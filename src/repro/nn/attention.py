@@ -402,3 +402,23 @@ def apply(params: dict, cfg, x: Array, *, positions: Array,
 def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16) -> KVCache:
     shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def snapshot_keep_len(T: int, index: Optional[int],
+                      window: Optional[int]) -> int:
+    """Valid KV length of a prefix-state snapshot after ``index`` consumed
+    tokens — the byte-accounting rule for cached attention state
+    (``serve/prefix_cache.py``):
+
+    * **ring** caches (``T == window``, sliding-window layers) hold at most
+      the last ``window`` positions whatever ``index`` is, and slot
+      occupancy is position-dependent (``p % T``), so the whole ring is
+      the snapshot — already window-clipped by construction;
+    * **linear** caches are valid on ``[0, index)`` only; everything past
+      the prefix is zero and need not be stored.
+
+    ``index=None`` means "unknown / keep everything" (full-row clones).
+    """
+    if window is not None and T == window:
+        return T
+    return T if index is None else max(0, min(int(index), T))

@@ -11,10 +11,15 @@ Building blocks: :class:`Scheduler` (admission / priorities / deadlines),
 :class:`ServeMetrics` (TTFT / occupancy / goodput), ``sampling``
 (vectorized Gumbel-max).  The continuous engine optionally admits long
 prompts chunk-by-chunk (``ServeConfig.prefill_chunk``), interleaving one
-prefill chunk with each decode step.  See ``docs/serving.md``.
+prefill chunk with each decode step, and — with
+``ServeConfig.prefix_cache_mb`` — reuses recurrent state across requests
+through a radix cache of chunk-boundary snapshots
+(:class:`PrefixCache`).  See ``docs/serving.md`` and
+``docs/prefix_cache.md``.
 """
 from repro.serve.continuous import ContinuousEngine  # noqa: F401
 from repro.serve.engine import Engine, ServeConfig  # noqa: F401
 from repro.serve.metrics import ServeMetrics  # noqa: F401
+from repro.serve.prefix_cache import PrefixCache  # noqa: F401
 from repro.serve.scheduler import Request, Scheduler, bucket_for  # noqa: F401
 from repro.serve.state_pool import StatePool  # noqa: F401

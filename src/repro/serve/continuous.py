@@ -37,6 +37,16 @@ interleaved with the decode step.  That adds ONE more compiled program —
 the compile-once discipline still holds (0 decode recompiles after
 warmup); ``models/base.py: DecodeAPI.prefill_chunk`` guarantees the result
 is numerically the whole-sequence prefill.
+
+Prefix-state cache (``ServeConfig.prefix_cache_mb``): on top of chunked
+prefill, admission consults a radix cache of chunk-boundary state
+snapshots (``serve/prefix_cache.py``): the longest cached prefix of the
+staged (padded) stream seeds the staging row — the snapshot scatters into
+the row via the same jitted row ops as slot turnover — and chunking
+resumes from the matched offset, inserting snapshots of new boundaries on
+the way.  Still zero extra compiled programs in the steady state: the
+chunk program is offset-vectorized already, and snapshot gather/scatter
+are the pool's compile-once row ops.
 """
 from __future__ import annotations
 
@@ -49,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.engine import EngineBase, ServeConfig
+from repro.serve.prefix_cache import PrefixCache, chunk_key
 from repro.serve.scheduler import Request, bucket_for, chunk_span
 from repro.serve.state_pool import (StatePool, format_compile_count,
                                     jit_cache_size)
@@ -97,6 +108,29 @@ class ContinuousEngine(EngineBase):
             self._pref_req: List[Optional[Request]] = [None] * self.slots
             self._pref_toks: List[Optional[np.ndarray]] = [None] * self.slots
             self._pref_off = np.zeros(self.slots, np.int32)
+        self._pcache: Optional[PrefixCache] = None
+        if cfg.prefix_cache_mb:
+            if not self.chunk:
+                raise ValueError(
+                    "prefix_cache_mb requires chunked prefill: snapshots "
+                    "live at chunk boundaries (set prefill_chunk)")
+            grain = cfg.prefix_chunk or self.chunk
+            if grain % self.chunk:
+                raise ValueError(
+                    f"prefix_chunk ({grain}) must be a multiple of "
+                    f"prefill_chunk ({self.chunk}): snapshots are taken "
+                    "between chunk program calls")
+            self._pcache = PrefixCache(int(cfg.prefix_cache_mb * 2 ** 20),
+                                       grain)
+            # Per-slot trie walk state while staging: the chunk key of the
+            # padded stream, the deepest visited node (the cursor new
+            # snapshots attach under), the pins released when the request
+            # leaves staging, and an insert gate that closes when the
+            # byte budget refuses a node (children would dangle).
+            self._pref_key: List[Optional[list]] = [None] * self.slots
+            self._pref_node: List[Optional[object]] = [None] * self.slots
+            self._pref_pins: List[list] = [[] for _ in range(self.slots)]
+            self._pref_insert_ok = [True] * self.slots
 
     def _buckets(self):
         return self.buckets
@@ -118,7 +152,14 @@ class ContinuousEngine(EngineBase):
                 jit_cache_size(self._chunk_step))
             out.update({f"ppool_{k}_compiles": v
                         for k, v in self._ppool.compile_counts().items()})
+        if self._pcache is not None:
+            out["prefix_cache"] = self._pcache.stats()
         return out
+
+    @property
+    def prefix_cache(self) -> Optional[PrefixCache]:
+        """The prefix-state cache (None unless ``prefix_cache_mb`` set)."""
+        return self._pcache
 
     # ------------------------------------------------------------------
     def _free_slots(self) -> List[int]:
@@ -224,16 +265,76 @@ class ContinuousEngine(EngineBase):
             toks = np.full(span, cfg.pad_id, np.int32)
             toks[span - len(p):] = p
             req.bucket = span
-            # The row's previous tenant left state behind; the chunk
-            # program accumulates into the row, so it must start from zero.
-            self._ppool.reset_rows([slot])
+            off = 0
+            if self._pcache is not None:
+                off = self._prefix_match(slot, toks, span)
+            if not off:
+                # The row's previous tenant left state behind; the chunk
+                # program accumulates into the row, so it must start from
+                # zero (a prefix-cache restore overwrites the whole row
+                # instead — reset would be a wasted scatter).
+                self._ppool.reset_rows([slot])
             self._pref_req[slot] = req
             self._pref_toks[slot] = toks
-            self._pref_off[slot] = 0
+            self._pref_off[slot] = off
             admitted += 1
         for _ in range(len(self.scheduler.expired) - n_shed0):
             self.metrics.record_shed()
         return admitted
+
+    # -- prefix-state cache -------------------------------------------------
+    def _prefix_match(self, slot: int, toks: np.ndarray, span: int) -> int:
+        """Longest-prefix lookup for a staged (padded) stream: restore the
+        matched snapshot into the staging row and return the offset
+        chunking resumes from (0 = miss).  The match is capped so at
+        least one prefill chunk always runs — the final chunk's logits
+        produce the request's first token."""
+        cache = self._pcache
+        key = chunk_key(toks, cache.chunk)
+        cap = max(0, (span - self.chunk) // cache.chunk)
+        node, depth = cache.match(key, max_depth=cap)
+        off = depth * cache.chunk
+        self.metrics.record_prefix_lookup(off)
+        self._pref_key[slot] = key
+        self._pref_node[slot] = node
+        self._pref_pins[slot] = [node] if node is not None else []
+        self._pref_insert_ok[slot] = True
+        if node is not None:
+            self._ppool.restore_row(slot, node.snapshot, index=off)
+        return off
+
+    def _prefix_insert(self, row: int) -> None:
+        """After a chunk call: if the row crossed a snapshot boundary the
+        cache hasn't seen, clone the staging row (jitted gather + host
+        copy, off the donated arena) and attach it under the row's trie
+        cursor.  A budget refusal closes the gate — deeper nodes would
+        have no parent path."""
+        cache = self._pcache
+        off = int(self._pref_off[row])
+        if off % cache.chunk or not self._pref_insert_ok[row]:
+            return
+        depth = off // cache.chunk
+        key = self._pref_key[row]
+        if depth > len(key):
+            return
+        nxt = cache.child(self._pref_node[row], key[depth - 1])
+        if nxt is None:
+            snap = self._ppool.clone_row(row, index=off)
+            nxt = cache.insert(self._pref_node[row], key[depth - 1], snap)
+            if nxt is None:
+                self._pref_insert_ok[row] = False
+                return
+        self._pref_node[row] = nxt
+        self._pref_pins[row].append(nxt)
+
+    def _prefix_release(self, row: int) -> None:
+        """Staging is over (first token sampled or request finished):
+        unpin the row's trie path — its nodes become evictable again."""
+        for node in self._pref_pins[row]:
+            self._pcache.release(node)
+        self._pref_pins[row] = []
+        self._pref_node[row] = None
+        self._pref_key[row] = None
 
     def _prefill_step(self) -> int:
         """Advance every prefilling slot by one chunk (one compiled call at
@@ -256,7 +357,11 @@ class ContinuousEngine(EngineBase):
         done_rows = []
         for i in rows:
             self._pref_off[i] += C
+            if self._pcache is not None:
+                self._prefix_insert(i)
             if self._pref_off[i] >= len(self._pref_toks[i]):
+                if self._pcache is not None:
+                    self._prefix_release(i)
                 done_rows.append(i)
         if done_rows:
             first = self._sample(logits)

@@ -60,6 +60,16 @@ class ServeConfig:
     # per poll (the lowest decode-latency jitter); larger budgets drain
     # long prompts faster at the cost of stalling decode for longer.
     prefill_token_budget: int = 0
+    # -- prefix-state cache (continuous engine, needs prefill_chunk) --------
+    # Host-byte budget (MB) for cross-request reuse of chunk-boundary
+    # state snapshots: admissions skip past any cached prompt prefix
+    # (``serve/prefix_cache.py``; docs/prefix_cache.md).  0 disables.
+    prefix_cache_mb: float = 0.0
+    # Snapshot granularity in tokens — must be a multiple of
+    # prefill_chunk; None means one snapshot per prefill chunk.  Coarser
+    # grains store fewer, larger entries (less snapshot overhead, less
+    # sharing resolution).
+    prefix_chunk: Optional[int] = None
 
 
 class EngineBase:

@@ -51,6 +51,9 @@ class ServeMetrics:
         self.prefill_chunks = 0
         self.prefill_tokens = 0
         self.prefill_time_s = 0.0
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_hit_tokens = 0
 
     # -- event hooks -------------------------------------------------------
     def record_arrival(self) -> None:
@@ -86,6 +89,15 @@ class ServeMetrics:
         self.prefill_tokens += tokens
         self.prefill_time_s += dt_s
 
+    def record_prefix_lookup(self, matched_tokens: int) -> None:
+        """One prefix-cache admission lookup: ``matched_tokens`` prompt
+        tokens were skipped by restoring a cached snapshot (0 = miss)."""
+        if matched_tokens > 0:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += matched_tokens
+        else:
+            self.prefix_misses += 1
+
     # -- rollup ------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
         """Throughput figures use recorded wall time; when the caller never
@@ -107,6 +119,9 @@ class ServeMetrics:
             "prefill_chunks": self.prefill_chunks,
             "prefill_tokens": self.prefill_tokens,
             "prefill_time_s": self.prefill_time_s,
+            "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
             "latency_mean_s": (sum(self.latency_s) / len(self.latency_s)
                                if self.latency_s else 0.0),
             "token_latency_s": (self.decode_time_s / self.decode_steps

@@ -9,6 +9,9 @@ per-layer mixtures for Griffin).  The pool allocates that pytree once for
 * ``insert_rows``  — scatter freshly-prefilled rows into live slots,
 * ``extract_rows`` — gather slot rows out (debug / migration),
 * ``reset_rows``   — zero slot rows,
+* ``clone_row`` / ``restore_row`` — host-side snapshot of one row and its
+  inverse (the prefix cache's primitives, via ``model.export_state`` /
+  ``model.import_state``),
 
 each compiled exactly once (slot indices are traced scalars), so slot
 turnover never recompiles anything.
@@ -48,6 +51,47 @@ def infer_batch_axes(model, max_seq: int, dtype) -> Any:
         return diffs[0]
 
     return jax.tree.map(one, a, b)
+
+
+def make_row_ops(axes):
+    """Jitted row-wise primitives over a cache pytree with per-leaf batch
+    axes ``axes``: ``(insert, extract, reset)``.
+
+    ``insert(dst, src, src_row, slot)`` scatters one ``src`` row into
+    ``dst`` (``dst`` is DONATED — the arena updates in place);
+    ``extract(src, slot)`` gathers one row as a fresh batch-1 pytree (no
+    donation — safe to call between donated-arena updates); ``reset(dst,
+    slot)`` zeroes one row (``dst`` donated).  Row indices are traced
+    scalars, so each op compiles exactly once per cache layout.
+
+    Shared by :class:`StatePool` and the model-level snapshot API
+    (``models/base.py: DecodeAPI.export_state/import_state``) so every
+    row move in the serve path — slot turnover, staging, prefix-cache
+    snapshot/restore — is the same compiled gather/scatter."""
+
+    def insert(dst, src, src_row, slot):
+        def leaf(d, s, ax):
+            row = jax.lax.dynamic_slice_in_dim(s, src_row, 1, axis=ax)
+            return jax.lax.dynamic_update_slice_in_dim(
+                d, row.astype(d.dtype), slot, axis=ax)
+        return jax.tree.map(leaf, dst, src, axes)
+
+    def extract(src, slot):
+        return jax.tree.map(
+            lambda s, ax: jax.lax.dynamic_slice_in_dim(s, slot, 1, axis=ax),
+            src, axes)
+
+    def reset(dst, slot):
+        def leaf(d, ax):
+            shape = list(d.shape)
+            shape[ax] = 1
+            return jax.lax.dynamic_update_slice_in_dim(
+                d, jnp.zeros(shape, d.dtype), slot, axis=ax)
+        return jax.tree.map(leaf, dst, axes)
+
+    return (jax.jit(insert, donate_argnums=(0,)),
+            jax.jit(extract),
+            jax.jit(reset, donate_argnums=(0,)))
 
 
 def jit_cache_size(fn) -> int:
@@ -90,39 +134,24 @@ class StatePool:
     @property
     def batch_axes(self):
         if self._axes is None:
-            self._axes = infer_batch_axes(self.model, self.max_seq,
-                                          self.dtype)
+            # One source of truth with the model-level snapshot API: the
+            # family's declared layout rule drives BOTH the pool row ops
+            # and export_state/import_state — a disagreement would mean
+            # clone/restore addressing different rows than insert/reset
+            # on the same donated arena.  Probing stays as the fallback
+            # for models that predate cache_batch_axes.
+            try:
+                self._axes = self.model.cache_batch_axes(self.cache)
+            except NotImplementedError:
+                self._axes = infer_batch_axes(self.model, self.max_seq,
+                                              self.dtype)
         return self._axes
 
     def _build_ops(self):
-        axes = self.batch_axes
-
-        def insert(dst, src, src_row, slot):
-            def leaf(d, s, ax):
-                row = jax.lax.dynamic_slice_in_dim(s, src_row, 1, axis=ax)
-                return jax.lax.dynamic_update_slice_in_dim(
-                    d, row.astype(d.dtype), slot, axis=ax)
-            return jax.tree.map(leaf, dst, src, axes)
-
-        def extract(src, slot):
-            return jax.tree.map(
-                lambda s, ax: jax.lax.dynamic_slice_in_dim(s, slot, 1,
-                                                           axis=ax),
-                src, axes)
-
-        def reset(dst, slot):
-            def leaf(d, ax):
-                shape = list(d.shape)
-                shape[ax] = 1
-                return jax.lax.dynamic_update_slice_in_dim(
-                    d, jnp.zeros(shape, d.dtype), slot, axis=ax)
-            return jax.tree.map(leaf, dst, axes)
-
-        # The live pool pytree is DONATED into the row ops: slot turnover
+        # The live pool pytree is DONATED into insert/reset: slot turnover
         # updates the arena in place instead of copying every leaf.
-        self._insert = jax.jit(insert, donate_argnums=(0,))
-        self._extract = jax.jit(extract)
-        self._reset = jax.jit(reset, donate_argnums=(0,))
+        self._insert, self._extract, self._reset = make_row_ops(
+            self.batch_axes)
 
     # ------------------------------------------------------------------
     def insert_rows(self, src_cache, src_rows: Sequence[int],
@@ -146,6 +175,27 @@ class StatePool:
         return jax.tree.map(
             lambda ax, *ls: jnp.concatenate(ls, axis=ax),
             self.batch_axes, *rows)
+
+    def clone_row(self, slot: int, index=None):
+        """Host-side snapshot of one slot row — the jitted row gather
+        (never the donated arena itself) followed by a device->host copy,
+        so the snapshot's lifetime is decoupled from the pool: the arena
+        can keep being donated into decode/chunk programs while the
+        snapshot sits in a prefix cache or migrates to another pool.
+
+        ``index`` — tokens the row has consumed — lets families clip
+        length-proportional state (attention KV rows) to the valid prefix;
+        ``None`` keeps full rows.  This is the prefix cache's insertion
+        primitive (``serve/prefix_cache.py``) and the debug/migration
+        snapshot; delegates to ``model.export_state`` so the pool and the
+        model-level snapshot API stay one code path."""
+        return self.model.export_state(self.cache, index, [slot])
+
+    def restore_row(self, slot: int, snapshot, index=None) -> None:
+        """Inverse of :meth:`clone_row`: scatter a host snapshot back into
+        one slot row (jitted row scatter, arena donated in place)."""
+        self.cache = self.model.import_state(self.cache, index, [slot],
+                                             snapshot)
 
     def reset_rows(self, slots: Sequence[int]) -> None:
         """Zero slot rows (freed slots carry no state into their next

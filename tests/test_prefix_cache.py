@@ -1,0 +1,365 @@
+"""Prefix-state radix cache: trie semantics (longest-prefix match, LRU
+eviction under a byte budget, refcount pinning), model-level snapshot
+export/import parity (incl. sliding-window KV clipping), and engine-level
+greedy identity with the cache on vs off for every decode family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, build_model
+from repro.nn import attention
+from repro.nn.params import init_params
+from repro.serve import ContinuousEngine, PrefixCache, ServeConfig
+from repro.serve.prefix_cache import chunk_key, snapshot_nbytes
+
+V = 64
+
+CFGS = {
+    "mamba2": ModelConfig(name="mamba2", family="mamba2", vocab_size=V,
+                          d_model=32, n_layers=2, d_state=8, ssm_head_dim=8,
+                          chunk_size=8, param_dtype="float32"),
+    "mamba1": ModelConfig(name="mamba1", family="mamba", vocab_size=V,
+                          d_model=32, n_layers=2, d_state=8,
+                          param_dtype="float32"),
+    "dense": ModelConfig(name="dense", family="transformer", vocab_size=V,
+                         d_model=32, n_layers=2, n_heads=4, n_kv_heads=2,
+                         head_dim=8, d_ff=64, param_dtype="float32"),
+    "rgemma": ModelConfig(name="rgemma", family="recurrentgemma",
+                          vocab_size=V, d_model=32, n_layers=3, n_heads=4,
+                          n_kv_heads=1, head_dim=8, d_ff=96,
+                          mlp_type="geglu", lru_width=32, sliding_window=8,
+                          scan_layers=False, param_dtype="float32"),
+}
+FAMILIES = list(CFGS)
+
+
+def _model_params(name):
+    cfg = CFGS[name]
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    return model, params
+
+
+def _snap(nbytes):
+    """Fake snapshot pytree of a known host size."""
+    return {"s": np.zeros(nbytes, np.uint8)}
+
+
+# ---------------------------------------------------------------------------
+# trie semantics
+# ---------------------------------------------------------------------------
+def test_chunk_key_splits_full_chunks_only():
+    assert chunk_key([1, 2, 3, 4, 5, 6, 7], 3) == [(1, 2, 3), (4, 5, 6)]
+    assert chunk_key([1, 2], 3) == []
+    assert chunk_key(np.arange(4), 2) == [(0, 1), (2, 3)]
+
+
+def test_trie_longest_prefix_match_and_depth_cap():
+    cache = PrefixCache(1 << 20, chunk=2)
+    key = chunk_key([1, 2, 3, 4, 5, 6], 2)
+    node = None
+    for i, c in enumerate(key):
+        node = cache.insert(node, c, _snap(8))
+        assert node is not None and node.depth == i + 1
+    # full-depth match
+    got, depth = cache.match(key, pin=False)
+    assert depth == 3 and got.depth == 3
+    # diverging suffix matches the shared prefix only
+    got, depth = cache.match(chunk_key([1, 2, 3, 4, 9, 9], 2), pin=False)
+    assert depth == 2 and got.depth == 2
+    # depth cap (engine: always leave one chunk to recompute)
+    got, depth = cache.match(key, max_depth=1, pin=False)
+    assert depth == 1
+    # unrelated stream: miss
+    got, depth = cache.match(chunk_key([9, 9], 2), pin=False)
+    assert got is None and depth == 0
+    s = cache.stats()
+    assert s["hits"] == 3 and s["misses"] == 1
+    assert s["hit_tokens"] == (3 + 2 + 1) * 2
+
+
+def test_trie_existing_child_insert_is_a_no_op():
+    cache = PrefixCache(1 << 20, chunk=2)
+    a = cache.insert(None, (1, 2), _snap(8), pin=False)
+    b = cache.insert(None, (1, 2), _snap(8), pin=False)
+    assert a is b and cache.stats()["inserts"] == 1
+    assert cache.resident_bytes == snapshot_nbytes(_snap(8))
+
+
+def test_lru_eviction_is_leaf_only_and_budget_bounded():
+    cache = PrefixCache(100, chunk=1)
+    a = cache.insert(None, (1,), _snap(40), pin=False)
+    cache.insert(a, (2,), _snap(40), pin=False)
+    # Interior node `a` is older but has a child: the leaf goes first.
+    c = cache.insert(None, (3,), _snap(40), pin=False)
+    assert c is not None
+    assert cache.resident_bytes <= 100
+    s = cache.stats()
+    assert s["evictions"] == 1
+    assert (1,) in cache.root.children          # interior survived
+    assert not cache.root.children[(1,)].children  # its leaf was evicted
+    # a node larger than the whole budget is refused outright
+    assert cache.insert(None, (4,), _snap(200), pin=False) is None
+    assert cache.stats()["inserts_refused"] == 1
+
+
+def test_lru_order_evicts_least_recently_touched():
+    cache = PrefixCache(100, chunk=1)
+    cache.insert(None, (1,), _snap(40), pin=False)
+    cache.insert(None, (2,), _snap(40), pin=False)
+    cache.match(chunk_key([1], 1), pin=False)    # touch (1,): (2,) is LRU
+    cache.insert(None, (3,), _snap(40), pin=False)
+    assert set(cache.root.children) == {(1,), (3,)}
+
+
+def test_refcount_pins_survive_eviction_pressure():
+    cache = PrefixCache(100, chunk=1)
+    pinned = cache.insert(None, (1,), _snap(60))      # pin=True
+    assert pinned.refs == 1
+    # Budget pressure cannot evict the pinned leaf: the insert is refused.
+    assert cache.insert(None, (2,), _snap(60), pin=False) is None
+    assert cache.stats()["inserts_refused"] == 1
+    # Matching pins again (two in-flight stagings share the node).
+    got, depth = cache.match(chunk_key([1], 1))
+    assert got is pinned and pinned.refs == 2
+    cache.release(pinned)
+    cache.release(pinned)
+    # Fully released: the same insert now evicts it and succeeds.
+    assert cache.insert(None, (2,), _snap(60), pin=False) is not None
+    assert set(cache.root.children) == {(2,)}
+    assert cache.resident_bytes <= 100
+
+
+def test_interleaved_stagings_share_and_extend_paths():
+    """Two concurrent stagings: B matches A's partial path mid-insert,
+    extends it divergently, and all pins release cleanly."""
+    cache = PrefixCache(1 << 20, chunk=2)
+    a_key = chunk_key([1, 2, 3, 4, 5, 6], 2)
+    b_key = chunk_key([1, 2, 3, 4, 7, 8], 2)
+    a_pins = []
+    node = cache.insert(None, a_key[0], _snap(8))
+    a_pins.append(node)
+    b_node, b_depth = cache.match(b_key)          # B admits mid-staging
+    b_pins = [b_node]
+    assert b_depth == 1 and b_node is node
+    node = cache.insert(node, a_key[1], _snap(8))
+    a_pins.append(node)
+    got = cache.child(b_node, b_key[1])           # B finds A's new node
+    assert got is node
+    b_pins.append(got)
+    b_tail = cache.insert(got, b_key[2], _snap(8))
+    a_tail = cache.insert(node, a_key[2], _snap(8))
+    a_pins.append(a_tail)
+    b_pins.append(b_tail)
+    assert a_tail is not b_tail and len(cache) == 4
+    for n in a_pins + b_pins:
+        cache.release(n)
+    assert all(n.refs == 0 for n in a_pins + b_pins)
+
+
+# ---------------------------------------------------------------------------
+# model-level snapshot parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", FAMILIES)
+def test_export_import_roundtrip_mid_prefill(family):
+    """export_state at a chunk boundary, import into a fresh cache, finish
+    the prompt both ways: logits and caches must be bit-identical."""
+    model, params = _model_params(family)
+    rng = np.random.default_rng(1)
+    L, B, max_seq, cut = 12, 2, 24, 8
+    toks = jnp.asarray(rng.integers(1, V, (B, L)), jnp.int32)
+
+    cache = model.init_cache(B, max_seq, jnp.float32)
+    _, cache = model.prefill_chunk(params, toks[:, :cut], cache,
+                                   jnp.int32(0))
+    snap = model.export_state(cache, cut, [0, 1])
+
+    restored = model.import_state(model.init_cache(B, max_seq, jnp.float32),
+                                  cut, [0, 1], snap)
+    ref, cache = model.prefill_chunk(params, toks[:, cut:], cache,
+                                     jnp.int32(cut))
+    got, restored = model.prefill_chunk(params, toks[:, cut:], restored,
+                                        jnp.int32(cut))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), restored, cache)
+
+
+def test_sliding_window_kv_snapshot_parity():
+    """Ring caches (T == window) snapshot the whole ring — restore must
+    reproduce decode exactly even when the prefix exceeds the window."""
+    cfg = CFGS["dense"].replace(sliding_window=8)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    rng = np.random.default_rng(2)
+    L, max_seq, cut = 16, 32, 12           # cut > window: ring wrapped
+    toks = jnp.asarray(rng.integers(1, V, (1, L)), jnp.int32)
+    cache = model.init_cache(1, max_seq, jnp.float32)
+    assert cache.k.shape[2] == 8           # ring: T == window
+    _, cache = model.prefill_chunk(params, toks[:, :cut], cache,
+                                   jnp.int32(0))
+    snap = model.export_state(cache, cut, [0])
+    # ring leaves are kept whole (window-clipped by construction)
+    assert jax.tree.leaves(snap)[0].shape[2] == 8
+    restored = model.import_state(model.init_cache(1, max_seq, jnp.float32),
+                                  cut, [0], snap)
+    ref, cache = model.prefill_chunk(params, toks[:, cut:], cache,
+                                     jnp.int32(cut))
+    got, restored = model.prefill_chunk(params, toks[:, cut:], restored,
+                                        jnp.int32(cut))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    a = _greedy(model, params, ref, cache, L)
+    b = _greedy(model, params, got, restored, L)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_snapshot_kv_clipped_to_prefix():
+    """Linear KV snapshots store only the valid prefix rows — the honest
+    byte accounting the cache budget is charged with."""
+    model, params = _model_params("dense")
+    rng = np.random.default_rng(3)
+    max_seq, cut = 24, 8
+    toks = jnp.asarray(rng.integers(1, V, (1, cut)), jnp.int32)
+    cache = model.init_cache(1, max_seq, jnp.float32)
+    _, cache = model.prefill_chunk(params, toks, cache, jnp.int32(0))
+    snap = model.export_state(cache, cut, [0])
+    for leaf in jax.tree.leaves(snap):
+        assert leaf.shape[2] == cut        # (n_layers, 1, cut, nkv, hd)
+    full = model.export_state(cache, None, [0])
+    assert snapshot_nbytes(snap) * 3 == snapshot_nbytes(full)
+
+
+def test_snapshot_keep_len_rule():
+    assert attention.snapshot_keep_len(8, 100, 8) == 8     # ring: whole
+    assert attention.snapshot_keep_len(24, 8, None) == 8   # linear: clip
+    assert attention.snapshot_keep_len(24, 8, 16) == 8     # linear, window
+    assert attention.snapshot_keep_len(24, None, None) == 24
+    assert attention.snapshot_keep_len(24, 100, None) == 24
+
+
+def _greedy(model, params, logits, cache, start, steps=4):
+    toks = [np.asarray(jnp.argmax(logits, -1), np.int32)]
+    for t in range(steps):
+        tok = jnp.asarray(toks[-1][:, None], jnp.int32)
+        logits, cache = model.decode_step(params, tok, cache,
+                                          jnp.int32(start + t))
+        toks.append(np.asarray(jnp.argmax(logits, -1), np.int32))
+    return np.stack(toks)
+
+
+# ---------------------------------------------------------------------------
+# engine-level identity
+# ---------------------------------------------------------------------------
+def _shared_prefix_prompts(rng, n, sys_len=24, turn_chunks=(1, 2)):
+    """Shared system prompt + per-request turns whose lengths are chunk
+    multiples (the alignment rule: padded streams must share chunks)."""
+    sys_p = rng.integers(1, V, sys_len).tolist()
+    return [sys_p + rng.integers(1, V, 8 * int(rng.choice(turn_chunks)))
+            .tolist() for _ in range(n)]
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_engine_greedy_identity_cache_on_off(family):
+    """Byte-identical greedy outputs with the prefix cache on vs off, with
+    real cross-request hits and zero decode recompiles."""
+    model, params = _model_params(family)
+    rng = np.random.default_rng(7)
+    prompts = _shared_prefix_prompts(rng, 6)
+    budgets = [3, 5, 2, 6, 4, 3]
+
+    def run(mb):
+        eng = ContinuousEngine(model, params, ServeConfig(
+            max_batch=2, prefill_buckets=(48,), max_new_tokens=6,
+            prefill_chunk=8, prefix_cache_mb=mb))
+        for p, m in zip(prompts, budgets):
+            eng.submit(p, m)
+        return {r.uid: r.out_tokens for r in eng.run()}, eng
+
+    off_out, _ = run(0.0)
+    on_out, eng = run(8.0)
+    assert on_out == off_out
+    assert eng.prefix_cache.stats()["hits"] >= 1
+    assert eng.counters["decode_compiles"] == 1
+    assert eng.counters["prefill_chunk_compiles"] == 1
+    # every pin was released when its request left staging
+    assert all(n.refs == 0 for n in eng.prefix_cache._nodes)
+
+
+def test_engine_repeated_prompt_skips_all_but_last_chunk():
+    model, params = _model_params("mamba2")
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(1, V, 32).tolist()
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=1, prefill_buckets=(32,), max_new_tokens=3,
+        prefill_chunk=8, prefix_cache_mb=8.0))
+    a = eng.submit(prompt)
+    b = eng.submit(prompt)
+    done = {r.uid: r.out_tokens for r in eng.run()}
+    assert done[a] == done[b]
+    # second admission matched span - chunk tokens (the cap leaves one
+    # chunk so the final logits exist to sample the first token from)
+    assert eng.metrics.prefix_hit_tokens == 32 - 8
+    assert eng.metrics.summary()["prefill_tokens"] == 32 + 8
+
+
+def test_engine_eviction_under_pressure_never_corrupts_live_slots():
+    """A budget that forces constant eviction mid-trace changes nothing
+    about the outputs — restores copy out of the cache, and pinned paths
+    refuse eviction rather than dangle."""
+    model, params = _model_params("dense")
+    rng = np.random.default_rng(11)
+    prompts = _shared_prefix_prompts(rng, 8, sys_len=24)
+    budgets = [3, 4, 2, 5, 3, 4, 2, 3]
+
+    def run(mb):
+        eng = ContinuousEngine(model, params, ServeConfig(
+            max_batch=3, prefill_buckets=(48,), max_new_tokens=5,
+            prefill_chunk=8, prefix_cache_mb=mb))
+        for p, m in zip(prompts, budgets):
+            eng.submit(p, m)
+        return {r.uid: r.out_tokens for r in eng.run()}, eng
+
+    off_out, _ = run(0.0)
+    # ~3 dense snapshots of this config fit in 64 KB: hot churn
+    on_out, eng = run(0.0625)
+    assert on_out == off_out
+    s = eng.prefix_cache.stats()
+    assert s["evictions"] >= 1 or s["inserts_refused"] >= 1
+    assert s["peak_bytes"] <= eng.prefix_cache.capacity_bytes
+    assert all(n.refs == 0 for n in eng.prefix_cache._nodes)
+
+
+def test_engine_prefix_cache_requires_chunked_prefill():
+    model, params = _model_params("mamba2")
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ContinuousEngine(model, params, ServeConfig(prefix_cache_mb=1.0))
+    with pytest.raises(ValueError, match="multiple"):
+        ContinuousEngine(model, params, ServeConfig(
+            prefill_chunk=8, prefix_cache_mb=1.0, prefix_chunk=12))
+
+
+def test_engine_coarse_prefix_chunk_grain():
+    """prefix_chunk = 2x prefill_chunk: snapshots every other chunk, hits
+    quantized to the coarser grain, identity preserved."""
+    model, params = _model_params("mamba2")
+    rng = np.random.default_rng(13)
+    prompts = _shared_prefix_prompts(rng, 4, sys_len=32,
+                                     turn_chunks=(2,))
+
+    def run(mb):
+        eng = ContinuousEngine(model, params, ServeConfig(
+            max_batch=2, prefill_buckets=(48,), max_new_tokens=4,
+            prefill_chunk=8, prefix_cache_mb=mb, prefix_chunk=16))
+        for p in prompts:
+            eng.submit(p)
+        return {r.uid: r.out_tokens for r in eng.run()}, eng
+
+    off_out, _ = run(0.0)
+    on_out, eng = run(8.0)
+    assert on_out == off_out
+    s = eng.prefix_cache.stats()
+    assert s["hits"] >= 1
+    assert s["hit_tokens"] % 16 == 0

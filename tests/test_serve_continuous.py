@@ -238,6 +238,45 @@ def test_state_pool_row_roundtrip(family):
         got, src, axes)
 
 
+@pytest.mark.parametrize("family", ["mamba2", "dense", "rgemma"])
+def test_state_pool_snapshot_row(family):
+    """clone_row snapshots one slot to the host without touching the
+    donated arena; restore_row is its exact inverse — the prefix cache's
+    primitives (and the supported way to extract per-slot state, instead
+    of ad-hoc per-field gathers)."""
+    model, params = _model_params(family)
+    rng = np.random.default_rng(31)
+    max_seq = 24
+    toks = jnp.asarray(rng.integers(1, V, (4, 8)), jnp.int32)
+    src = model.init_cache(4, max_seq, jnp.float32)
+    _, src = model.prefill(params, {"tokens": toks}, src)
+
+    pool = StatePool(model, 4, max_seq, jnp.float32)
+    pool.insert_rows(src, [0, 2], [3, 1])
+    snap = pool.clone_row(3)
+    # host-side pytree: lifetime decoupled from the pool arena
+    assert all(isinstance(leaf, np.ndarray)
+               for leaf in jax.tree.leaves(snap))
+    pool.reset_rows([3])
+    pool.restore_row(3, snap)
+    got = pool.extract_rows([3])
+    jax.tree.map(
+        lambda g, s, ax: np.testing.assert_array_equal(
+            np.asarray(g).take(0, axis=ax),
+            np.asarray(s).take(0, axis=ax)),
+        got, src, pool.batch_axes)
+    # clipped snapshot (index=8 consumed tokens) restores identically:
+    # everything past the prefix is zero by the write discipline
+    clipped = pool.clone_row(1, index=8)
+    pool.restore_row(3, clipped, index=8)
+    got = pool.extract_rows([3])
+    jax.tree.map(
+        lambda g, s, ax: np.testing.assert_array_equal(
+            np.asarray(g).take(0, axis=ax),
+            np.asarray(s).take(2, axis=ax)),
+        got, src, pool.batch_axes)
+
+
 def test_infer_batch_axes_scan_vs_loop_layouts():
     # scan-stacked mamba2: leaves are (n_layers, b, ...) -> batch axis 1
     model, _ = _model_params("mamba2")
