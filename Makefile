@@ -2,9 +2,9 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test smoke-serve smoke-prefill-chunk smoke-prefix smoke-decode \
-    smoke-quant smoke-quickstart linkcheck bench-serve bench-json \
-    hlo-diff ci
+.PHONY: test smoke-serve smoke-prefill-chunk smoke-prefix smoke-trace \
+    smoke-decode smoke-quant smoke-quickstart linkcheck bench-serve \
+    bench-json hlo-diff ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -35,6 +35,19 @@ smoke-quant:
 smoke-prefix:
 	PYTHONPATH=src:. $(PY) -m benchmarks.bench_serve_prefix --smoke
 
+# Observability smoke (docs/observability.md): a traced chunked serve
+# run, then trace_report --check validates the trace — per-phase
+# self-times reconcile with wall within 5% and the compile-once programs
+# (decode, prefill_chunk) never retraced after warmup (the recompile
+# sentinel would also have raised at the offending step via
+# --strict-recompile).  CI uploads serve_trace.json as an artifact.
+smoke-trace:
+	$(PY) -m repro.launch.serve --arch mamba2-130m --reduced \
+	    --engine continuous --requests 6 --batch 2 --max-new 6 \
+	    --prefill-chunk 8 --metrics-every 4 --strict-recompile \
+	    --trace serve_trace.json
+	$(PY) -m repro.launch.trace_report serve_trace.json --check
+
 smoke-quickstart:
 	$(PY) examples/quickstart.py
 
@@ -59,4 +72,4 @@ hlo-diff:
 	$(PY) -m repro.launch.hlo_analysis --arch mamba-130m $(ARGS)
 
 ci: test smoke-decode smoke-serve smoke-prefill-chunk smoke-prefix \
-    smoke-quant smoke-quickstart linkcheck bench-json
+    smoke-trace smoke-quant smoke-quickstart linkcheck bench-json

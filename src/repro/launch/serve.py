@@ -1,10 +1,17 @@
 """Serving driver: ``python -m repro.launch.serve --arch mamba2-130m
 --reduced [--engine continuous]`` — batched requests through the
-static-shape serve subsystem (wave or continuous-batching engine)."""
+static-shape serve subsystem (wave or continuous-batching engine).
+
+``--trace PATH`` records per-request span traces (Chrome/Perfetto JSON
+at PATH plus a ``.jsonl`` event log next to it; fold them with
+``python -m repro.launch.trace_report PATH``); ``--metrics-every N``
+emits a metrics snapshot every N polls.  See docs/observability.md.
+"""
 from __future__ import annotations
 
 import argparse
 import logging
+import os
 
 import jax
 import numpy as np
@@ -60,6 +67,19 @@ def main(argv=None):
                          "weights through prefill, chunked prefill and "
                          "decode (state pools and caches stay fp)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a span trace: Chrome/Perfetto JSON at "
+                         "PATH + a JSONL event log at PATH with a .jsonl "
+                         "suffix (analyze with repro.launch.trace_report)")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="emit a metrics snapshot every N engine polls "
+                         "(0 = off; snapshots also land in the trace)")
+    ap.add_argument("--watchdog-s", type=float, default=0.0,
+                    help="flag the run as hung if no engine step completes "
+                         "for this many seconds (0 = off)")
+    ap.add_argument("--strict-recompile", action="store_true",
+                    help="raise RecompileError if a compile-once program "
+                         "(decode / prefill_chunk) retraces after warmup")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO, format="%(message)s")
     if args.prefill_chunk and args.engine != "continuous":
@@ -89,7 +109,10 @@ def main(argv=None):
         prefill_token_budget=args.prefill_token_budget,
         prefix_cache_mb=(args.prefix_cache_mb
                          if args.engine == "continuous" else 0.0),
-        prefix_chunk=args.prefix_chunk)
+        prefix_chunk=args.prefix_chunk,
+        trace=args.trace, metrics_every=args.metrics_every,
+        watchdog_s=args.watchdog_s,
+        strict_recompile=args.strict_recompile)
     engine_cls = ContinuousEngine if args.engine == "continuous" else Engine
     engine = engine_cls(model, params, scfg)
 
@@ -107,15 +130,27 @@ def main(argv=None):
                        plen - plen % args.prefill_chunk)
         engine.submit(shared + rng.integers(1, cfg.vocab_size,
                                             plen).tolist())
-    done = engine.run()
+    try:
+        done = engine.run()
+    finally:
+        engine.close()
     for r in done[:4]:
         log.info("req %d: %d prompt toks -> %s%s", r.uid, len(r.prompt),
                  r.out_tokens[:8], "..." if len(r.out_tokens) > 8 else "")
     log.info("stats: %s", engine.stats(done))
     m = engine.metrics.summary()
-    log.info("occupancy: %.2f  ttft_mean_s: %.4f  goodput_tok_s: %.1f",
-             m["slot_occupancy"], m["ttft_mean_s"],
-             m["goodput_tokens_per_s"])
+    log.info("occupancy: %.2f  ttft_mean_s: %.4f  ttft_p99_s: %.4f  "
+             "goodput_tok_s: %.1f  (wall source: %s)",
+             m["slot_occupancy"], m["ttft_mean_s"], m["ttft_p99_s"],
+             m["goodput_tokens_per_s"], m["wall_source"])
+    if m["stragglers_decode"] or m["stragglers_prefill"] or \
+            m["watchdog_fires"]:
+        log.warning("health: %d decode stragglers, %d prefill stragglers, "
+                    "%d watchdog fires", m["stragglers_decode"],
+                    m["stragglers_prefill"], m["watchdog_fires"])
+    trips = {k: s.trips for k, s in engine.sentinels.items() if s.trips}
+    if trips:
+        log.warning("recompile sentinels tripped: %s", trips)
     pcache = getattr(engine, "prefix_cache", None)
     if pcache is not None:
         s = pcache.stats()
@@ -124,6 +159,13 @@ def main(argv=None):
                  s["hits"], s["misses"], s["hit_tokens"], s["nodes"],
                  s["resident_bytes"] / 2 ** 20, s["evictions"])
     log.info("compile counters: %s", engine.counters)
+    if args.trace:
+        engine.tracer.save(args.trace)
+        jsonl = os.path.splitext(args.trace)[0] + ".jsonl"
+        engine.tracer.save_jsonl(jsonl)
+        log.info("trace: %d events -> %s (+ %s); analyze with "
+                 "python -m repro.launch.trace_report %s",
+                 len(engine.tracer.events), args.trace, jsonl, args.trace)
     return done
 
 

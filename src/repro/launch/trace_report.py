@@ -1,0 +1,338 @@
+"""Trace-report CLI: fold a serve trace into the answers we keep needing.
+
+``launch/serve --trace PATH`` (or any engine with ``ServeConfig.trace``)
+records the span taxonomy of ``serve/tracing.py``; this tool folds a
+saved trace — Chrome JSON or the JSONL event log — into:
+
+* **per-phase wall breakdown** — where every microsecond of wall went:
+  decode / prefill / admission / snapshot moves / other host work / idle
+  gaps.  Self-times are computed by interval nesting on the engine
+  track (a span's children don't double-count), so the phase total must
+  reconcile with the trace's wall extent — ``--check`` fails the run if
+  coverage drifts more than 5%.
+* **TTFT decomposition** — per request: queue wait (arrival ->
+  admission) vs staging (admission -> first token, i.e. its prefill
+  chunks and the waits between them).  First tokens come from the final
+  prefill chunk's logits, so the first decode step contributes 0 by
+  construction — the report says so rather than inventing a third bar.
+* **queue-time waterfall** — per-request segment table ordered by
+  arrival: who waited, where.
+* **slot-timeline utilization** — staging/decode busy fraction per slot.
+* **recompile sentinel audit** — any ``recompile`` instant in the trace
+  is a post-warmup retrace; ``--check`` asserts the compile-once
+  programs (decode, prefill_chunk) never tripped.
+
+    python -m repro.launch.trace_report serve_trace.json [--json] [--check]
+
+``benchmarks/bench_serve_continuous.bench_phase`` uses the same
+``analyze()`` to produce BENCH_serve.json's ``phase_breakdown`` block.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
+
+from repro.serve.metrics import _percentile
+from repro.serve.tracing import TID_ENGINE, TID_HOST, TID_QUEUE, TID_SLOT0
+
+# Leaf span name -> report phase.  Container spans ("poll", "serve.run",
+# "admit") contribute their *self* time: "admit" self-time is admission
+# bookkeeping outside the prefix lookup / snapshot restore nested in it.
+PHASE_OF = {
+    "decode_step": "decode",
+    "prefill_chunk": "prefill",
+    "prefill_bucket": "prefill",
+    "admit": "admission",
+    "prefix_lookup": "admission",
+    "snapshot_restore": "snapshot",
+    "snapshot_export": "snapshot",
+    "pool_insert": "snapshot",
+    "pool_reset": "snapshot",
+    "poll": "host_other",
+    "serve.run": "host_other",
+    "host_gap": "idle",
+}
+CHECK_PROGRAMS = ("decode", "prefill_chunk")   # must compile exactly once
+
+
+def load_events(path: str) -> List[dict]:
+    """Load a trace: Chrome JSON (``{"traceEvents": [...]}``) or the
+    JSONL event log (one event object per line)."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        data = json.loads(text)
+    except json.JSONDecodeError:   # one object per line
+        return [json.loads(line) for line in text.splitlines() if line.strip()]
+    return data["traceEvents"] if isinstance(data, dict) else data
+
+
+def _spans(events: List[dict], tid: Optional[int] = None) -> List[dict]:
+    return [e for e in events if e.get("ph") == "X" and
+            (tid is None or e.get("tid") == tid)]
+
+
+def self_times_s(events: List[dict]) -> Dict[str, float]:
+    """Per-name self time (seconds) of the engine+host tracks' spans.
+
+    Both tracks come from one Python thread of synchronous context
+    managers, so their spans are properly nested (``host_gap`` covers
+    exactly the time between two ``poll`` spans, inside any enclosing
+    ``serve.run``); a stack walk over the merged tracks subtracts each
+    span's duration from its enclosing span's self time."""
+    spans = sorted((e for e in events if e.get("ph") == "X" and
+                    e.get("tid") in (TID_ENGINE, TID_HOST)),
+                   key=lambda e: (e["ts"], -e["dur"]))
+    out: Dict[str, float] = defaultdict(float)
+    stack: List[dict] = []
+    for ev in spans:
+        while stack and ev["ts"] >= stack[-1]["ts"] + stack[-1]["dur"] - 1e-9:
+            stack.pop()
+        out[ev["name"]] += ev["dur"] / 1e6
+        if stack:
+            out[stack[-1]["name"]] -= ev["dur"] / 1e6
+        stack.append(ev)
+    return dict(out)
+
+
+def wall_extent_s(events: List[dict]) -> float:
+    """Trace wall: extent of the engine+host tracks' complete events."""
+    spans = [e for e in events if e.get("ph") == "X" and
+             e.get("tid") in (TID_ENGINE, TID_HOST)]
+    if not spans:
+        return 0.0
+    t0 = min(e["ts"] for e in spans)
+    t1 = max(e["ts"] + e["dur"] for e in spans)
+    return (t1 - t0) / 1e6
+
+
+def phase_breakdown(events: List[dict]) -> Dict[str, Any]:
+    """Phase -> seconds, plus the reconciliation against wall extent."""
+    selfs = self_times_s(events)
+    phases: Dict[str, float] = defaultdict(float)
+    for name, s in selfs.items():
+        phases[PHASE_OF.get(name, "host_other")] += s
+    wall = wall_extent_s(events)
+    total = sum(phases.values())
+    return {
+        "wall_s": round(wall, 6),
+        "phase_total_s": round(total, 6),
+        # total / wall: 1.0 = every microsecond attributed to a phase.
+        "coverage": round(total / wall, 4) if wall else 0.0,
+        "phases_s": {k: round(v, 6) for k, v in sorted(phases.items())},
+        "phases_frac": {k: round(v / wall, 4) if wall else 0.0
+                        for k, v in sorted(phases.items())},
+    }
+
+
+def request_table(events: List[dict]) -> List[Dict[str, Any]]:
+    """Per-request segments: queue wait, staging (prefill), decode
+    residency, end-to-end — from the queue/slot-track spans."""
+    rows: Dict[int, Dict[str, Any]] = {}
+
+    def row(uid: int) -> Dict[str, Any]:
+        return rows.setdefault(uid, {"uid": uid, "arrival_us": None,
+                                     "queue_s": 0.0, "staging_s": 0.0,
+                                     "decode_s": 0.0, "tokens": None})
+
+    for ev in events:
+        uid = (ev.get("args") or {}).get("uid")
+        if uid is None:
+            continue
+        if ev.get("ph") == "X":
+            dur = ev["dur"] / 1e6
+            if ev["name"] == "queue":
+                r = row(uid)
+                r["queue_s"] += dur
+                r["arrival_us"] = ev["ts"]
+            elif ev["name"] == "staging":
+                r = row(uid)
+                r["staging_s"] += dur
+                r["slot"] = ev["tid"] - TID_SLOT0
+            elif ev["name"] == "decode":
+                row(uid)["decode_s"] += dur
+        elif ev.get("ph") == "i" and ev["name"] == "finish":
+            r = row(uid)
+            r["tokens"] = ev["args"].get("tokens")
+            r["latency_s"] = ev["args"].get("latency_s")
+    out = list(rows.values())
+    out.sort(key=lambda r: (r["arrival_us"] is None, r["arrival_us"],
+                            r["uid"]))
+    return out
+
+
+def ttft_decomposition(table: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Queueing vs prefill share of TTFT across requests.  First tokens
+    are sampled from the final prefill chunk's logits, so the first
+    decode step's share is 0 by construction (reported explicitly)."""
+    qs = [r["queue_s"] for r in table if r["staging_s"] > 0]
+    ss = [r["staging_s"] for r in table if r["staging_s"] > 0]
+    if not qs:
+        return {"requests": 0}
+    ttfts = [a + b for a, b in zip(qs, ss)]
+    tot = sum(ttfts)
+    return {
+        "requests": len(qs),
+        "ttft_mean_s": round(sum(ttfts) / len(ttfts), 6),
+        "ttft_p95_s": round(_percentile(ttfts, 0.95), 6),
+        "queue_mean_s": round(sum(qs) / len(qs), 6),
+        "prefill_mean_s": round(sum(ss) / len(ss), 6),
+        "queue_frac": round(sum(qs) / tot, 4) if tot else 0.0,
+        "prefill_frac": round(sum(ss) / tot, 4) if tot else 0.0,
+        "first_decode_frac": 0.0,
+    }
+
+
+def slot_utilization(events: List[dict]) -> Dict[str, Any]:
+    wall = wall_extent_s(events)
+    busy: Dict[int, Dict[str, float]] = defaultdict(
+        lambda: {"staging_s": 0.0, "decode_s": 0.0})
+    for ev in _spans(events):
+        if ev["tid"] >= TID_SLOT0 and ev["name"] in ("staging", "decode"):
+            busy[ev["tid"] - TID_SLOT0][ev["name"] + "_s"] += ev["dur"] / 1e6
+    slots = {}
+    for slot, b in sorted(busy.items()):
+        total = b["staging_s"] + b["decode_s"]
+        slots[str(slot)] = {
+            "staging_s": round(b["staging_s"], 6),
+            "decode_s": round(b["decode_s"], 6),
+            "busy_frac": round(total / wall, 4) if wall else 0.0,
+        }
+    return {"wall_s": round(wall, 6), "slots": slots}
+
+
+def recompile_trips(events: List[dict]) -> Dict[str, int]:
+    trips: Dict[str, int] = defaultdict(int)
+    for ev in events:
+        if ev.get("ph") == "i" and ev.get("name") == "recompile":
+            trips[ev["args"].get("program", "?")] += \
+                ev["args"].get("new_traces", 1)
+    return dict(trips)
+
+
+def snapshots(events: List[dict]) -> List[dict]:
+    return [ev["args"] for ev in events
+            if ev.get("ph") == "i" and ev.get("name") == "metrics_snapshot"]
+
+
+def analyze(events: List[dict]) -> Dict[str, Any]:
+    table = request_table(events)
+    return {
+        "phase_breakdown": phase_breakdown(events),
+        "ttft_decomposition": ttft_decomposition(table),
+        "requests": table,
+        "slot_utilization": slot_utilization(events),
+        "recompile_trips": recompile_trips(events),
+        "metrics_snapshots": len(snapshots(events)),
+    }
+
+
+# ---------------------------------------------------------------------------
+def _fmt_s(s: float) -> str:
+    return f"{s * 1e3:9.2f} ms"
+
+
+def print_report(rep: Dict[str, Any], max_requests: int = 20) -> None:
+    pb = rep["phase_breakdown"]
+    print("== per-phase wall breakdown ==")
+    for phase, s in sorted(pb["phases_s"].items(), key=lambda kv: -kv[1]):
+        print(f"  {phase:<11s} {_fmt_s(s)}  {pb['phases_frac'][phase]:6.1%}")
+    print(f"  {'total':<11s} {_fmt_s(pb['phase_total_s'])}  vs wall "
+          f"{_fmt_s(pb['wall_s'])}  (coverage {pb['coverage']:.1%})")
+
+    td = rep["ttft_decomposition"]
+    if td.get("requests"):
+        print("\n== TTFT decomposition ==")
+        print(f"  requests {td['requests']}   mean "
+              f"{_fmt_s(td['ttft_mean_s'])}   p95 {_fmt_s(td['ttft_p95_s'])}")
+        print(f"  queueing {td['queue_frac']:6.1%}   prefill "
+              f"{td['prefill_frac']:6.1%}   first decode step "
+              f"{td['first_decode_frac']:.1%} (first token comes from the "
+              "final prefill chunk)")
+
+    table = rep["requests"]
+    if table:
+        print(f"\n== queue-time waterfall (first {max_requests} "
+              "by arrival) ==")
+        print(f"  {'uid':>5s} {'queue':>10s} {'prefill':>10s} "
+              f"{'decode':>10s} {'tokens':>6s}")
+        for r in table[:max_requests]:
+            print(f"  {r['uid']:5d} {r['queue_s'] * 1e3:8.2f}ms "
+                  f"{r['staging_s'] * 1e3:8.2f}ms "
+                  f"{r['decode_s'] * 1e3:8.2f}ms "
+                  f"{r['tokens'] if r['tokens'] is not None else '?':>6}")
+
+    su = rep["slot_utilization"]
+    if su["slots"]:
+        print("\n== slot-timeline utilization ==")
+        for slot, b in su["slots"].items():
+            bar = "#" * int(round(b["busy_frac"] * 40))
+            print(f"  slot {slot}: {b['busy_frac']:6.1%} busy "
+                  f"(staging {b['staging_s'] * 1e3:7.1f} ms, decode "
+                  f"{b['decode_s'] * 1e3:7.1f} ms) {bar}")
+
+    trips = rep["recompile_trips"]
+    print(f"\nrecompile trips: {trips or 'none'}   metrics snapshots: "
+          f"{rep['metrics_snapshots']}")
+
+
+def check(rep: Dict[str, Any], tolerance: float = 0.05) -> List[str]:
+    """Validation gate for CI (``--check``): phase total reconciles with
+    wall within ``tolerance`` and the compile-once programs never
+    retraced after warmup."""
+    problems = []
+    pb = rep["phase_breakdown"]
+    if pb["wall_s"] <= 0:
+        problems.append("empty trace: no engine/host spans")
+    elif abs(pb["coverage"] - 1.0) > tolerance:
+        problems.append(
+            f"phase total {pb['phase_total_s']:.4f}s does not reconcile "
+            f"with wall {pb['wall_s']:.4f}s "
+            f"(coverage {pb['coverage']:.1%}, tolerance {tolerance:.0%})")
+    for prog in CHECK_PROGRAMS:
+        n = rep["recompile_trips"].get(prog, 0)
+        if n:
+            problems.append(f"compile-once program {prog!r} retraced "
+                            f"{n} time(s) after warmup")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fold a serve trace (Chrome JSON or JSONL) into phase "
+                    "breakdowns, TTFT decomposition, and slot timelines.")
+    ap.add_argument("trace", help="trace path from launch/serve --trace")
+    ap.add_argument("--json", action="store_true",
+                    help="print the full report as JSON instead of tables")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless phases reconcile with wall "
+                         "(<=5%% drift) and decode/prefill_chunk never "
+                         "retraced")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="--check reconciliation tolerance (default 0.05)")
+    ap.add_argument("--max-requests", type=int, default=20,
+                    help="waterfall rows to print")
+    args = ap.parse_args(argv)
+
+    rep = analyze(load_events(args.trace))
+    if args.json:
+        json.dump(rep, sys.stdout, indent=2)
+        print()
+    else:
+        print_report(rep, max_requests=args.max_requests)
+    if args.check:
+        problems = check(rep, args.tolerance)
+        for p in problems:
+            print(f"CHECK FAILED: {p}", file=sys.stderr)
+        if problems:
+            return 1
+        print(f"check OK: coverage {rep['phase_breakdown']['coverage']:.1%},"
+              f" 0 post-warmup recompiles of {', '.join(CHECK_PROGRAMS)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

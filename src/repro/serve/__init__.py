@@ -16,10 +16,20 @@ prefill chunk with each decode step, and — with
 through a radix cache of chunk-boundary snapshots
 (:class:`PrefixCache`).  See ``docs/serving.md`` and
 ``docs/prefix_cache.md``.
+
+Observability (``tracing.py`` + ``metrics.py``; docs/observability.md):
+``ServeConfig.trace`` turns on per-request span tracing through a
+:class:`Tracer` (Chrome/Perfetto JSON + JSONL event log, folded into
+reports by ``launch/trace_report.py``), ``metrics_every`` emits periodic
+metrics snapshots, and :class:`RecompileSentinel` makes the compile-once
+discipline a checked invariant.
 """
 from repro.serve.continuous import ContinuousEngine  # noqa: F401
 from repro.serve.engine import Engine, ServeConfig  # noqa: F401
-from repro.serve.metrics import ServeMetrics  # noqa: F401
+from repro.serve.metrics import (RateMeter, ServeMetrics,  # noqa: F401
+                                 StreamingHistogram, WindowedGauge)
 from repro.serve.prefix_cache import PrefixCache  # noqa: F401
 from repro.serve.scheduler import Request, Scheduler, bucket_for  # noqa: F401
 from repro.serve.state_pool import StatePool  # noqa: F401
+from repro.serve.tracing import (NULL_TRACER, NullTracer,  # noqa: F401
+                                 RecompileError, RecompileSentinel, Tracer)

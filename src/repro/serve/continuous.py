@@ -58,11 +58,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.health import StepMonitor, Watchdog
 from repro.serve.engine import EngineBase, ServeConfig
 from repro.serve.prefix_cache import PrefixCache, chunk_key
 from repro.serve.scheduler import Request, bucket_for, chunk_span
 from repro.serve.state_pool import (StatePool, format_compile_count,
                                     jit_cache_size)
+from repro.serve.tracing import (TID_HOST, TID_QUEUE, TID_SLOT0,
+                                 RecompileSentinel)
 
 log = logging.getLogger("repro.serve")
 
@@ -84,7 +87,8 @@ class ContinuousEngine(EngineBase):
                       if self.chunk else self.buckets[-1])
         self.max_seq = max_prompt + cfg.max_new_tokens
         dtype = model.cfg.dtype
-        self.pool = StatePool(model, self.slots, self.max_seq, dtype)
+        self.pool = StatePool(model, self.slots, self.max_seq, dtype,
+                              tracer=self.tracer)
         # Zeroed prefill input cache, reused by every admission (prefill is
         # functional; its output rows are scattered into the pool).
         self._scratch = model.init_cache(self.slots, self.max_seq, dtype)
@@ -100,11 +104,15 @@ class ContinuousEngine(EngineBase):
             # pool.  Slot i prefills in row i: a request reserves its
             # decode slot at admission, so prefill work can never outrun
             # decode capacity.
-            self._ppool = StatePool(model, self.slots, self.max_seq, dtype)
+            self._ppool = StatePool(model, self.slots, self.max_seq, dtype,
+                                    tracer=self.tracer)
             self._chunk_step = jax.jit(
                 lambda p, toks, cache, off:
                 model.prefill_chunk(p, toks, cache, off),
                 donate_argnums=(2,))
+            self.sentinels["prefill_chunk"] = RecompileSentinel(
+                "prefill_chunk", self._chunk_step,
+                strict=getattr(cfg, "strict_recompile", False))
             self._pref_req: List[Optional[Request]] = [None] * self.slots
             self._pref_toks: List[Optional[np.ndarray]] = [None] * self.slots
             self._pref_off = np.zeros(self.slots, np.int32)
@@ -121,7 +129,7 @@ class ContinuousEngine(EngineBase):
                     f"prefill_chunk ({self.chunk}): snapshots are taken "
                     "between chunk program calls")
             self._pcache = PrefixCache(int(cfg.prefix_cache_mb * 2 ** 20),
-                                       grain)
+                                       grain, tracer=self.tracer)
             # Per-slot trie walk state while staging: the chunk key of the
             # padded stream, the deepest visited node (the cursor new
             # snapshots attach under), the pins released when the request
@@ -131,6 +139,64 @@ class ContinuousEngine(EngineBase):
             self._pref_node: List[Optional[object]] = [None] * self.slots
             self._pref_pins: List[list] = [[] for _ in range(self.slots)]
             self._pref_insert_ok = [True] * self.slots
+        # -- observability (docs/observability.md) --------------------------
+        # Host scheduling gaps: time between the end of one poll and the
+        # start of the next (caller time + idle waits) gets its own trace
+        # track so phase breakdowns account for ALL wall time.
+        self._last_poll_end: Optional[float] = None
+        # Step-time health: rolling-median straggler flags on decode and
+        # prefill program calls (runtime/health.StepMonitor), plus an
+        # optional deadline watchdog that fires when no compiled call
+        # completes within cfg.watchdog_s (a hung device/compile).
+        self.monitor_decode = StepMonitor()
+        self.monitor_prefill = StepMonitor()
+        self._watchdog: Optional[Watchdog] = None
+        if getattr(cfg, "watchdog_s", 0.0):
+            self._watchdog = Watchdog(cfg.watchdog_s, on_hang=self._on_hang)
+
+    def _on_hang(self) -> None:
+        self.metrics.watchdog_fires += 1
+        self.tracer.instant("watchdog_hang",
+                            deadline_s=self.cfg.watchdog_s)
+        log.error("serve watchdog: no compiled call completed within "
+                  "%.1fs — engine may be hung", self.cfg.watchdog_s)
+
+    def close(self) -> None:
+        """Stop the hang watchdog thread (idempotent)."""
+        if self._watchdog is not None:
+            self._watchdog.stop()
+            self._watchdog = None
+
+    def reset_stats(self) -> None:
+        # Fresh health baselines too: warmup steps include compiles, which
+        # would pollute the rolling-median straggler threshold.  The
+        # cleared poll stamp keeps the first post-warmup poll from
+        # emitting a host_gap that spans the whole warmup.
+        self.monitor_decode = StepMonitor()
+        self.monitor_prefill = StepMonitor()
+        self._last_poll_end = None
+        super().reset_stats()
+
+    def _observe_step(self, monitor: StepMonitor, kind: str,
+                      dt_s: float) -> None:
+        """Feed one compiled-call duration to its StepMonitor; surface
+        straggler flags through metrics and the trace, pet the watchdog."""
+        rec = monitor.observe(len(monitor.records), dt_s)
+        if rec.straggler:
+            self.metrics.record_straggler(kind)
+            self.tracer.instant(f"straggler_{kind}", seconds=dt_s)
+        if self._watchdog is not None:
+            self._watchdog.pet()
+
+    def _snapshot_extra(self) -> dict:
+        """Engine-side facts folded into each periodic metrics snapshot."""
+        out = {"monitor_decode": self.monitor_decode.summary(),
+               "monitor_prefill": self.monitor_prefill.summary(),
+               "recompile_trips": {name: s.trips
+                                   for name, s in self.sentinels.items()}}
+        if self._pcache is not None:
+            out["prefix_cache"] = self._pcache.stats()
+        return out
 
     def _buckets(self):
         return self.buckets
@@ -167,11 +233,20 @@ class ContinuousEngine(EngineBase):
                 if r is None and
                 (self.chunk is None or self._pref_req[i] is None)]
 
-    def _finish(self, req: Request, now: float) -> None:
+    def _finish(self, req: Request, now: float, slot: int) -> None:
         req.done = True
         req.finish_s = now
         req.latency_s = now - req.arrival_s
         self.metrics.record_finish(req.latency_s, len(req.out_tokens))
+        if self.tracer.enabled:
+            if req.decode_pc is not None:
+                self.tracer.complete("decode", req.decode_pc,
+                                     time.perf_counter(),
+                                     tid=TID_SLOT0 + slot, uid=req.uid,
+                                     tokens=len(req.out_tokens))
+            self.tracer.instant("finish", uid=req.uid,
+                                tokens=len(req.out_tokens),
+                                latency_s=req.latency_s)
         self._finished.append(req)
 
     def _start_tenant(self, slot: int, req: Request, span: int, tok: int,
@@ -191,13 +266,21 @@ class ContinuousEngine(EngineBase):
                 "clamping to %d", req.uid, req.max_new_tokens, budget)
             req.max_new_tokens = budget
         req.first_token_s = t_first
+        t_first_pc = time.perf_counter()
+        if self.tracer.enabled and req.admit_pc is not None:
+            # Per-slot staging residency: queue pop -> first token (covers
+            # all the request's prefill chunks and the waits between them).
+            self.tracer.complete("staging", req.admit_pc, t_first_pc,
+                                 tid=TID_SLOT0 + slot, uid=req.uid,
+                                 span=span)
         self.metrics.record_first_token(t_first - req.arrival_s)
         self.metrics.record_token()
         req.emit(tok)
         if (cfg.eos_id >= 0 and tok == cfg.eos_id) or \
                 len(req.out_tokens) >= req.max_new_tokens:
-            self._finish(req, t_first)
+            self._finish(req, t_first, slot)
         else:
+            req.decode_pc = t_first_pc
             self._slot_req[slot] = req
             self._pos[slot] = span
             self._next_tok[slot] = tok
@@ -212,6 +295,11 @@ class ContinuousEngine(EngineBase):
             req = self.scheduler.pop_ready(now)
             if req is None:
                 break
+            req.admit_pc = time.perf_counter()
+            if self.tracer.enabled:
+                self.tracer.complete(
+                    "queue", self.tracer.pc_from_walltime(req.arrival_s),
+                    req.admit_pc, tid=TID_QUEUE, uid=req.uid)
             batch.append((free.pop(0), req))
         for _ in range(len(self.scheduler.expired) - n_shed0):
             self.metrics.record_shed()
@@ -232,8 +320,11 @@ class ContinuousEngine(EngineBase):
             logits, cache = self._prefill(
                 self.params, {"tokens": jnp.asarray(tokens)}, self._scratch)
             first = self._sample(logits)
-            self.metrics.record_prefill(bucket * len(group),
-                                        time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            self.tracer.complete("prefill_bucket", t0, t1, bucket=bucket,
+                                 rows=len(group))
+            self._observe_step(self.monitor_prefill, "prefill", t1 - t0)
+            self.metrics.record_prefill(bucket * len(group), t1 - t0)
             self.pool.insert_rows(cache,
                                   [row for row in range(len(group))],
                                   [slot for slot, _ in group])
@@ -259,6 +350,11 @@ class ContinuousEngine(EngineBase):
             req = self.scheduler.pop_ready(now)
             if req is None:
                 break
+            req.admit_pc = time.perf_counter()
+            if self.tracer.enabled:
+                self.tracer.complete(
+                    "queue", self.tracer.pc_from_walltime(req.arrival_s),
+                    req.admit_pc, tid=TID_QUEUE, uid=req.uid)
             slot = free.pop(0)
             p = req.prompt[-self.buckets[-1]:]
             span = chunk_span(self.buckets, self.chunk, len(p))
@@ -290,10 +386,12 @@ class ContinuousEngine(EngineBase):
         least one prefill chunk always runs — the final chunk's logits
         produce the request's first token."""
         cache = self._pcache
-        key = chunk_key(toks, cache.chunk)
-        cap = max(0, (span - self.chunk) // cache.chunk)
-        node, depth = cache.match(key, max_depth=cap)
-        off = depth * cache.chunk
+        with self.tracer.span("prefix_lookup") as sp:
+            key = chunk_key(toks, cache.chunk)
+            cap = max(0, (span - self.chunk) // cache.chunk)
+            node, depth = cache.match(key, max_depth=cap)
+            off = depth * cache.chunk
+            sp.args["matched_tokens"] = off
         self.metrics.record_prefix_lookup(off)
         self._pref_key[slot] = key
         self._pref_node[slot] = node
@@ -354,6 +452,15 @@ class ContinuousEngine(EngineBase):
         logits, self._ppool.cache = self._chunk_step(
             self.params, jnp.asarray(tokens), self._ppool.cache,
             jnp.asarray(self._pref_off))
+        # Synchronize before the host-side bookkeeping so the recorded
+        # chunk time is the compiled call alone — snapshot exports and
+        # sampling get their own spans (phase attribution stays honest).
+        jax.block_until_ready(logits)
+        t1 = time.perf_counter()
+        self.tracer.complete("prefill_chunk", t0, t1, rows=len(rows),
+                             tokens=C * len(rows))
+        self._observe_step(self.monitor_prefill, "prefill", t1 - t0)
+        self.metrics.record_prefill(C * len(rows), t1 - t0)
         done_rows = []
         for i in rows:
             self._pref_off[i] += C
@@ -365,8 +472,6 @@ class ContinuousEngine(EngineBase):
                 done_rows.append(i)
         if done_rows:
             first = self._sample(logits)
-            self.metrics.record_prefill(C * len(rows),
-                                        time.perf_counter() - t0)
             # Row i prefilled in the second pool becomes slot i's decode
             # state (same index — the slot was reserved at admission).
             self.pool.insert_rows(self._ppool.cache, done_rows, done_rows)
@@ -377,10 +482,6 @@ class ContinuousEngine(EngineBase):
                 self._pref_req[i] = None
                 self._pref_toks[i] = None
                 self._start_tenant(i, req, span, int(first[i]), t_first)
-        else:
-            jax.block_until_ready(logits)
-            self.metrics.record_prefill(C * len(rows),
-                                        time.perf_counter() - t0)
         return C * len(rows)
 
     # ------------------------------------------------------------------
@@ -395,15 +496,25 @@ class ContinuousEngine(EngineBase):
         stalling it."""
         cfg = self.cfg
         done0 = len(self._finished)
+        t_poll0 = time.perf_counter()
+        if self.tracer.enabled and self._last_poll_end is not None:
+            # Host scheduling gap: everything between polls (the caller's
+            # arrival loop, sleeps, network...) on its own trace track.
+            self.tracer.complete("host_gap", self._last_poll_end, t_poll0,
+                                 tid=TID_HOST)
+        poll_span = self.tracer.span("poll")
+        poll_span.__enter__()
         now = time.time()
         if self.chunk:
-            self._admit_chunked(now)
+            with self.tracer.span("admit") as sp:
+                sp.args["admitted"] = self._admit_chunked(now)
             spent = self._prefill_step()
             budget = cfg.prefill_token_budget
             while spent and budget > spent:
                 # A finished prefill may have freed nothing, but an
                 # EOS-on-prefill finish frees its slot for the queue.
-                self._admit_chunked(time.time())
+                with self.tracer.span("admit") as sp:
+                    sp.args["admitted"] = self._admit_chunked(time.time())
                 adv = self._prefill_step()
                 if not adv:
                     break
@@ -412,7 +523,9 @@ class ContinuousEngine(EngineBase):
             # Re-admit until slots are full or the queue drains (a request
             # that EOS'd on its prefill token frees its slot immediately).
             while self._free_slots() and len(self.scheduler):
-                if not self._admit(now):
+                with self.tracer.span("admit") as sp:
+                    n_admitted = sp.args["admitted"] = self._admit(now)
+                if not n_admitted:
                     break
                 now = time.time()
 
@@ -424,7 +537,10 @@ class ContinuousEngine(EngineBase):
                 self.pool.cache, jnp.asarray(self._pos))
             nxt = self._sample(logits)
             self.pool.cache = cache
-            self.metrics.record_step(len(live), time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            self.tracer.complete("decode_step", t0, t1, live=len(live))
+            self._observe_step(self.monitor_decode, "decode", t1 - t0)
+            self.metrics.record_step(len(live), t1 - t0)
             # Dead slots decode into a sink: their position pins to the last
             # cache column until a refill overwrites the whole row.
             self._pos = np.minimum(self._pos + 1, self.max_seq - 1)
@@ -437,8 +553,19 @@ class ContinuousEngine(EngineBase):
                 self._next_tok[i] = tok
                 if (cfg.eos_id >= 0 and tok == cfg.eos_id) or \
                         len(req.out_tokens) >= req.max_new_tokens:
-                    self._finish(req, now)
+                    self._finish(req, now, i)
                     self._slot_req[i] = None
+        poll_span.__exit__(None, None, None)
+        self._last_poll_end = time.perf_counter()
+        self.check_sentinels()
+        self.metrics.observe_gauges(
+            queue_depth=len(self.scheduler),
+            live_slots=len(live),
+            staging_depth=(sum(r is not None for r in self._pref_req)
+                           if self.chunk else 0),
+            **({"prefix_resident_bytes": self._pcache.resident_bytes}
+               if self._pcache is not None else {}))
+        self.metrics.maybe_snapshot(self._snapshot_extra)
         return self._finished[done0:]
 
     def run(self) -> List[Request]:
@@ -447,7 +574,9 @@ class ContinuousEngine(EngineBase):
         done: List[Request] = []
         while self.busy:
             done.extend(self.poll())
-        self.metrics.record_wall(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.tracer.complete("serve.run", t0, t1)
+        self.metrics.record_wall(t1 - t0)
         return done
 
     def stats(self, requests: Optional[List[Request]] = None) -> dict:

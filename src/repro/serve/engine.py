@@ -34,6 +34,8 @@ from repro.serve.scheduler import (Request, Scheduler, bucket_for,
                                    build_request)
 from repro.serve.state_pool import (StatePool, format_compile_count,
                                     jit_cache_size)
+from repro.serve.tracing import (NULL_TRACER, TID_QUEUE, TID_SLOT0,
+                                 RecompileSentinel, Tracer)
 
 Array = jax.Array
 log = logging.getLogger("repro.serve")
@@ -70,6 +72,22 @@ class ServeConfig:
     # grains store fewer, larger entries (less snapshot overhead, less
     # sharing resolution).
     prefix_chunk: Optional[int] = None
+    # -- observability (docs/observability.md) ------------------------------
+    # Truthy enables per-request span tracing (``serve/tracing.py``); the
+    # engine records events in memory and the caller saves them
+    # (``engine.tracer.save(path)`` — launch/serve wires --trace PATH).
+    # Falsy keeps the near-zero-overhead null tracer.
+    trace: object = None
+    # Emit a metrics snapshot every N engine polls (0 = off): windowed
+    # gauges + histogram quick stats into ``engine.metrics.snapshots``
+    # and, when tracing, the trace's counter track / JSONL log.
+    metrics_every: int = 0
+    # Recompile sentinels raise RecompileError on any post-warmup retrace
+    # of a compiled serve program instead of just counting trips.
+    strict_recompile: bool = False
+    # Deadline (seconds) for the continuous engine's hang watchdog: fires
+    # when no compiled call completes within the deadline.  0 disables.
+    watchdog_s: float = 0.0
 
 
 class EngineBase:
@@ -96,10 +114,24 @@ class EngineBase:
         self._decode = jax.jit(
             lambda p, tok, cache, idx: model.decode_step(p, tok, cache, idx),
             donate_argnums=(2,))
-        self._scheduler = Scheduler(getattr(cfg, "policy", "fcfs"))
+        self.tracer = Tracer() if getattr(cfg, "trace", None) else NULL_TRACER
+        self._scheduler = Scheduler(getattr(cfg, "policy", "fcfs"),
+                                    tracer=self.tracer)
         self._uid = 0
         self._step = 0              # sampling-rng step counter
-        self.metrics = ServeMetrics(cfg.max_batch)
+        self.metrics = ServeMetrics(cfg.max_batch, tracer=self.tracer,
+                                    metrics_every=getattr(cfg,
+                                                          "metrics_every", 0))
+        # Compile-once discipline as first-class sentinels: checked every
+        # poll/wave, re-armed by reset_stats() (i.e. after warmup), so a
+        # trip always means a *post-warmup* retrace.
+        strict = getattr(cfg, "strict_recompile", False)
+        self.sentinels = {
+            "decode": RecompileSentinel("decode", self._decode,
+                                        strict=strict),
+            "prefill": RecompileSentinel("prefill", self._prefill,
+                                         strict=strict),
+        }
 
     def _buckets(self) -> Sequence[int]:
         return self.cfg.prefill_buckets
@@ -133,7 +165,14 @@ class EngineBase:
         return {"decode_compiles":
                 format_compile_count(jit_cache_size(self._decode)),
                 "prefill_compiles":
-                format_compile_count(jit_cache_size(self._prefill))}
+                format_compile_count(jit_cache_size(self._prefill)),
+                "recompile_trips":
+                {name: s.trips for name, s in self.sentinels.items()}}
+
+    def check_sentinels(self) -> None:
+        """Run every recompile sentinel (cheap jit-cache-size probes)."""
+        for s in self.sentinels.values():
+            s.check(self.tracer)
 
     @property
     def expired(self) -> List[Request]:
@@ -141,8 +180,17 @@ class EngineBase:
         return self._scheduler.expired
 
     def reset_stats(self) -> None:
-        """Drop accumulated metrics (e.g. after a compile warmup)."""
+        """Drop accumulated metrics and trace events and re-arm the
+        recompile sentinels (e.g. after a compile warmup) — everything
+        observed afterwards is post-warmup."""
         self.metrics.reset()
+        self.tracer.reset()
+        for s in self.sentinels.values():
+            s.arm()
+
+    def close(self) -> None:
+        """Release background resources (watchdog threads); engines stay
+        usable for inspection afterwards."""
 
 
 class Engine(EngineBase):
@@ -169,6 +217,11 @@ class Engine(EngineBase):
                 req = self._scheduler.pop_ready(now)
                 if req is None:
                     break
+                req.admit_pc = time.perf_counter()
+                if self.tracer.enabled:
+                    self.tracer.complete(
+                        "queue", self.tracer.pc_from_walltime(req.arrival_s),
+                        req.admit_pc, tid=TID_QUEUE, uid=req.uid)
                 wave.append(req)
             for _ in range(len(self._scheduler.expired) - n_shed0):
                 self.metrics.record_shed()
@@ -179,6 +232,8 @@ class Engine(EngineBase):
     def _run_wave(self, wave: List[Request]) -> List[Request]:
         cfg = self.cfg
         t0 = time.time()
+        wave_span = self.tracer.span("poll", requests=len(wave))
+        wave_span.__enter__()
         b = cfg.max_batch
         longest = max(len(r.prompt) for r in wave)
         bucket = self._bucket_for(longest)
@@ -199,28 +254,40 @@ class Engine(EngineBase):
         pool = StatePool(self.model, b,
                          bucket + max(self.cfg.max_new_tokens, max_new),
                          self.model.cfg.dtype)
-        logits, cache = self._prefill(self.params,
-                                      {"tokens": jnp.asarray(tokens)},
-                                      pool.cache)
-        next_tok = self._sample(np.asarray(logits, np.float32))
+        with self.tracer.span("prefill_bucket", bucket=bucket,
+                              rows=len(wave)):
+            logits, cache = self._prefill(self.params,
+                                          {"tokens": jnp.asarray(tokens)},
+                                          pool.cache)
+            next_tok = self._sample(np.asarray(logits, np.float32))
 
-        def finish(r: Request) -> None:
+        def finish(r: Request, slot: int) -> None:
             r.done = True
             r.finish_s = time.time()
             r.latency_s = r.finish_s - r.arrival_s
             self.metrics.record_finish(r.latency_s, len(r.out_tokens))
+            if self.tracer.enabled and r.decode_pc is not None:
+                self.tracer.complete("decode", r.decode_pc,
+                                     time.perf_counter(),
+                                     tid=TID_SLOT0 + slot, uid=r.uid,
+                                     tokens=len(r.out_tokens))
 
         alive = np.array([True] * len(wave) + [False] * (b - len(wave)))
         t_first = time.time()
+        t_first_pc = time.perf_counter()
         for i, r in enumerate(wave):
             r.first_token_s = t_first
+            r.decode_pc = t_first_pc
             self.metrics.record_first_token(t_first - r.arrival_s)
             self.metrics.record_token()
+            if self.tracer.enabled and r.admit_pc is not None:
+                self.tracer.complete("staging", r.admit_pc, t_first_pc,
+                                     tid=TID_SLOT0 + i, uid=r.uid)
             r.emit(int(next_tok[i]))
             if (cfg.eos_id >= 0 and next_tok[i] == cfg.eos_id) or \
                     r.max_new_tokens == 1:
                 alive[i] = False
-                finish(r)
+                finish(r, i)
 
         for t in range(1, max_new):
             if not alive[:len(wave)].any():
@@ -230,8 +297,11 @@ class Engine(EngineBase):
             logits, cache = self._decode(self._decode_params, tok, cache,
                                          jnp.int32(bucket + t - 1))
             next_tok = self._sample(np.asarray(logits, np.float32))
+            ts1 = time.perf_counter()
+            self.tracer.complete("decode_step", ts0, ts1,
+                                 live=int(alive[:len(wave)].sum()))
             self.metrics.record_step(int(alive[:len(wave)].sum()),
-                                     time.perf_counter() - ts0)
+                                     ts1 - ts0)
             for i, r in enumerate(wave):
                 if alive[i] and len(r.out_tokens) < r.max_new_tokens:
                     r.emit(int(next_tok[i]))
@@ -239,14 +309,17 @@ class Engine(EngineBase):
                     if (cfg.eos_id >= 0 and next_tok[i] == cfg.eos_id) or \
                             len(r.out_tokens) >= r.max_new_tokens:
                         alive[i] = False
-                        finish(r)
+                        finish(r, i)
 
-        for r in wave:
+        for i, r in enumerate(wave):
             if not r.done:
-                finish(r)
+                finish(r, i)
         dt = time.time() - t0
         self._wall_s += dt
         self.metrics.record_wall(dt)
+        wave_span.__exit__(None, None, None)
+        self.check_sentinels()
+        self.metrics.maybe_snapshot()
         return wave
 
     # ------------------------------------------------------------------

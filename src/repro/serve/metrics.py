@@ -1,8 +1,20 @@
-"""Serving metrics: TTFT, per-token latency, slot occupancy, goodput.
+"""Serving metrics: streaming histograms, windowed gauges, snapshots.
 
 Event-driven so both engines can feed it: the engine stamps arrivals,
-first tokens, emitted tokens, completions, and per-decode-step occupancy;
-``summary()`` folds those into the serving KPIs the benchmarks compare.
+first tokens, emitted tokens, completions, per-decode-step occupancy and
+per-poll gauge observations; ``summary()`` folds those into the serving
+KPIs the benchmarks compare, and ``maybe_snapshot()`` emits periodic
+point-in-time snapshots (to ``self.snapshots`` and, when tracing, to the
+tracer's event log) so a long-running server is observable *while* it
+runs, not only after.
+
+Aggregates are **streaming**: latency distributions live in fixed-size
+log-bucketed histograms (:class:`StreamingHistogram` — O(1) per sample,
+percentiles by linear interpolation inside a bucket) and utilization
+gauges in sliding time windows (:class:`WindowedGauge` /
+:class:`RateMeter`), so memory is constant no matter how many requests a
+server has seen — the old stored-``List[float]`` aggregates grew without
+bound and re-sorted per percentile call.
 
 Definitions:
 
@@ -16,23 +28,178 @@ Definitions:
   directly here.
 * **goodput**       — tokens of *completed* requests per second of wall
   time (tokens of shed / unfinished requests don't count).
+* **wall_source**   — which denominator throughput figures used:
+  ``"measured"`` when the caller stamped ``record_wall``, else
+  ``"decode_time"`` (poll()-style driving never stamps a wall; decode
+  time is then the best available denominator and throughput is an
+  *upper bound* — surfaced explicitly instead of silently substituted).
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import math
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+from repro.serve.tracing import NULL_TRACER
 
 
 def _percentile(xs: List[float], q: float) -> float:
+    """Linear-interpolation percentile of a list (numpy ``quantile``
+    semantics).  The old nearest-rank-with-``round()`` variant biased
+    small-sample tails: with 20 samples, p95 rounded to the *maximum*
+    (rank 19) instead of interpolating between ranks 18 and 19."""
     if not xs:
         return 0.0
     ys = sorted(xs)
-    i = min(len(ys) - 1, int(round(q * (len(ys) - 1))))
-    return ys[i]
+    pos = q * (len(ys) - 1)
+    lo = int(math.floor(pos))
+    hi = min(len(ys) - 1, lo + 1)
+    frac = pos - lo
+    return ys[lo] * (1.0 - frac) + ys[hi] * frac
+
+
+class StreamingHistogram:
+    """Log-bucketed streaming histogram for positive samples (latencies).
+
+    Buckets are geometric: ``bins_per_decade`` per factor of 10 between
+    ``lo`` and ``hi`` (values outside clamp into the edge buckets).  At
+    the default 32 bins/decade a bucket spans a factor of 10^(1/32) ~
+    1.075, so interpolated percentiles carry <= ~7.5% relative error —
+    exact count/mean/min/max, constant memory, O(1) insertion.
+    """
+
+    def __init__(self, lo: float = 1e-6, hi: float = 1e4,
+                 bins_per_decade: int = 32):
+        self.lo = lo
+        self.hi = hi
+        self.bpd = bins_per_decade
+        self._log_lo = math.log10(lo)
+        self.nbins = int(math.ceil((math.log10(hi) - self._log_lo) * bins_per_decade)) + 1
+        self.counts = [0] * self.nbins
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def _bucket(self, x: float) -> int:
+        if x <= self.lo:
+            return 0
+        if x >= self.hi:
+            return self.nbins - 1
+        return int((math.log10(x) - self._log_lo) * self.bpd)
+
+    def add(self, x: float) -> None:
+        self.counts[self._bucket(x)] += 1
+        self.count += 1
+        self.total += x
+        self.vmin = min(self.vmin, x)
+        self.vmax = max(self.vmax, x)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Linear interpolation on the cumulative histogram: rank
+        ``q * (count - 1)`` lands inside one bucket; the value
+        interpolates geometrically across that bucket's span by the
+        rank's fractional position, clamped to the observed min/max."""
+        if not self.count:
+            return 0.0
+        if self.count == 1:
+            return self.vmin
+        rank = q * (self.count - 1)
+        cum = 0
+        for b, n in enumerate(self.counts):
+            if not n:
+                continue
+            if rank < cum + n:
+                frac = (rank - cum + 0.5) / n
+                lo_edge = 10.0 ** (self._log_lo + b / self.bpd)
+                v = lo_edge * 10.0 ** (frac / self.bpd)
+                return min(max(v, self.vmin), self.vmax)
+            cum += n
+        return self.vmax
+
+    def summary(self) -> Dict[str, float]:
+        return {"count": self.count, "mean": self.mean,
+                "min": self.vmin if self.count else 0.0,
+                "max": self.vmax if self.count else 0.0,
+                "p50": self.percentile(0.50),
+                "p90": self.percentile(0.90),
+                "p95": self.percentile(0.95),
+                "p99": self.percentile(0.99)}
+
+
+class WindowedGauge:
+    """Sliding-time-window gauge: last / windowed mean / windowed max of a
+    sampled value (slot occupancy, queue depth, resident bytes, ...)."""
+
+    def __init__(self, window_s: float = 10.0):
+        self.window_s = window_s
+        self._pts: deque = deque()      # (t, value)
+        self.last = 0.0
+
+    def record(self, value: float, now: Optional[float] = None) -> None:
+        now = time.perf_counter() if now is None else now
+        self.last = value
+        self._pts.append((now, value))
+        self._trim(now)
+
+    def _trim(self, now: float) -> None:
+        cut = now - self.window_s
+        pts = self._pts
+        while pts and pts[0][0] < cut:
+            pts.popleft()
+
+    def snapshot(self, now: Optional[float] = None) -> Dict[str, float]:
+        now = time.perf_counter() if now is None else now
+        self._trim(now)
+        n = len(self._pts)
+        if not n:
+            return {"last": self.last, "mean": self.last,
+                    "max": self.last, "n": 0}
+        vals = [v for _, v in self._pts]
+        return {"last": self.last, "mean": sum(vals) / n,
+                "max": max(vals), "n": n}
+
+
+class RateMeter:
+    """Sliding-window event rate (tokens/s): counts per unit time over
+    the trailing ``window_s`` seconds."""
+
+    def __init__(self, window_s: float = 10.0):
+        self.window_s = window_s
+        self._pts: deque = deque()      # (t, n)
+
+    def record(self, n: int = 1, now: Optional[float] = None) -> None:
+        now = time.perf_counter() if now is None else now
+        self._pts.append((now, n))
+        cut = now - self.window_s
+        pts = self._pts
+        while pts and pts[0][0] < cut:
+            pts.popleft()
+
+    def rate(self, now: Optional[float] = None) -> float:
+        now = time.perf_counter() if now is None else now
+        cut = now - self.window_s
+        pts = self._pts
+        while pts and pts[0][0] < cut:
+            pts.popleft()
+        if not pts:
+            return 0.0
+        span = max(now - pts[0][0], 1e-9)
+        return sum(n for _, n in pts) / span
 
 
 class ServeMetrics:
-    def __init__(self, slots: int):
+    def __init__(self, slots: int, tracer=NULL_TRACER,
+                 metrics_every: int = 0, gauge_window_s: float = 10.0):
         self.slots = max(1, slots)
+        self.tracer = tracer
+        self.metrics_every = metrics_every
+        self.gauge_window_s = gauge_window_s
         self.reset()
 
     def reset(self) -> None:
@@ -42,8 +209,10 @@ class ServeMetrics:
         self.truncated = 0
         self.emitted_tokens = 0
         self.completed_tokens = 0
-        self.ttft_s: List[float] = []
-        self.latency_s: List[float] = []
+        self.ttft = StreamingHistogram()
+        self.latency = StreamingHistogram()
+        self.step_hist = StreamingHistogram()
+        self.prefill_hist = StreamingHistogram()
         self.decode_steps = 0
         self.decode_time_s = 0.0
         self.live_slot_s = 0.0
@@ -54,21 +223,28 @@ class ServeMetrics:
         self.prefix_hits = 0
         self.prefix_misses = 0
         self.prefix_hit_tokens = 0
+        self.stragglers = {"decode": 0, "prefill": 0}
+        self.watchdog_fires = 0
+        self.polls = 0
+        self.gauges: Dict[str, WindowedGauge] = {}
+        self.tok_rate = RateMeter(self.gauge_window_s)
+        self.snapshots: List[dict] = []
 
     # -- event hooks -------------------------------------------------------
     def record_arrival(self) -> None:
         self.arrivals += 1
 
     def record_first_token(self, ttft_s: float) -> None:
-        self.ttft_s.append(ttft_s)
+        self.ttft.add(ttft_s)
 
     def record_token(self, n: int = 1) -> None:
         self.emitted_tokens += n
+        self.tok_rate.record(n)
 
     def record_finish(self, latency_s: float, n_tokens: int) -> None:
         self.completed += 1
         self.completed_tokens += n_tokens
-        self.latency_s.append(latency_s)
+        self.latency.add(latency_s)
 
     def record_shed(self) -> None:
         self.shed += 1
@@ -78,6 +254,7 @@ class ServeMetrics:
         self.decode_steps += 1
         self.decode_time_s += dt_s
         self.live_slot_s += live_slots * dt_s
+        self.step_hist.add(dt_s)
 
     def record_wall(self, dt_s: float) -> None:
         self.wall_s += dt_s
@@ -88,6 +265,7 @@ class ServeMetrics:
         self.prefill_chunks += 1
         self.prefill_tokens += tokens
         self.prefill_time_s += dt_s
+        self.prefill_hist.add(dt_s)
 
     def record_prefix_lookup(self, matched_tokens: int) -> None:
         """One prefix-cache admission lookup: ``matched_tokens`` prompt
@@ -98,12 +276,76 @@ class ServeMetrics:
         else:
             self.prefix_misses += 1
 
+    def record_straggler(self, kind: str) -> None:
+        """A StepMonitor flagged one decode/prefill step as a straggler."""
+        self.stragglers[kind] = self.stragglers.get(kind, 0) + 1
+
+    def observe_gauges(self, **values: float) -> None:
+        """Per-poll gauge samples from the engine (queue depth, staging
+        depth, live slots, prefix-cache resident bytes, ...)."""
+        for key, v in values.items():
+            g = self.gauges.get(key)
+            if g is None:
+                g = self.gauges[key] = WindowedGauge(self.gauge_window_s)
+            g.record(v)
+
+    # -- periodic snapshots ------------------------------------------------
+    def maybe_snapshot(self,
+                       extra_fn: Optional[Callable[[], dict]] = None) -> None:
+        """Count one engine poll; every ``metrics_every`` polls (0 = off)
+        take a point-in-time snapshot — appended to ``self.snapshots``
+        and emitted into the tracer (a counter sample for the plottable
+        series plus a full structured instant for the JSONL log)."""
+        self.polls += 1
+        if not self.metrics_every or self.polls % self.metrics_every:
+            return
+        snap = self.snapshot()
+        if extra_fn is not None:
+            snap.update(extra_fn())
+        self.snapshots.append(snap)
+        if self.tracer.enabled:
+            self.tracer.counter("serve_gauges", {
+                "queue_depth": snap["gauges"].get("queue_depth",
+                                                  {}).get("last", 0.0),
+                "staging_depth": snap["gauges"].get("staging_depth",
+                                                    {}).get("last", 0.0),
+                "live_slots": snap["gauges"].get("live_slots",
+                                                 {}).get("last", 0.0),
+                "tokens_per_s": snap["tokens_per_s_window"],
+                "prefix_resident_mb": snap["gauges"].get(
+                    "prefix_resident_bytes", {}).get("last", 0.0) / 2 ** 20,
+            })
+            self.tracer.instant("metrics_snapshot", **snap)
+
+    def snapshot(self) -> dict:
+        """Point-in-time view: cumulative counters + windowed gauges +
+        histogram quick stats (cheap — no stored samples to fold)."""
+        return {
+            "polls": self.polls,
+            "arrivals": self.arrivals,
+            "completed": self.completed,
+            "shed": self.shed,
+            "emitted_tokens": self.emitted_tokens,
+            "tokens_per_s_window": self.tok_rate.rate(),
+            "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "stragglers": dict(self.stragglers),
+            "watchdog_fires": self.watchdog_fires,
+            "ttft": self.ttft.summary(),
+            "decode_step": self.step_hist.summary(),
+            "prefill_call": self.prefill_hist.summary(),
+            "gauges": {k: g.snapshot() for k, g in self.gauges.items()},
+        }
+
     # -- rollup ------------------------------------------------------------
     def summary(self) -> Dict[str, float]:
-        """Throughput figures use recorded wall time; when the caller never
-        stamped one (poll()-style driving), decode time is the best
-        available denominator and throughput is an upper bound."""
+        """Cumulative KPI rollup.  ``wall_source`` says which denominator
+        the throughput figures used (see module docstring) — decode time
+        is an upper-bound fallback, not a silent substitute."""
         wall = self.wall_s or self.decode_time_s
+        wall_source = ("measured" if self.wall_s else
+                       "decode_time" if self.decode_time_s else "none")
         return {
             "requests": self.arrivals,
             "completed": self.completed,
@@ -112,22 +354,26 @@ class ServeMetrics:
             "tokens_per_s": self.emitted_tokens / wall if wall else 0.0,
             "goodput_tokens_per_s":
                 self.completed_tokens / wall if wall else 0.0,
-            "ttft_mean_s": (sum(self.ttft_s) / len(self.ttft_s)
-                            if self.ttft_s else 0.0),
-            "ttft_p90_s": _percentile(self.ttft_s, 0.9),
-            "ttft_p95_s": _percentile(self.ttft_s, 0.95),
+            "ttft_mean_s": self.ttft.mean,
+            "ttft_p50_s": self.ttft.percentile(0.50),
+            "ttft_p90_s": self.ttft.percentile(0.90),
+            "ttft_p95_s": self.ttft.percentile(0.95),
+            "ttft_p99_s": self.ttft.percentile(0.99),
             "prefill_chunks": self.prefill_chunks,
             "prefill_tokens": self.prefill_tokens,
             "prefill_time_s": self.prefill_time_s,
             "prefix_hits": self.prefix_hits,
             "prefix_misses": self.prefix_misses,
             "prefix_hit_tokens": self.prefix_hit_tokens,
-            "latency_mean_s": (sum(self.latency_s) / len(self.latency_s)
-                               if self.latency_s else 0.0),
+            "latency_mean_s": self.latency.mean,
             "token_latency_s": (self.decode_time_s / self.decode_steps
                                 if self.decode_steps else 0.0),
             "slot_occupancy": (self.live_slot_s /
                                (self.slots * self.decode_time_s)
                                if self.decode_time_s else 0.0),
+            "stragglers_decode": self.stragglers.get("decode", 0),
+            "stragglers_prefill": self.stragglers.get("prefill", 0),
+            "watchdog_fires": self.watchdog_fires,
             "wall_s": wall,
+            "wall_source": wall_source,
         }

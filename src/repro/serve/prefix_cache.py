@@ -59,6 +59,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.serve.tracing import NULL_TRACER
+
 
 def snapshot_nbytes(snapshot) -> int:
     """True host bytes of a snapshot pytree."""
@@ -98,11 +100,12 @@ class _Node:
 class PrefixCache:
     """Token-keyed radix cache of chunk-boundary state snapshots."""
 
-    def __init__(self, capacity_bytes: int, chunk: int):
+    def __init__(self, capacity_bytes: int, chunk: int, tracer=NULL_TRACER):
         if chunk <= 0:
             raise ValueError("prefix cache chunk must be positive")
         self.capacity_bytes = int(capacity_bytes)
         self.chunk = int(chunk)
+        self.tracer = tracer
         self.root = _Node(None, None, None, 0, 0)
         self._nodes: List[_Node] = []
         self.resident_bytes = 0
@@ -181,6 +184,8 @@ class PrefixCache:
         nbytes = snapshot_nbytes(snapshot)
         if not self._make_room(nbytes):
             self.inserts_refused += 1
+            self.tracer.instant("prefix_insert_refused", nbytes=nbytes,
+                                resident_bytes=self.resident_bytes)
             return None
         self._clock += 1
         child = _Node(chunk, parent, snapshot, nbytes, self._clock)
@@ -222,6 +227,8 @@ class PrefixCache:
         self.resident_bytes -= node.nbytes
         node.snapshot = None
         self.evictions += 1
+        self.tracer.instant("prefix_evict", nbytes=node.nbytes,
+                            resident_bytes=self.resident_bytes)
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:

@@ -14,6 +14,8 @@ import logging
 import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
+from repro.serve.tracing import NULL_TRACER
+
 log = logging.getLogger("repro.serve")
 
 
@@ -35,6 +37,9 @@ class Request:
     arrival_s: float = 0.0
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
+    # -- tracing (time.perf_counter() stamps; serve/tracing.py) -------------
+    admit_pc: Optional[float] = None     # popped from the queue
+    decode_pc: Optional[float] = None    # first token -> decode residency
     # -- streaming ----------------------------------------------------------
     on_token: Optional[Callable[[int, int], None]] = None  # (uid, token)
 
@@ -107,10 +112,11 @@ class Scheduler:
     they land in ``self.expired`` for the caller to report.
     """
 
-    def __init__(self, policy: str = "fcfs"):
+    def __init__(self, policy: str = "fcfs", tracer=None):
         if policy not in ("fcfs", "priority"):
             raise ValueError(f"unknown scheduler policy {policy!r}")
         self.policy = policy
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._heap: List[Tuple[Tuple[int, int], Request]] = []
         self._seq = 0
         self.expired: List[Request] = []
@@ -131,6 +137,8 @@ class Scheduler:
                 req.expired = True
                 req.done = True
                 self.expired.append(req)
+                self.tracer.instant("shed", uid=req.uid,
+                                    queued_s=now - req.arrival_s)
                 log.warning("request %d: deadline missed while queued; "
                             "shedding", req.uid)
                 continue

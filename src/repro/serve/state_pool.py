@@ -33,6 +33,8 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.serve.tracing import NULL_TRACER
+
 Array = jax.Array
 
 
@@ -119,11 +121,13 @@ class StatePool:
     one-shot allocation pay nothing for it.
     """
 
-    def __init__(self, model, slots: int, max_seq: int, dtype):
+    def __init__(self, model, slots: int, max_seq: int, dtype,
+                 tracer=NULL_TRACER):
         self.model = model
         self.slots = slots
         self.max_seq = max_seq
         self.dtype = dtype
+        self.tracer = tracer
         self.cache = model.init_cache(slots, max_seq, dtype)
         self._axes = None
         self._insert = None
@@ -160,9 +164,10 @@ class StatePool:
         ``slots[i]`` (e.g. rows of a fresh per-bucket prefill)."""
         if self._insert is None:
             self._build_ops()
-        for r, s in zip(src_rows, slots):
-            self.cache = self._insert(self.cache, src_cache,
-                                      jnp.int32(r), jnp.int32(s))
+        with self.tracer.span("pool_insert", rows=len(slots)):
+            for r, s in zip(src_rows, slots):
+                self.cache = self._insert(self.cache, src_cache,
+                                          jnp.int32(r), jnp.int32(s))
 
     def extract_rows(self, slots: Sequence[int]):
         """Gather slot rows; returns a cache pytree with batch = len(slots)
@@ -189,21 +194,24 @@ class StatePool:
         primitive (``serve/prefix_cache.py``) and the debug/migration
         snapshot; delegates to ``model.export_state`` so the pool and the
         model-level snapshot API stay one code path."""
-        return self.model.export_state(self.cache, index, [slot])
+        with self.tracer.span("snapshot_export", slot=slot):
+            return self.model.export_state(self.cache, index, [slot])
 
     def restore_row(self, slot: int, snapshot, index=None) -> None:
         """Inverse of :meth:`clone_row`: scatter a host snapshot back into
         one slot row (jitted row scatter, arena donated in place)."""
-        self.cache = self.model.import_state(self.cache, index, [slot],
-                                             snapshot)
+        with self.tracer.span("snapshot_restore", slot=slot):
+            self.cache = self.model.import_state(self.cache, index, [slot],
+                                                 snapshot)
 
     def reset_rows(self, slots: Sequence[int]) -> None:
         """Zero slot rows (freed slots carry no state into their next
         tenant; insert_rows overwrites anyway, this is belt-and-braces)."""
         if self._reset is None:
             self._build_ops()
-        for s in slots:
-            self.cache = self._reset(self.cache, jnp.int32(s))
+        with self.tracer.span("pool_reset", rows=len(slots)):
+            for s in slots:
+                self.cache = self._reset(self.cache, jnp.int32(s))
 
     # ------------------------------------------------------------------
     def compile_counts(self) -> dict:

@@ -427,4 +427,4 @@ def test_streaming_callback_and_metrics():
     assert m["completed"] == 3
     assert m["generated_tokens"] == sum(len(r.out_tokens) for r in done)
     assert 0.0 < m["slot_occupancy"] <= 1.0
-    assert len(eng.metrics.ttft_s) == 3
+    assert eng.metrics.ttft.count == 3
