@@ -2,9 +2,9 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test smoke-serve smoke-prefill-chunk smoke-prefix smoke-trace \
-    smoke-decode smoke-quant smoke-quickstart linkcheck bench-serve \
-    bench-json hlo-diff ci
+.PHONY: test smoke-serve smoke-prefill-chunk smoke-prefill-fused \
+    smoke-prefix smoke-trace smoke-decode smoke-quant smoke-quickstart \
+    linkcheck bench-serve bench-json hlo-diff ci
 
 test:
 	$(PY) -m pytest -x -q
@@ -17,6 +17,14 @@ smoke-prefill-chunk:
 	$(PY) -m repro.launch.serve --arch mamba2-130m --reduced \
 	    --engine continuous --requests 4 --batch 2 --max-new 4 \
 	    --prefill-chunk 8
+
+# Fused SSD prefill pipeline smoke (docs/architecture.md, Prefill modes):
+# a chunked continuous-serve run through the one-kernel Pallas pipeline
+# in interpret mode, asserting greedy outputs byte-identical to the
+# unfused chain and compile-once counters (one prefill_chunk program,
+# one decode program, zero recompiles).
+smoke-prefill-fused:
+	$(PY) scripts/smoke_prefill_fused.py
 
 # W8 quantization smoke: the interpret-mode parity slice only (kernel vs
 # oracle + mamba2 w8_pallas_interpret vs w8 model parity — `make test`
@@ -71,5 +79,6 @@ hlo-diff:
 	$(PY) -m repro.launch.hlo_analysis --arch mamba2-130m $(ARGS)
 	$(PY) -m repro.launch.hlo_analysis --arch mamba-130m $(ARGS)
 
-ci: test smoke-decode smoke-serve smoke-prefill-chunk smoke-prefix \
-    smoke-trace smoke-quant smoke-quickstart linkcheck bench-json
+ci: test smoke-decode smoke-serve smoke-prefill-chunk smoke-prefill-fused \
+    smoke-prefix smoke-trace smoke-quant smoke-quickstart linkcheck \
+    bench-json

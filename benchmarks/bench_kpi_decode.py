@@ -138,6 +138,75 @@ def bench_families(smoke: bool = False, batch: int = 1) -> dict:
     return out
 
 
+def bench_prefill(smoke: bool = False, batch: int = 2,
+                  seqlen: int = 128) -> dict:
+    """Prefill arm: whole-sequence prompt ingestion, fused vs unfused.
+
+    The *unfused* arm runs ``XambaConfig.prefill="naive"`` — the legacy
+    op chain (separate in-projection, causal conv, activations, SSD
+    core, gated norm, each a distinct XLA computation with HBM
+    round-trips between them).  The *fused* arm runs the default
+    ``prefill="cumba"`` single-pass pipeline (`kernels/prefill_chunk`).
+    Only the mamba2 (SSD) family has a fused prefill pipeline; the
+    mamba1/recurrentgemma rows are CONTROL arms — their prefill path
+    ignores the mode, so their ratio should sit at ~1.0 and any drift
+    bounds the timing noise floor for the mamba2 ratio.
+    """
+    iters = 8 if smoke else 24
+    out = {}
+    for arch in FAMILIES:
+        base_cfg = get_config(arch, reduced=True).replace(
+            param_dtype="float32")
+        arms = {
+            mode: base_cfg.replace(xamba=dataclasses.replace(
+                XambaConfig.optimized(), prefill=mode))
+            for mode in ("naive", "cumba")
+        }
+        params = init_params(build_model(arms["naive"]).param_specs(),
+                             jax.random.PRNGKey(0), jnp.float32)
+        toks = jnp.asarray(
+            np.random.default_rng(0).integers(
+                1, base_cfg.vocab_size, (batch, seqlen)), jnp.int32)
+
+        calls, logits_by = [], {}
+        for mode, cfg in arms.items():
+            model = build_model(cfg)
+            cache = model.init_cache(batch, seqlen, jnp.float32)
+            pf = jax.jit(lambda p, t, c, m=model:
+                         m.prefill(p, {"tokens": t}, c))
+
+            def call(pf=pf, cache=cache):
+                logits, _ = pf(params, toks, cache)
+                jax.block_until_ready(logits)
+
+            calls.append(call)
+            logits_by[mode] = pf(params, toks, cache)[0]
+        t_naive, t_fused = _time_interleaved(calls, iters=iters)
+        toks_total = batch * seqlen
+        greedy_same = bool(
+            (jnp.argmax(logits_by["naive"], -1)
+             == jnp.argmax(logits_by["cumba"], -1)).all())
+        out[arch] = {
+            "unfused_tok_s": round(toks_total / t_naive, 1),
+            "fused_tok_s": round(toks_total / t_fused, 1),
+            "speedup": round(t_naive / t_fused, 2),
+            "greedy_match": greedy_same,
+            "control_arm": not arch.startswith("mamba2"),
+        }
+        emit(f"kpi.prefill.{arch}.unfused", t_naive * 1e6,
+             f"tokens_per_s={toks_total / t_naive:.1f}")
+        emit(f"kpi.prefill.{arch}.fused", t_fused * 1e6,
+             f"tokens_per_s={toks_total / t_fused:.1f};"
+             f"speedup={t_naive / t_fused:.2f}x")
+    out["note"] = ("fused = XambaConfig.prefill='cumba' single-pass SSD "
+                   "prefill pipeline (kernels/prefill_chunk); unfused = "
+                   "prefill='naive' legacy op chain.  Only mamba2 has a "
+                   "fused prefill path — other families are control arms "
+                   "(ratio ~1.0 bounds timing noise).  batch=%d seqlen=%d"
+                   % (batch, seqlen))
+    return out
+
+
 def bench_kpi_full() -> dict:
     """Full 130M models through the decode path, per XAMBA variant.
 
@@ -231,6 +300,7 @@ def run(smoke: bool = False) -> dict:
         "batch": 1,
         "families": families,
         "speedup_reduced_mamba2": families["mamba2-130m"]["speedup"],
+        "prefill": bench_prefill(smoke=smoke),
     }
     # The accuracy column of the W8 trade rides along with the perf
     # numbers (full sweep + JSON in benchmarks/bench_table1_quality.py).

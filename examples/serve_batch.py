@@ -31,6 +31,12 @@ def main():
     ap.add_argument("--decode-mode", default=None, choices=DECODE_MODES,
                     help="XambaConfig.decode: how the fused single-token "
                          "step executes (default: the config's mode)")
+    from repro.core.xamba import PREFILL_MODES
+    ap.add_argument("--prefill-mode", default=None, choices=PREFILL_MODES,
+                    help="XambaConfig.prefill: how the multi-token SSD "
+                         "prefill pipeline executes (naive = unfused "
+                         "chain, cumba = fused XLA pipeline, pallas* = "
+                         "the one-kernel Pallas pipeline)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="continuous engine: admit prompts this many "
                          "tokens per step instead of one monolithic "
@@ -50,6 +56,8 @@ def main():
     cfg = get_config(args.arch, reduced=True)
     if args.decode_mode:
         cfg = cfg.with_decode_mode(args.decode_mode)
+    if args.prefill_mode:
+        cfg = cfg.with_prefill_mode(args.prefill_mode)
     if args.quant != "none":
         cfg = cfg.with_quant(args.quant)
     model = build_model(cfg)

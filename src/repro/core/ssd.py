@@ -29,6 +29,7 @@ see ``models/base.py: DecodeAPI.prefill_chunk``).
 """
 from __future__ import annotations
 
+import logging
 from typing import Optional, Tuple
 
 import jax
@@ -39,6 +40,8 @@ from repro.core import segsum as xsegsum
 from repro.core.xamba import XambaConfig
 
 Array = jax.Array
+
+log = logging.getLogger("repro.ssd")
 
 
 def _split_chunks(x: Array, chunk: int) -> Array:
@@ -146,7 +149,16 @@ def ssd(x: Array, dt: Array, A: Array, B: Array, C: Array, *,
     # chunk axis sharded, the batched path is already one-chunk-per-device
     # memory AND avoids serializing across the mesh.
     use_scan = nchunks_ > 8 and not chunk_parallel
-    if cs_mode in ("pallas", "pallas_interpret") and chunk_size % 128 == 0:
+    # 64-multiples are MXU-viable (the compiler pads the (L, L) decay
+    # block's lane dim); below that the padding overhead wins, so fall
+    # back to the XLA chain — loudly, at trace time, so a pallas request
+    # never silently runs unfused.
+    use_kernel = cs_mode in ("pallas", "pallas_interpret")
+    if use_kernel and chunk_size % 64:
+        log.info("ssd_chunk kernel (%s) skipped: chunk %d not a multiple "
+                 "of 64 — running the XLA chain", cs_mode, chunk_size)
+        use_kernel = False
+    if use_kernel:
         from repro.kernels import ops as kops
         y_diag, states = kops.ssd_chunk(
             x_c, a_c, A_cum, B_c, C_c,

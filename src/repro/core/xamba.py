@@ -23,6 +23,14 @@ from typing import Tuple
 CUMSUM_MODES = ("naive", "cumba", "pallas", "pallas_interpret")
 REDUCE_MODES = ("naive", "reduba", "pallas", "pallas_interpret")
 DECODE_MODES = ("naive", "cumba", "pallas", "pallas_interpret")
+# Multi-token prefill pipeline (conv + SiLU + softplus(dt) + SSD chunk scan
+# + gated norm in one pass): ``naive`` = the historical unfused op chain
+# (projection -> conv -> segsum -> chunk scan -> gate, each a separate XLA
+# op group); ``cumba`` = the fused-structure single-pass XLA pipeline
+# (``kernels/prefill_chunk.py: mamba2_prefill_xla``); ``pallas`` = the
+# one-kernel Pallas pipeline (``_interpret`` runs it on CPU).  Applies to
+# the SSD (mamba2) family; other mixers keep their existing prefill path.
+PREFILL_MODES = ("naive", "cumba", "pallas", "pallas_interpret")
 # Weight quantization (paper Step-3's precision trade, serving-backend
 # form): ``none`` = fp weights; ``w8`` = int8 per-channel weights executed
 # via dot_general-on-int8 (portable XLA path); ``w8_pallas`` = the fused
@@ -42,6 +50,10 @@ class XambaConfig:
     # (the dense NPU-baseline op structure), ``cumba`` = fused MXU remap,
     # ``pallas`` = the fused decode-step kernel (``kernels/decode_step.py``).
     decode: str = "cumba"
+    # Multi-token prefill: ``naive`` = unfused op chain, ``cumba`` = fused
+    # single-pass XLA pipeline, ``pallas`` = the one-kernel prefill
+    # pipeline (``kernels/prefill_chunk.py``).
+    prefill: str = "cumba"
     # Step-3: activations -> piecewise-linear (paper Fig. 2e, "ActiBA").
     actiba: bool = False
     actiba_segments: int = 32
@@ -62,6 +74,9 @@ class XambaConfig:
             raise ValueError(f"reduba mode {self.reduba!r} not in {REDUCE_MODES}")
         if self.decode not in DECODE_MODES:
             raise ValueError(f"decode mode {self.decode!r} not in {DECODE_MODES}")
+        if self.prefill not in PREFILL_MODES:
+            raise ValueError(
+                f"prefill mode {self.prefill!r} not in {PREFILL_MODES}")
         if self.actiba_segments < 2:
             raise ValueError("actiba_segments must be >= 2")
 
@@ -69,22 +84,24 @@ class XambaConfig:
     @classmethod
     def baseline(cls) -> "XambaConfig":
         """The unoptimized NPU-style execution (paper's baseline)."""
-        return cls(cumba="naive", reduba="naive", decode="naive", actiba=False)
+        return cls(cumba="naive", reduba="naive", decode="naive",
+                   prefill="naive", actiba=False)
 
     @classmethod
     def optimized(cls) -> "XambaConfig":
         """CumBA + ReduBA (paper step-2, exact numerics)."""
         return cls(cumba="cumba", reduba="reduba", decode="cumba",
-                   actiba=False)
+                   prefill="cumba", actiba=False)
 
     @classmethod
     def full(cls, segments: int = 32) -> "XambaConfig":
         """CumBA + ReduBA + ActiBA (paper step-2 + step-3)."""
         return cls(cumba="cumba", reduba="reduba", decode="cumba",
-                   actiba=True, actiba_segments=segments)
+                   prefill="cumba", actiba=True, actiba_segments=segments)
 
     @classmethod
     def pallas(cls, interpret: bool = False) -> "XambaConfig":
         """Kernel-backed variants (TPU target; interpret=True on CPU)."""
         mode = "pallas_interpret" if interpret else "pallas"
-        return cls(cumba=mode, reduba=mode, decode=mode, actiba=True)
+        return cls(cumba=mode, reduba=mode, decode=mode, prefill=mode,
+                   actiba=True)

@@ -11,6 +11,7 @@ from functools import partial
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import pwl
 from repro.core.pwl import PWLTable
@@ -117,6 +118,38 @@ def mamba2_decode_step(z, xbc, dt, conv_state, ssm_state, conv_w, conv_b,
         norm_scale, ngroups=ngroups, head_dim=head_dim,
         silu=pwl.activation("silu", xamba),
         softplus=pwl.activation("softplus", xamba), interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("ngroups", "head_dim", "chunk",
+                                   "xamba", "mode"))
+def mamba2_prefill(x, in_w, conv_state, ssm_state, conv_w, conv_b, dt_bias,
+                   A, D, norm_scale, *, ngroups: int, head_dim: int,
+                   chunk: int, xamba=None, mode: str = "cumba"):
+    """Fused Mamba-2 multi-token prefill (``XambaConfig.prefill``):
+    in-projection (W8-fused when ``in_w`` is quantized) + conv + SiLU +
+    softplus(dt) + chunked SSD scan + gated norm in one pass.
+
+    ``mode``: ``cumba`` = fused-structure XLA pipeline; ``pallas`` /
+    ``pallas_interpret`` = the one-kernel Pallas pipeline.  Returns
+    ``(y, new_conv, new_ssm)`` with ``y`` the pre-out-projection gated
+    mixer output (b, l, d_inner) in the stream dtype of ``x``.
+    """
+    from repro.kernels import prefill_chunk as _pc
+    di = norm_scale.shape[-1]
+    g, n = ngroups, ssm_state.shape[-1]
+    zxbcdt = _pc.project_in(x, in_w)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    kwargs = dict(ngroups=g, head_dim=head_dim, chunk=chunk,
+                  silu=pwl.activation("silu", xamba),
+                  softplus=pwl.activation("softplus", xamba))
+    if mode in ("pallas", "pallas_interpret"):
+        return _pc.mamba2_prefill_pallas(
+            z, xbc, dt, conv_state, ssm_state, conv_w, conv_b, dt_bias,
+            A, D, norm_scale, interpret=(mode == "pallas_interpret"),
+            **kwargs)
+    return _pc.mamba2_prefill_xla(
+        z, xbc, dt, conv_state, ssm_state, conv_w, conv_b, dt_bias,
+        A, D, norm_scale, **kwargs)
 
 
 @partial(jax.jit, static_argnames=("dt_rank", "xamba", "interpret"))

@@ -164,6 +164,39 @@ def mamba2_step_ref(z, xbc, dt, conv_state, ssm_state, conv_w, conv_b,
             new.astype(jnp.float32))
 
 
+def mamba2_prefill_ref(z, xbc, dt, conv_state, ssm_state, conv_w, conv_b,
+                       dt_bias, A, D, norm_scale, *, ngroups, head_dim,
+                       silu=jax.nn.silu, softplus=jax.nn.softplus,
+                       eps=1e-6):
+    """Fused prefill-pipeline oracle (shapes as kernels.prefill_chunk):
+    plain-jnp conv + activations feeding the exact sequential SSD
+    recurrence (``core.ssd.ssd_reference``), then the gated-norm
+    epilogue.  z: (b, l, di); xbc: (b, l, dxbc); dt raw (b, l, h)."""
+    from repro.core.ssd import ssd_reference
+    b, l, di = z.shape
+    g, p = ngroups, head_dim
+    h = dt.shape[-1]
+    n = (xbc.shape[-1] - di) // (2 * g)
+    width = conv_w.shape[0]
+    win = jnp.concatenate([conv_state.astype(jnp.float32),
+                           xbc.astype(jnp.float32)], axis=1)
+    conv = sum(win[:, i:i + l] * conv_w.astype(jnp.float32)[i]
+               for i in range(width)) + conv_b.astype(jnp.float32)
+    act = silu(conv)
+    xs = act[..., :di].reshape(b, l, h, p)
+    B = act[..., di:di + g * n].reshape(b, l, g, n)
+    C = act[..., di + g * n:].reshape(b, l, g, n)
+    dt_f = softplus(dt.astype(jnp.float32) + dt_bias.astype(jnp.float32))
+    y, new_ssm = ssd_reference(xs, dt_f, A, B, C, initial_state=ssm_state)
+    y = y + xs * D.astype(jnp.float32)[None, None, :, None]
+    yf = y.reshape(b, l, di)
+    ms = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(ms + eps) * norm_scale.astype(jnp.float32)
+    out = yn * silu(z.astype(jnp.float32))
+    return (out, win[:, l:].astype(conv_state.dtype),
+            new_ssm.astype(jnp.float32))
+
+
 def mamba1_step_ref(xs_raw, z, conv_state, ssm_state, conv_w, conv_b,
                     xproj_w, dtproj_w, dtproj_b, A, D, *, dt_rank,
                     silu=jax.nn.silu, softplus=jax.nn.softplus):

@@ -17,7 +17,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.xamba import DECODE_MODES, QUANT_MODES
+from repro.core.xamba import DECODE_MODES, PREFILL_MODES, QUANT_MODES
 from repro.models import build_model
 from repro.nn import quant
 from repro.nn.params import init_params
@@ -42,6 +42,10 @@ def main(argv=None):
     ap.add_argument("--decode-mode", default=None, choices=DECODE_MODES,
                     help="XambaConfig.decode mode for the fused "
                          "single-token step")
+    ap.add_argument("--prefill-mode", default=None, choices=PREFILL_MODES,
+                    help="XambaConfig.prefill mode for the fused "
+                         "multi-token SSD prefill pipeline (naive = the "
+                         "unfused op chain)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill: prompts advance this many "
                          "tokens per engine step, interleaved with decode "
@@ -89,6 +93,8 @@ def main(argv=None):
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.decode_mode:
         cfg = cfg.with_decode_mode(args.decode_mode)
+    if args.prefill_mode:
+        cfg = cfg.with_prefill_mode(args.prefill_mode)
     if args.quant != "none":
         cfg = cfg.with_quant(args.quant)
     model = build_model(cfg)

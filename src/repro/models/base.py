@@ -262,6 +262,12 @@ class ModelConfig:
         return self.replace(xamba=dataclasses.replace(self.xamba,
                                                       decode=mode))
 
+    def with_prefill_mode(self, mode: str) -> "ModelConfig":
+        """Config with ``XambaConfig.prefill`` overridden (CLI plumbing):
+        how the multi-token SSD prefill pipeline executes."""
+        return self.replace(xamba=dataclasses.replace(self.xamba,
+                                                      prefill=mode))
+
     def with_quant(self, mode: str) -> "ModelConfig":
         """Config with ``XambaConfig.quant`` overridden (CLI plumbing);
         pair with ``nn.quant.quantize_params_for_mode`` on the params."""

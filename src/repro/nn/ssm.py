@@ -18,6 +18,7 @@ leans on (``models/base.py: DecodeAPI.prefill_chunk``).
 """
 from __future__ import annotations
 
+import logging
 import math
 from typing import NamedTuple, Optional, Tuple
 
@@ -31,6 +32,8 @@ from repro.nn import layers, quant
 from repro.nn.params import ParamSpec
 
 Array = jax.Array
+
+log = logging.getLogger("repro.ssm")
 
 
 # ============================================================================
@@ -163,6 +166,43 @@ def mamba2_apply(params: dict, cfg, x: Array,
 
     if state is not None and l == 1 and not cfg.force_prefill_path:
         return _mamba2_decode(params, cfg, x, state)
+
+    pf_mode = xamba.prefill
+    if pf_mode != "naive":
+        # Trace-time eligibility gate: the fused pipeline takes RAW dt and
+        # the live conv tail, so it cannot hide ineligible shapes behind
+        # dt=0 padding the way ``core/ssd.py`` does — it requires exact
+        # chunking and falls back to the unfused chain otherwise.
+        chunk = min(cfg.chunk_size, l)
+        reason = None
+        if cfg.ssd_dtype != "float32":
+            reason = f"ssd_dtype={cfg.ssd_dtype} (fused prefill is fp32-only)"
+        elif l % chunk:
+            reason = f"seqlen {l} not a multiple of chunk {chunk}"
+        elif pf_mode == "pallas" and chunk % 64:
+            reason = f"chunk {chunk} not a multiple of 64 (MXU tiling)"
+        if reason is None:
+            from repro.kernels import ops as kops
+            if state is not None:
+                conv_state, init = state.conv, state.ssm
+            else:
+                d_xbc = d_inner + 2 * g * n
+                conv_state = jnp.zeros((b, cfg.d_conv - 1, d_xbc), x.dtype)
+                init = jnp.zeros((b, nheads, p_hd, n), jnp.float32)
+            A = -jnp.exp(params["A_log"].astype(jnp.float32))
+            y, new_conv, new_ssm = kops.mamba2_prefill(
+                x, params["in_proj"]["w"], conv_state, init,
+                params["conv"]["w"], params["conv"]["b"],
+                params["dt_bias"], A, params["D"], params["norm"]["scale"],
+                ngroups=g, head_dim=p_hd, chunk=chunk, xamba=xamba,
+                mode=pf_mode)
+            out = layers.linear(params["out_proj"], y.astype(x.dtype))
+            new_state = (Mamba2State(new_conv, new_ssm)
+                         if state is not None else None)
+            return out, new_state
+        # Fires once per compiled shape (trace-time), not per call.
+        log.info("fused prefill (%s) skipped: %s — running the unfused "
+                 "chain", pf_mode, reason)
 
     silu = pwl.activation("silu", xamba)
     softplus = pwl.activation("softplus", xamba)
