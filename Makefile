@@ -2,12 +2,19 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test smoke-serve smoke-prefill-chunk smoke-prefill-fused \
-    smoke-prefix smoke-trace smoke-decode smoke-quant smoke-quickstart \
-    linkcheck bench-serve bench-json hlo-diff ci
+.PHONY: test test-cov smoke-serve smoke-prefill-chunk smoke-prefill-fused \
+    smoke-prefix smoke-trace smoke-spec smoke-decode smoke-quant \
+    smoke-quickstart linkcheck bench-serve bench-json hlo-diff ci
 
 test:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q --durations=15
+
+# CI variant: tier-1 under pytest-cov (not a local dependency — CI
+# installs it from requirements-dev.txt); coverage.xml is uploaded as a
+# build artifact.
+test-cov:
+	$(PY) -m pytest -x -q --durations=15 --cov=repro \
+	    --cov-report=term --cov-report=xml
 
 smoke-serve:
 	$(PY) -m repro.launch.serve --arch mamba2-130m --reduced \
@@ -48,13 +55,23 @@ smoke-prefix:
 # self-times reconcile with wall within 5% and the compile-once programs
 # (decode, prefill_chunk) never retraced after warmup (the recompile
 # sentinel would also have raised at the offending step via
-# --strict-recompile).  CI uploads serve_trace.json as an artifact.
+# --strict-recompile).  The trace lands in TRACE_DIR (default: a fresh
+# mktemp dir, so the repo root stays clean); CI points TRACE_DIR at
+# runner temp and uploads serve_trace.json from there.
 smoke-trace:
+	@d="$(TRACE_DIR)"; d="$${d:-$$(mktemp -d)}"; \
+	echo "trace dir: $$d"; \
 	$(PY) -m repro.launch.serve --arch mamba2-130m --reduced \
 	    --engine continuous --requests 6 --batch 2 --max-new 6 \
 	    --prefill-chunk 8 --metrics-every 4 --strict-recompile \
-	    --trace serve_trace.json
-	$(PY) -m repro.launch.trace_report serve_trace.json --check
+	    --trace "$$d/serve_trace.json" && \
+	$(PY) -m repro.launch.trace_report "$$d/serve_trace.json" --check
+
+# Self-speculative decoding smoke: greedy outputs byte-identical spec on
+# vs off, accept_rate > 0, and zero post-warmup recompiles
+# (scripts/smoke_speculative.py raises on any violation).
+smoke-spec:
+	$(PY) scripts/smoke_speculative.py
 
 smoke-quickstart:
 	$(PY) examples/quickstart.py
@@ -80,5 +97,5 @@ hlo-diff:
 	$(PY) -m repro.launch.hlo_analysis --arch mamba-130m $(ARGS)
 
 ci: test smoke-decode smoke-serve smoke-prefill-chunk smoke-prefill-fused \
-    smoke-prefix smoke-trace smoke-quant smoke-quickstart linkcheck \
-    bench-json
+    smoke-prefix smoke-trace smoke-spec smoke-quant smoke-quickstart \
+    linkcheck bench-json

@@ -292,6 +292,178 @@ def bench_kpi_full() -> dict:
     return out
 
 
+def _spec_arm(model, params, *, draft_params, spec_k, warm, timed,
+              max_new, baseline_out=None):
+    """One end-to-end engine arm: warmup requests (all program traces),
+    ``reset_stats``, then timed requests through ``run()``.  Returns the
+    emitted streams plus tokens/s and the burst metrics."""
+    from repro.serve import ContinuousEngine, ServeConfig
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=1, prefill_buckets=(16,), max_new_tokens=max_new,
+        speculate_k=spec_k), draft_params=draft_params)
+    try:
+        for p in warm:
+            eng.submit(p)
+        eng.run()
+        eng.reset_stats()
+        t0 = time.perf_counter()
+        for p in timed:
+            eng.submit(p)
+        done = eng.run()
+        wall = time.perf_counter() - t0
+    finally:
+        eng.close()
+    out = [r.out_tokens for r in done]
+    toks = sum(len(t) for t in out)
+    m = eng.metrics.summary()
+    trips = {k: s.trips for k, s in eng.sentinels.items()}
+    row = {"tok_s": round(toks / wall, 2),
+           "recompile_trips": sum(trips.values())}
+    if spec_k:
+        row.update({
+            "k": spec_k,
+            "accept_rate": round(m["spec_accept_rate"], 3),
+            "tokens_per_verify": round(m["spec_tokens_per_verify"], 2),
+            "rollbacks": m["spec_rollbacks"],
+        })
+    if baseline_out is not None:
+        row["greedy_identical"] = bool(out == baseline_out)
+    return out, row
+
+
+def bench_speculative(smoke: bool = False) -> dict:
+    """Self-speculative decoding block: end-to-end serve tokens/s with
+    ``ServeConfig.speculate_k`` bursts vs the same engine without them.
+
+    The *headline* arms target the bf16 deployment reference — the same
+    comparison the repo's W8 claim is pinned to (``w8_vs_bf16``,
+    docs/quantization.md): on XLA-CPU, bf16 gemms run through an
+    emulation path, so bf16 is the slow deployment-format arm while
+    fp32 (and the w8 path *relative to bf16*) are the cheap arms.  Two
+    drafts are swept: ``w8`` (int8 per-channel weights with fp32 scales
+    — the paper-faithful draft) and ``fp32_master`` (the bf16 weights'
+    fp32 masters — the cheapest high-agreement draft this backend has;
+    it stands in for the NPU pairing where w8 is the fast arm).  The
+    ``fp32_control`` pair runs the same machinery against the fp32
+    non-speculative arm and is EXPECTED to lose (< 1.0x): fp32 is the
+    fastest single-token step on this backend, nothing drafts cheaper
+    than it, and the k-token verify chunk costs ~k fp32 steps — the
+    honest accounting for why the headline lives on the bf16 arm.
+
+    ``greedy_identical`` is True when the speculative arm emitted
+    byte-identical streams to its non-speculative baseline.  The fp32
+    pairs are identical by construction (tier-1 asserts it across
+    families); full-size bf16 arms can flip occasional argmaxes because
+    the batched verify chunk and the single-token step accumulate in
+    different orders under bf16 — the emitted stream is the verify
+    chunk's greedy stream either way.
+
+    k is chosen against the measured draft/verify divergence: BENCH
+    ``w8_quality.greedy_divergence_len_mean`` (w8 vs fp32: ~12 mamba1 /
+    ~27 mamba2) bounds the useful window from above; the bf16-verifier
+    divergence is shorter (the measured ``accept_rate`` here), which is
+    why k=4 beats k=8 end-to-end.
+    """
+    from repro.nn import quant as _quant
+
+    def _cast(tree, dt):
+        return jax.tree.map(
+            lambda a: a.astype(dt) if a.dtype in (jnp.float32, jnp.bfloat16)
+            else a, tree)
+
+    rng = np.random.default_rng(0)
+    out = {}
+    if smoke:
+        # Reduced fp32 smoke: exercises the path (identity + accept
+        # metrics), not the speedup — at reduced size the fp32 step is
+        # the fastest arm so the spec arm loses by design (see note).
+        cfg = get_config("mamba2-130m", reduced=True).replace(
+            param_dtype="float32")
+        model = build_model(cfg)
+        params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                             cfg.dtype)
+        prompts = [rng.integers(1, cfg.vocab_size, 12).tolist()
+                   for _ in range(5)]
+        base_out, base = _spec_arm(model, params, draft_params=None,
+                                   spec_k=0, warm=prompts[:1],
+                                   timed=prompts[1:], max_new=8)
+        _, spec = _spec_arm(model, params, draft_params=None, spec_k=4,
+                            warm=prompts[:1], timed=prompts[1:], max_new=8,
+                            baseline_out=base_out)
+        spec["speedup"] = round(spec["tok_s"] / base["tok_s"], 2)
+        out["mamba2-130m_reduced_fp32"] = {"nonspec": base, "spec_w8": spec}
+        out["note"] = ("smoke arm: reduced fp32 only — correctness and "
+                       "accept-rate plumbing, not the speedup headline "
+                       "(full run benches the bf16 deployment arm)")
+        return out
+
+    layout = {"mamba-130m": False, "mamba2-130m": True}
+    emitted_streams = {}
+    for arch in ("mamba-130m", "mamba2-130m"):
+        cfg = get_config(arch).replace(param_dtype="bfloat16",
+                                       scan_layers=layout[arch])
+        model = build_model(cfg)
+        params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                             cfg.dtype)
+        p32 = _cast(params, jnp.float32)
+        drafts = {"fp32_master": p32,
+                  "w8": _quant.quantize_params_for_mode(p32, "w8")}
+        prompts = [rng.integers(1, cfg.vocab_size, 12).tolist()
+                   for _ in range(3)]
+        warm, timed = prompts[:1], prompts[1:]
+        fam = {}
+        base_out, fam["nonspec_bf16"] = _spec_arm(
+            model, params, draft_params=None, spec_k=0, warm=warm,
+            timed=timed, max_new=10)
+        best = 0.0
+        for dname, k in (("fp32_master", 4), ("fp32_master", 8), ("w8", 4)):
+            _, row = _spec_arm(model, params, draft_params=drafts[dname],
+                               spec_k=k, warm=warm, timed=timed,
+                               max_new=10, baseline_out=base_out)
+            row["speedup"] = round(
+                row["tok_s"] / fam["nonspec_bf16"]["tok_s"], 2)
+            row["draft"] = dname
+            fam[f"spec_{dname}_k{k}"] = row
+            best = max(best, row["speedup"])
+            emit(f"kpi.speculative.{arch}.{dname}.k{k}",
+                 1e6 / max(row["tok_s"], 1e-9),
+                 f"tokens_per_s={row['tok_s']};accept={row['accept_rate']};"
+                 f"speedup={row['speedup']}x")
+        fam["headline_speedup"] = best
+
+        # fp32 control pair: speculation vs the fastest arm on this
+        # backend — expected < 1.0x (see docstring).
+        cfg32 = get_config(arch).replace(param_dtype="float32",
+                                         scan_layers=layout[arch])
+        model32 = build_model(cfg32)
+        params32 = init_params(model32.param_specs(), jax.random.PRNGKey(0),
+                               cfg32.dtype)
+        c_out, ctrl_base = _spec_arm(model32, params32, draft_params=None,
+                                     spec_k=0, warm=warm, timed=timed,
+                                     max_new=10)
+        _, ctrl_spec = _spec_arm(
+            model32, params32,
+            draft_params=_quant.quantize_params_for_mode(params32, "w8"),
+            spec_k=4, warm=warm, timed=timed, max_new=10,
+            baseline_out=c_out)
+        ctrl_spec["speedup"] = round(
+            ctrl_spec["tok_s"] / ctrl_base["tok_s"], 2)
+        fam["fp32_control"] = {"nonspec": ctrl_base, "spec_w8_k4": ctrl_spec}
+        out[arch] = fam
+        emitted_streams[arch] = base_out
+    out["note"] = (
+        "end-to-end continuous-engine tokens/s (warmup + reset_stats, "
+        "then timed run), batch=1 at the pinned decode_layout.  Headline "
+        "arms draft for the bf16 deployment reference (the w8_vs_bf16 "
+        "comparison precedent): on XLA-CPU bf16 gemms are emulated, so "
+        "the k-token verify chunk costs ~1.2 bf16 steps while drafts run "
+        "on the fast fp32/w8 paths.  fp32_control shows the same "
+        "machinery against the fastest (fp32) arm losing by design — on "
+        "the NPU the roles invert and w8 is the fast draft arm.  k swept "
+        "against w8_quality.greedy_divergence_len_mean (see docstring).")
+    return out
+
+
 def run(smoke: bool = False) -> dict:
     """Harness entrypoint; the returned dict is ``BENCH_decode.json``."""
     families = bench_families(smoke=smoke)
@@ -307,6 +479,7 @@ def run(smoke: bool = False) -> dict:
     from benchmarks.bench_table1_quality import w8_quality_metrics
     result["w8_quality"] = w8_quality_metrics(
         ("mamba2-130m", "mamba-130m"), n_new=32 if smoke else 64)
+    result["speculative"] = bench_speculative(smoke=smoke)
     if not smoke:
         result["kpi_full_tok_s"] = bench_kpi_full()
     return result

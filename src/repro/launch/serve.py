@@ -66,6 +66,12 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared 'system prompt' tokens "
                          "to every request (exercises the prefix cache)")
+    ap.add_argument("--speculate-k", type=int, default=0, metavar="K",
+                    help="self-speculative decoding: draft K tokens per "
+                         "burst with w8 params, verify them in one batched "
+                         "full-precision step, roll back rejected drafts "
+                         "via O(1) state snapshots (continuous engine "
+                         "only; outputs stay byte-identical; 0 = off)")
     ap.add_argument("--quant", default="none", choices=QUANT_MODES,
                     help="W8 weight-only quantization: int8 per-channel "
                          "weights through prefill, chunked prefill and "
@@ -89,6 +95,13 @@ def main(argv=None):
     if args.prefill_chunk and args.engine != "continuous":
         log.warning("--prefill-chunk only applies to --engine continuous; "
                     "the wave engine keeps monolithic bucketed prefill")
+    if args.speculate_k and args.engine != "continuous":
+        log.warning("--speculate-k only applies to --engine continuous")
+    if args.speculate_k and args.quant != "none":
+        log.warning("--speculate-k with --quant %s: the draft params are "
+                    "a re-quantization of already-quantized weights — the "
+                    "draft/verify gap (and the speedup) collapses",
+                    args.quant)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.decode_mode:
@@ -116,6 +129,8 @@ def main(argv=None):
         prefix_cache_mb=(args.prefix_cache_mb
                          if args.engine == "continuous" else 0.0),
         prefix_chunk=args.prefix_chunk,
+        speculate_k=(args.speculate_k
+                     if args.engine == "continuous" else 0),
         trace=args.trace, metrics_every=args.metrics_every,
         watchdog_s=args.watchdog_s,
         strict_recompile=args.strict_recompile)
@@ -149,6 +164,11 @@ def main(argv=None):
              "goodput_tok_s: %.1f  (wall source: %s)",
              m["slot_occupancy"], m["ttft_mean_s"], m["ttft_p99_s"],
              m["goodput_tokens_per_s"], m["wall_source"])
+    if m.get("spec_bursts"):
+        log.info("speculative: %d bursts  accept_rate %.3f  "
+                 "tokens_per_verify %.2f  rollbacks %d",
+                 m["spec_bursts"], m["spec_accept_rate"],
+                 m["spec_tokens_per_verify"], m["spec_rollbacks"])
     if m["stragglers_decode"] or m["stragglers_prefill"] or \
             m["watchdog_fires"]:
         log.warning("health: %d decode stragglers, %d prefill stragglers, "

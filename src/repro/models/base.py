@@ -7,6 +7,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.xamba import XambaConfig
 
@@ -57,6 +58,86 @@ class DecodeAPI:
     def prefill_chunk(self, params, tokens, cache, index):
         raise NotImplementedError(
             f"{type(self).__name__} does not implement prefill_chunk")
+
+    def verify_chunk(self, params, tokens, cache, index):
+        """``prefill_chunk`` with per-position logits: ``(b, s, vocab)``
+        instead of the last position only — one batched call scores every
+        token of a speculative draft window against the full-precision
+        stream (``serve/speculative.py``).  Families implement it by
+        re-entering their chunk trunk and skipping the ``x[:, -1]``
+        slice, so state carry semantics are identical to prefill_chunk."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement verify_chunk")
+
+    def speculative_step(self, params_draft, params_verify, token, cache,
+                         index, k: int):
+        """One self-speculative burst, functional and host-driven: draft
+        ``k`` greedy tokens with ``params_draft`` on a throwaway copy of
+        the state, verify them in one ``verify_chunk`` call with
+        ``params_verify``, emit the longest verified prefix plus one
+        correction token, and repair rolled-back rows by re-advancing the
+        pre-burst snapshot through ``decode_step`` (the reference
+        semantics the continuous engine's compiled burst must match; see
+        ``serve/speculative.py`` for the accept rule).
+
+        ``token``: ``(b, 1)`` pending next-input tokens; ``index``: ``()``
+        or ``(b,)`` consumed-token counts.  Returns ``(emitted, n_emit,
+        cache, new_index)`` — ``emitted`` is ``(b, k)`` int32 with only
+        the first ``n_emit[i]`` entries of row ``i`` meaningful, and
+        ``new_index = index + n_emit`` per row.  ``cache`` is treated
+        functionally (not donated): the caller's argument stays valid.
+        """
+        from repro.serve.speculative import accept_lengths, emit_counts, \
+            needs_rollback
+        if k < 1:
+            raise ValueError(f"speculative_step needs k >= 1, got {k}")
+        tok0 = np.asarray(token, np.int32).reshape(-1)
+        b = tok0.shape[0]
+        idx = np.asarray(index, np.int32)
+        if idx.ndim == 0:
+            idx = np.full((b,), idx, np.int32)
+
+        # Draft pass: decode_step is functional here (no donation), so
+        # ``cache`` itself survives as the pre-burst snapshot.
+        dcache = cache
+        cur = tok0
+        drafts = np.zeros((b, k), np.int32)
+        for j in range(k):
+            logits, dcache = self.decode_step(
+                params_draft, jnp.asarray(cur[:, None]), dcache,
+                jnp.asarray(idx + j))
+            cur = np.argmax(np.asarray(logits, np.float32),
+                            axis=-1).astype(np.int32)
+            drafts[:, j] = cur
+
+        # Verify pass: one chunk over [t0, d_1 .. d_{k-1}].
+        vtoks = np.empty((b, k), np.int32)
+        vtoks[:, 0] = tok0
+        if k > 1:
+            vtoks[:, 1:] = drafts[:, :k - 1]
+        vlogits, vcache = self.verify_chunk(
+            params_verify, jnp.asarray(vtoks), cache, jnp.asarray(idx))
+        verify = np.argmax(np.asarray(vlogits, np.float32),
+                           axis=-1).astype(np.int32)
+
+        m = accept_lengths(drafts, verify)
+        n_emit = emit_counts(m, k).astype(np.int32)
+        # Rolled-back rows: re-advance the pre-burst row state over the
+        # tokens the emitted stream actually consumed — [t0, g_0 ..
+        # g_{n-2}] — through the full-precision decode step, exactly the
+        # non-speculative trajectory.
+        for i in np.nonzero(needs_rollback(m, k))[0]:
+            snap = self.export_state(cache, None, [int(i)])
+            rcache = jax.tree.map(jnp.asarray, snap)
+            consume = [int(tok0[i])] + \
+                [int(verify[i, j]) for j in range(int(n_emit[i]) - 1)]
+            for j, t in enumerate(consume):
+                _, rcache = self.decode_step(
+                    params_verify, jnp.asarray([[t]], jnp.int32), rcache,
+                    jnp.asarray(int(idx[i]) + j, jnp.int32))
+            vcache = self.import_state(
+                vcache, None, [int(i)], self.export_state(rcache, None, [0]))
+        return verify, n_emit, vcache, idx + n_emit
 
     # ---------------- state snapshot / restore ----------------
     #

@@ -188,6 +188,16 @@ class MambaLM(base.DecodeAPI):
         x, new_states = self._trunk(params, x, cache)
         return self._logits(params, x[:, -1]), new_states
 
+    def verify_chunk(self, params, tokens, cache, index) -> Tuple[Array, Any]:
+        """``prefill_chunk`` with per-position logits (``(b, s, vocab)``):
+        the speculative verifier scores a whole draft window in one call
+        (``serve/speculative.py``).  Same trunk, same carried state —
+        only the final-logits slice differs."""
+        del index
+        x = layers.embed(params["embed"], tokens)
+        x, new_states = self._trunk(params, x, cache)
+        return self._logits(params, x), new_states
+
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
         """index: () or (b,) — accepted for engine uniformity and ignored;
         the recurrence carries position implicitly, which is why SSM slots

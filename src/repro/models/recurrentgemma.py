@@ -281,6 +281,17 @@ class RecurrentGemma(base.DecodeAPI):
                                                             jnp.int32))
         return self._logits(params, x[:, -1]), new_caches
 
+    def verify_chunk(self, params, tokens, cache, index) -> Tuple[Array, Any]:
+        """``prefill_chunk`` with per-position logits (``(b, s, vocab)``)
+        for the speculative verifier (``serve/speculative.py``): same
+        trunk, same ring-cache writes — only the final slice differs."""
+        x = self._embed(params, tokens)
+        positions = base.chunk_positions(index, *tokens.shape)
+        x, new_caches = self._trunk(params, x, positions, cache,
+                                    cache_index=jnp.asarray(index,
+                                                            jnp.int32))
+        return self._logits(params, x), new_caches
+
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
         """index: () or (b,) int32 — per-row positions realign the local
         attention layers (RG-LRU layers carry position in their state)."""

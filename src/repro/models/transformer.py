@@ -260,6 +260,21 @@ class TransformerLM(base.DecodeAPI):
                                                                jnp.int32))
         return self._logits(params, x[:, -1]), new_caches
 
+    def verify_chunk(self, params, tokens, cache, index) -> Tuple[Array, Any]:
+        """``prefill_chunk`` with per-position logits (``(b, s, vocab)``)
+        for the speculative verifier (``serve/speculative.py``): same
+        KV-append + chunk attention — only the final slice differs."""
+        cfg = self.cfg
+        x = layers.embed(params["embed"], tokens)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        positions = base.chunk_positions(index, *tokens.shape)
+        x = dist_api.shard_tokens3d(x)
+        x, new_caches, _ = self._trunk(params, x, positions, cache,
+                                       cache_index=jnp.asarray(index,
+                                                               jnp.int32))
+        return self._logits(params, x), new_caches
+
     def decode_step(self, params, token, cache, index) -> Tuple[Array, Any]:
         """token: (b, 1); index: () or (b,) int32 — position of this token.
 

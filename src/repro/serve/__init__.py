@@ -17,6 +17,14 @@ through a radix cache of chunk-boundary snapshots
 (:class:`PrefixCache`).  See ``docs/serving.md`` and
 ``docs/prefix_cache.md``.
 
+Self-speculative decoding (``speculative.py`` + ``continuous.py``;
+docs/serving.md): ``ServeConfig.speculate_k`` drafts k tokens per burst
+with cheap w8 params and verifies them in one batched full-precision
+``verify_chunk`` call, restoring rejected rows from an O(1) state
+snapshot — outputs stay byte-identical to the non-speculative path
+because the continuous engine keys sampling noise on (seed, uid,
+position) (``sampling.sample_keyed``).
+
 Observability (``tracing.py`` + ``metrics.py``; docs/observability.md):
 ``ServeConfig.trace`` turns on per-request span tracing through a
 :class:`Tracer` (Chrome/Perfetto JSON + JSONL event log, folded into
@@ -30,6 +38,8 @@ from repro.serve.metrics import (RateMeter, ServeMetrics,  # noqa: F401
                                  StreamingHistogram, WindowedGauge)
 from repro.serve.prefix_cache import PrefixCache  # noqa: F401
 from repro.serve.scheduler import Request, Scheduler, bucket_for  # noqa: F401
+from repro.serve.speculative import (accept_lengths,  # noqa: F401
+                                     emit_counts, needs_rollback)
 from repro.serve.state_pool import StatePool  # noqa: F401
 from repro.serve.tracing import (NULL_TRACER, NullTracer,  # noqa: F401
                                  RecompileError, RecompileSentinel, Tracer)

@@ -38,6 +38,24 @@ the compile-once discipline still holds (0 decode recompiles after
 warmup); ``models/base.py: DecodeAPI.prefill_chunk`` guarantees the result
 is numerically the whole-sequence prefill.
 
+Self-speculative decoding (``ServeConfig.speculate_k``): when every live
+slot is caught up, a poll runs a *burst* instead of one decode step —
+``k`` decode-program calls with the cheap draft params (w8 by default) on
+a scratch copy of the slot states, then ONE ``verify_chunk`` call at
+``(slots, k)`` with the full-precision params on the decode pool.  Each
+row emits its longest verified prefix plus one correction token (accept
+rule: ``serve/speculative.py``); rows whose window contained a rejected
+draft restore their pre-burst snapshot (a compile-once pool row scatter —
+O(1) state bytes, the SSM advantage) and re-consume their emitted tokens
+through the ordinary decode program, one per poll, before the next burst.
+That re-advance keeps rolled-back state bit-exact with the
+non-speculative trajectory; emitted tokens are always the verify
+stream's, so outputs match the non-speculative engine byte-for-byte
+under greedy AND under keyed temperature sampling.  Three more compiled
+programs (draft decode = the decode program retraced for the quantized
+param pytree, ``verify``, and the two extra pools' row ops), all fixed
+shape — compile-once discipline holds.
+
 Prefix-state cache (``ServeConfig.prefix_cache_mb``): on top of chunked
 prefill, admission consults a radix cache of chunk-boundary state
 snapshots (``serve/prefix_cache.py``): the longest cached prefix of the
@@ -62,6 +80,8 @@ from repro.runtime.health import StepMonitor, Watchdog
 from repro.serve.engine import EngineBase, ServeConfig
 from repro.serve.prefix_cache import PrefixCache, chunk_key
 from repro.serve.scheduler import Request, bucket_for, chunk_span
+from repro.serve.speculative import accept_lengths, emit_counts, \
+    needs_rollback
 from repro.serve.state_pool import (StatePool, format_compile_count,
                                     jit_cache_size)
 from repro.serve.tracing import (TID_HOST, TID_QUEUE, TID_SLOT0,
@@ -73,19 +93,26 @@ log = logging.getLogger("repro.serve")
 class ContinuousEngine(EngineBase):
     """Slot-scheduled serving over a shared per-slot state pool."""
 
-    def __init__(self, model, params, cfg: ServeConfig):
+    def __init__(self, model, params, cfg: ServeConfig, *,
+                 draft_params=None):
         super().__init__(model, params, cfg)
         self.slots = cfg.max_batch
         self.buckets = tuple(sorted(cfg.prefill_buckets))
         # Normalize "disabled" spellings (None and 0) to None so every
         # downstream gate can test `self.chunk` / `is None` consistently.
         self.chunk = cfg.prefill_chunk or None
+        self.spec_k = int(getattr(cfg, "speculate_k", 0) or 0)
+        if self.spec_k < 0:
+            raise ValueError(f"speculate_k must be >= 0, got {self.spec_k}")
         # One static cache length covers every tenant a slot can host; with
         # chunked prefill the longest padded prompt can overshoot the
-        # largest bucket by up to chunk-1 pad tokens.
+        # largest bucket by up to chunk-1 pad tokens.  A speculative burst
+        # near the output budget can consume up to k tokens past the last
+        # decode position, so attention-bearing caches get that headroom.
         max_prompt = (chunk_span(self.buckets, self.chunk, self.buckets[-1])
                       if self.chunk else self.buckets[-1])
-        self.max_seq = max_prompt + cfg.max_new_tokens
+        self.max_seq = max_prompt + cfg.max_new_tokens + \
+            (self.spec_k + 1 if self.spec_k else 0)
         dtype = model.cfg.dtype
         self.pool = StatePool(model, self.slots, self.max_seq, dtype,
                               tracer=self.tracer)
@@ -97,6 +124,59 @@ class ContinuousEngine(EngineBase):
         self._pos = np.zeros(self.slots, np.int32)
         self._next_tok = np.full(self.slots, cfg.pad_id, np.int32)
         self._finished: List[Request] = []
+        if self.spec_k:
+            # Draft params: a w8 quantization of the serve params unless
+            # the caller hands in its own pair (e.g. bf16 verify + w8
+            # draft in the benchmarks).  Pre-sliced like the decode view
+            # so the draft steps reuse the SAME decode program — the
+            # quantized pytree is one extra trace of it, not a new
+            # program shape.
+            if draft_params is None:
+                from repro.nn import quant
+                draft_params = quant.quantize_params_for_mode(
+                    params, getattr(cfg, "speculate_draft", "w8"))
+            self._draft_params = getattr(model, "decode_view",
+                                         lambda p: p)(draft_params)
+            # Two more arenas over the decode-pool layout: the draft
+            # scratch rows (refreshed from live state each burst) and the
+            # pre-burst backup rows rollback restores from.  All row
+            # moves are the pools' compile-once scatters.
+            self._dpool = StatePool(model, self.slots, self.max_seq, dtype,
+                                    tracer=self.tracer)
+            self._bpool = StatePool(model, self.slots, self.max_seq, dtype,
+                                    tracer=self.tracer)
+            self._verify = jax.jit(
+                lambda p, toks, cache, off:
+                model.verify_chunk(p, toks, cache, off),
+                donate_argnums=(2,))
+            self.sentinels["verify"] = RecompileSentinel(
+                "verify", self._verify,
+                strict=getattr(cfg, "strict_recompile", False))
+            # Rolled-back rows park their already-emitted tokens here and
+            # re-consume them through the ordinary decode step (one per
+            # poll); bursts only run when every live row has drained.
+            self._overflow: List[List[int]] = [[] for _ in range(self.slots)]
+            # Pre-trace the burst programs at serve shapes on a throwaway
+            # cache: the full-precision decode variant first runs at the
+            # first rollback drain — possibly many polls in — and a lazy
+            # first trace there would read as a post-warmup retrace.
+            # Order matters for mixed-precision drafts (e.g. a w8 draft
+            # with fp32 scales inside a bf16 serve stack): verify must be
+            # traced on a SERVE-dtype cache (the live pool, which drafts
+            # never touch), and the draft step on both cache dtypes it
+            # will see — the serve-dtype arena it starts each burst from
+            # and its own (possibly promoted) output dtype.  When draft
+            # and serve dtypes agree the second draft call hits the
+            # existing trace and compiles nothing.
+            tok = jnp.zeros((self.slots, 1), jnp.int32)
+            pos = jnp.zeros(self.slots, jnp.int32)
+            tmp = model.init_cache(self.slots, self.max_seq, dtype)
+            _, tmp = self._decode(self._decode_params, tok, tmp, pos)
+            _, tmp = self._verify(
+                self.params, jnp.zeros((self.slots, self.spec_k), jnp.int32),
+                tmp, pos)
+            _, tmp = self._decode(self._draft_params, tok, tmp, pos)
+            self._decode(self._draft_params, tok, tmp, pos)
         if self.chunk:
             # Chunk-prefill state accumulates in a SECOND pool (one row per
             # slot, donated into the chunk program) until the prompt is
@@ -150,6 +230,7 @@ class ContinuousEngine(EngineBase):
         # completes within cfg.watchdog_s (a hung device/compile).
         self.monitor_decode = StepMonitor()
         self.monitor_prefill = StepMonitor()
+        self.monitor_spec = StepMonitor()
         self._watchdog: Optional[Watchdog] = None
         if getattr(cfg, "watchdog_s", 0.0):
             self._watchdog = Watchdog(cfg.watchdog_s, on_hang=self._on_hang)
@@ -174,6 +255,7 @@ class ContinuousEngine(EngineBase):
         # emitting a host_gap that spans the whole warmup.
         self.monitor_decode = StepMonitor()
         self.monitor_prefill = StepMonitor()
+        self.monitor_spec = StepMonitor()
         self._last_poll_end = None
         super().reset_stats()
 
@@ -194,6 +276,8 @@ class ContinuousEngine(EngineBase):
                "monitor_prefill": self.monitor_prefill.summary(),
                "recompile_trips": {name: s.trips
                                    for name, s in self.sentinels.items()}}
+        if self.spec_k:
+            out["monitor_spec"] = self.monitor_spec.summary()
         if self._pcache is not None:
             out["prefix_cache"] = self._pcache.stats()
         return out
@@ -218,6 +302,11 @@ class ContinuousEngine(EngineBase):
                 jit_cache_size(self._chunk_step))
             out.update({f"ppool_{k}_compiles": v
                         for k, v in self._ppool.compile_counts().items()})
+        if self.spec_k:
+            out["verify_compiles"] = format_compile_count(
+                jit_cache_size(self._verify))
+            out.update({f"dpool_{k}_compiles": v
+                        for k, v in self._dpool.compile_counts().items()})
         if self._pcache is not None:
             out["prefix_cache"] = self._pcache.stats()
         return out
@@ -319,7 +408,13 @@ class ContinuousEngine(EngineBase):
             t0 = time.perf_counter()
             logits, cache = self._prefill(
                 self.params, {"tokens": jnp.asarray(tokens)}, self._scratch)
-            first = self._sample(logits)
+            # First tokens sample at position = bucket (tokens consumed so
+            # far), keyed per owning request — see _sample_rows.
+            uids = np.zeros(self.slots, np.int64)
+            for row, (_, req) in enumerate(group):
+                uids[row] = req.uid
+            first = self._sample_rows(logits, uids,
+                                      np.full(self.slots, bucket, np.int64))
             t1 = time.perf_counter()
             self.tracer.complete("prefill_bucket", t0, t1, bucket=bucket,
                                  rows=len(group))
@@ -471,7 +566,12 @@ class ContinuousEngine(EngineBase):
                     self._prefix_release(i)
                 done_rows.append(i)
         if done_rows:
-            first = self._sample(logits)
+            uids = np.zeros(self.slots, np.int64)
+            poss = np.zeros(self.slots, np.int64)
+            for i in done_rows:
+                uids[i] = self._pref_req[i].uid
+                poss[i] = len(self._pref_toks[i])
+            first = self._sample_rows(logits, uids, poss)
             # Row i prefilled in the second pool becomes slot i's decode
             # state (same index — the slot was reserved at admission).
             self.pool.insert_rows(self._ppool.cache, done_rows, done_rows)
@@ -483,6 +583,117 @@ class ContinuousEngine(EngineBase):
                 self._pref_toks[i] = None
                 self._start_tenant(i, req, span, int(first[i]), t_first)
         return C * len(rows)
+
+    # ------------------------------------------------------------------
+    # self-speculative decoding
+    # ------------------------------------------------------------------
+    def _row_uids(self) -> List[int]:
+        """Per-slot owning-request uids (0 for dead/staging rows — their
+        sampled tokens are discarded anyway)."""
+        return [r.uid if r is not None else 0 for r in self._slot_req]
+
+    def _spec_burst(self, live: List[int]) -> None:
+        """One speculative burst across the live slots (accept rule and
+        notation: ``serve/speculative.py``): snapshot live rows, draft
+        ``k`` tokens with the draft params on the scratch pool, verify
+        all ``k`` in one chunk call on the decode pool, emit per-row
+        ``min(m + 1, k)`` verify-stream tokens, restore rows that
+        consumed a rejected draft and park their emitted tokens in the
+        overflow queue for the decode-step drain."""
+        cfg = self.cfg
+        k = self.spec_k
+        uids = self._row_uids()
+        # Pre-burst snapshot + draft working copies: compile-once pool
+        # row scatters, no host roundtrip.  Dead/staging rows are left
+        # stale — the verify chunk advances them as garbage sinks and a
+        # refill overwrites the whole row (same discipline as decode).
+        with self.tracer.span("spec_copy", rows=len(live)):
+            self._bpool.insert_rows(self.pool.cache, live, live)
+            self._dpool.insert_rows(self.pool.cache, live, live)
+
+        # Draft pass: k calls of the ordinary decode program (the
+        # quantized pytree is a second trace of it, warmed up with
+        # everything else), donating the scratch pool's arena.
+        drafts = np.zeros((self.slots, k), np.int32)
+        cur = self._next_tok.copy()
+        t0 = time.perf_counter()
+        for j in range(k):
+            logits, self._dpool.cache = self._decode(
+                self._draft_params, jnp.asarray(cur[:, None]),
+                self._dpool.cache, jnp.asarray(self._pos + j))
+            cur = self._sample_rows(logits, uids, self._pos + j + 1)
+            drafts[:, j] = cur
+        t1 = time.perf_counter()
+        self.tracer.complete("draft", t0, t1, rows=len(live), k=k)
+        self._observe_step(self.monitor_spec, "draft", t1 - t0)
+
+        # Verify pass: ONE chunk call over [t0, d_1 .. d_{k-1}], donating
+        # the decode pool — rows that keep their window inherit the
+        # post-chunk state for free.
+        vtoks = np.empty((self.slots, k), np.int32)
+        vtoks[:, 0] = self._next_tok
+        if k > 1:
+            vtoks[:, 1:] = drafts[:, :k - 1]
+        t0 = time.perf_counter()
+        vlogits, self.pool.cache = self._verify(
+            self.params, jnp.asarray(vtoks), self.pool.cache,
+            jnp.asarray(self._pos))
+        vl = np.asarray(vlogits, np.float32)
+        t1 = time.perf_counter()
+        self.tracer.complete("verify", t0, t1, rows=len(live),
+                             tokens=k * len(live))
+        self._observe_step(self.monitor_spec, "verify", t1 - t0)
+        self.metrics.record_step(len(live), t1 - t0)
+
+        # The verify stream: position j's token samples with the same
+        # (uid, position) key the plain decode step would use there.
+        verify = np.empty((self.slots, k), np.int32)
+        for j in range(k):
+            verify[:, j] = self._sample_rows(vl[:, j], uids,
+                                             self._pos + j + 1)
+        m = accept_lengths(drafts, verify)
+        n_emit = emit_counts(m, k)
+        rollback = needs_rollback(m, k)
+        now = time.time()
+        emitted_total = 0
+        accepted = 0
+        rollbacks = 0
+        for i in live:
+            req = self._slot_req[i]
+            accepted += int(min(m[i], k))
+            emitted: List[int] = []
+            finished = False
+            for j in range(int(n_emit[i])):
+                tok = int(verify[i, j])
+                req.emit(tok)
+                emitted.append(tok)
+                self.metrics.record_token()
+                if (cfg.eos_id >= 0 and tok == cfg.eos_id) or \
+                        len(req.out_tokens) >= req.max_new_tokens:
+                    self._finish(req, now, i)
+                    self._slot_req[i] = None
+                    finished = True
+                    break
+            emitted_total += len(emitted)
+            if finished:
+                self._overflow[i] = []
+                continue
+            if rollback[i]:
+                rollbacks += 1
+                with self.tracer.span("rollback", slot=i,
+                                      accepted=int(m[i])):
+                    self.pool.insert_rows(self._bpool.cache, [i], [i])
+                # _pos / _next_tok stay pre-burst: the decode-step drain
+                # re-consumes the emitted tokens from the restored state.
+                self._overflow[i] = emitted
+            else:
+                # The verify chunk consumed exactly the emitted stream's
+                # prefix — its output state IS the post-emission state.
+                self._pos[i] = min(int(self._pos[i]) + k, self.max_seq - 1)
+                self._next_tok[i] = int(verify[i, k - 1])
+        self.metrics.record_speculative(
+            rows=len(live), drafted=k * len(live), accepted=accepted,
+            emitted=emitted_total, rollbacks=rollbacks)
 
     # ------------------------------------------------------------------
     def poll(self) -> List[Request]:
@@ -530,12 +741,15 @@ class ContinuousEngine(EngineBase):
                 now = time.time()
 
         live = [i for i, r in enumerate(self._slot_req) if r is not None]
-        if live:
+        if live and self.spec_k and \
+                not any(self._overflow[i] for i in live):
+            self._spec_burst(live)
+        elif live:
             t0 = time.perf_counter()
             logits, cache = self._decode(
                 self._decode_params, jnp.asarray(self._next_tok[:, None]),
                 self.pool.cache, jnp.asarray(self._pos))
-            nxt = self._sample(logits)
+            nxt = self._sample_rows(logits, self._row_uids(), self._pos + 1)
             self.pool.cache = cache
             t1 = time.perf_counter()
             self.tracer.complete("decode_step", t0, t1, live=len(live))
@@ -547,6 +761,15 @@ class ContinuousEngine(EngineBase):
             now = time.time()
             for i in live:
                 req = self._slot_req[i]
+                if self.spec_k and self._overflow[i]:
+                    # Rollback drain: this step re-consumed a token the
+                    # burst already emitted, re-advancing the restored
+                    # state on the exact non-speculative trajectory; the
+                    # freshly sampled token is discarded (once the queue
+                    # empties, the next step recomputes it from
+                    # bit-identical state).
+                    self._next_tok[i] = self._overflow[i].pop(0)
+                    continue
                 tok = int(nxt[i])
                 req.emit(tok)
                 self.metrics.record_token()

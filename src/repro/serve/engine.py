@@ -72,6 +72,20 @@ class ServeConfig:
     # grains store fewer, larger entries (less snapshot overhead, less
     # sharing resolution).
     prefix_chunk: Optional[int] = None
+    # -- self-speculative decoding (continuous engine only) -----------------
+    # Draft this many tokens per burst with the cheap draft params (a w8
+    # quantization of the serve params unless the engine is given one
+    # explicitly), verify them in ONE batched full-precision verify_chunk
+    # call, emit the longest verified prefix + one correction token, and
+    # restore mismatching rows from their pre-burst state snapshot (O(1)
+    # bytes for SSM families).  Greedy outputs are byte-identical to the
+    # non-speculative path; sampled outputs too, because the continuous
+    # engine keys sampling noise on (seed, uid, position) rather than the
+    # step counter (``serve/sampling.py: sample_keyed``).  0 disables.
+    # See serve/speculative.py and docs/serving.md.
+    speculate_k: int = 0
+    # Quant mode for the auto-derived draft params (``nn/quant.py``).
+    speculate_draft: str = "w8"
     # -- observability (docs/observability.md) ------------------------------
     # Truthy enables per-request span tracing (``serve/tracing.py``); the
     # engine records events in memory and the caller saves them
@@ -155,6 +169,16 @@ class EngineBase:
                               sampling.step_rng(self.cfg.seed, self._step))
         self._step += 1
         return out
+
+    def _sample_rows(self, logits, uids, positions) -> np.ndarray:
+        """Keyed sampling (continuous engine): noise is a pure function of
+        ``(seed, uid, position)``, so a token's draw doesn't depend on
+        slot assignment, batch composition, or whether it came from a
+        decode step or a speculative verify chunk — spec-on/off streams
+        match even under temperature (``serve/sampling.py``)."""
+        return sampling.sample_keyed(np.asarray(logits, np.float32),
+                                     self.cfg.temperature, self.cfg.seed,
+                                     uids, positions)
 
     @property
     def busy(self) -> bool:

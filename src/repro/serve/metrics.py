@@ -223,6 +223,12 @@ class ServeMetrics:
         self.prefix_hits = 0
         self.prefix_misses = 0
         self.prefix_hit_tokens = 0
+        self.spec_bursts = 0
+        self.spec_rows = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
+        self.spec_rollbacks = 0
         self.stragglers = {"decode": 0, "prefill": 0}
         self.watchdog_fires = 0
         self.polls = 0
@@ -275,6 +281,20 @@ class ServeMetrics:
             self.prefix_hit_tokens += matched_tokens
         else:
             self.prefix_misses += 1
+
+    def record_speculative(self, rows: int, drafted: int, accepted: int,
+                           emitted: int, rollbacks: int) -> None:
+        """One speculative draft/verify burst (``serve/speculative.py``)
+        across ``rows`` live slots: ``drafted`` draft tokens, ``accepted``
+        of them confirmed by the verify stream, ``emitted`` tokens that
+        entered request outputs (accepted + up to one correction per
+        row), ``rollbacks`` rows restored to their pre-burst snapshot."""
+        self.spec_bursts += 1
+        self.spec_rows += rows
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        self.spec_emitted += emitted
+        self.spec_rollbacks += rollbacks
 
     def record_straggler(self, kind: str) -> None:
         """A StepMonitor flagged one decode/prefill step as a straggler."""
@@ -330,6 +350,9 @@ class ServeMetrics:
             "prefix_hits": self.prefix_hits,
             "prefix_misses": self.prefix_misses,
             "prefix_hit_tokens": self.prefix_hit_tokens,
+            "spec_bursts": self.spec_bursts,
+            "spec_accept_rate": (self.spec_accepted / self.spec_drafted
+                                 if self.spec_drafted else 0.0),
             "stragglers": dict(self.stragglers),
             "watchdog_fires": self.watchdog_fires,
             "ttft": self.ttft.summary(),
@@ -365,6 +388,13 @@ class ServeMetrics:
             "prefix_hits": self.prefix_hits,
             "prefix_misses": self.prefix_misses,
             "prefix_hit_tokens": self.prefix_hit_tokens,
+            "spec_bursts": self.spec_bursts,
+            "spec_drafted_tokens": self.spec_drafted,
+            "spec_accept_rate": (self.spec_accepted / self.spec_drafted
+                                 if self.spec_drafted else 0.0),
+            "spec_tokens_per_verify": (self.spec_emitted / self.spec_rows
+                                       if self.spec_rows else 0.0),
+            "spec_rollbacks": self.spec_rollbacks,
             "latency_mean_s": self.latency.mean,
             "token_latency_s": (self.decode_time_s / self.decode_steps
                                 if self.decode_steps else 0.0),

@@ -1,0 +1,75 @@
+"""Dependency-free stand-in for the slice of hypothesis the property
+suite uses (``@given`` / ``@settings`` / ``strategies.integers`` /
+``strategies.sampled_from``).
+
+CI installs real hypothesis (requirements-dev.txt) and gets shrinking,
+example databases and adaptive generation; environments without it fall
+back to this shim so ``tests/test_core_properties.py`` still *runs* the
+properties — over ``max_examples`` deterministic pseudo-random examples
+keyed on the test name — instead of being skipped wholesale.  A failure
+reports the drawn example so it can be replayed by hand.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+
+def settings(deadline=None, max_examples: int = 15, **_ignored):
+    """Only ``max_examples`` matters here; everything else (deadline,
+    database, ...) is a real-hypothesis concern."""
+    del deadline
+
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_propcheck_max_examples", 15)
+            # Deterministic per-test stream: the same examples on every
+            # run and machine, independent of collection order.
+            name_key = zlib.crc32(fn.__qualname__.encode())
+            for ex in range(n):
+                rng = np.random.default_rng([name_key, ex])
+                drawn = {k: s.example(rng)
+                         for k, s in sorted(strats.items())}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{ex}: {drawn}") from e
+        # Hide the drawn parameters from pytest's fixture resolution
+        # (functools.wraps copies the original signature otherwise).
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.__wrapped__ = None
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -1,14 +1,23 @@
-"""Hypothesis property tests for the XAMBA core invariants."""
+"""Property tests for the XAMBA core invariants and the speculative
+accept rule — hypothesis when available (CI), else the deterministic
+fallback shim in ``tests/_propcheck.py`` so the properties always run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # container without hypothesis: run the shim
+    from _propcheck import given, settings, strategies as st
 
+from repro.configs import get_config
 from repro.core import pwl, reduce as xreduce, segsum, selective_scan, ssd
 from repro.core.xamba import XambaConfig
+from repro.models import build_model
+from repro.nn.params import init_params
+from repro.serve.speculative import (accept_lengths, emit_counts,
+                                     needs_rollback)
 
 SET = dict(deadline=None, max_examples=15)
 
@@ -192,3 +201,62 @@ def test_pwl_continuity():
             left = t.slopes[k] * b + t.intercepts[k]
             right = t.slopes[k + 1] * b + t.intercepts[k + 1]
             assert abs(left - right) < 1e-6, (name, k)
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: accept rule + state rollback
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(b=st.integers(1, 5), k=st.integers(1, 8),
+       vocab=st.integers(2, 4), seed=st.integers(0, 2**31 - 1))
+def test_accept_lengths_is_longest_common_prefix(b, k, vocab, seed):
+    """m == lcp(draft, verify); the emit count is m+1 capped at k; rows
+    that don't roll back consumed exactly their emitted window."""
+    rng = np.random.default_rng(seed)
+    # Tiny vocab so matches and mismatches both occur often.
+    draft = rng.integers(0, vocab, (b, k))
+    verify = rng.integers(0, vocab, (b, k))
+    m = accept_lengths(draft, verify)
+    for i in range(b):
+        ref = 0
+        while ref < k and draft[i, ref] == verify[i, ref]:
+            ref += 1
+        assert m[i] == ref, (i, draft[i], verify[i])
+    n = emit_counts(m, k)
+    assert ((n >= 1) & (n <= k)).all()        # always progress, never > k
+    assert (n >= m).all() and (n <= m + 1).all()
+    rb = needs_rollback(m, k)
+    if k == 1:
+        assert not rb.any()                   # k=1 never rolls back
+    # No-rollback rows emitted the full window: their post-verify state
+    # (which consumed all k inputs) is exactly the post-emission state.
+    assert (n[~rb] == k).all()
+    # Full matches emit no correction; everyone else emits exactly one.
+    assert (n[m == k] == k).all()
+    assert (n[m < k] == np.minimum(m[m < k] + 1, k)).all()
+
+
+@settings(deadline=None, max_examples=4)
+@given(arch=st.sampled_from(["mamba-130m", "mamba2-130m",
+                             "recurrentgemma-2b", "gemma-2b"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_rollback_state_roundtrip(arch, seed):
+    """export_state -> import_state is an exact (bitwise) state round
+    trip for every family — the property speculative rollback rests on."""
+    rng = np.random.default_rng(seed)
+    cfg = get_config(arch, reduced=True).replace(param_dtype="float32")
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         cfg.dtype)
+    cache = model.init_cache(3, 24, cfg.dtype)
+    toks = rng.integers(1, cfg.vocab_size, (3, 8))
+    _, cache = model.prefill(params, {"tokens": jnp.asarray(toks)}, cache)
+    snap = model.export_state(cache, None, [1])
+    restored = model.import_state(model.init_cache(3, 24, cfg.dtype),
+                                  None, [2], snap)
+    back = model.export_state(restored, None, [2])
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        snap, back)
