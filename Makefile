@@ -3,8 +3,9 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-cov smoke-serve smoke-prefill-chunk smoke-prefill-fused \
-    smoke-prefix smoke-trace smoke-spec smoke-decode smoke-quant \
-    smoke-quickstart linkcheck bench-serve bench-json hlo-diff ci
+    smoke-prefix smoke-trace smoke-spec smoke-chaos smoke-decode \
+    smoke-quant smoke-quickstart linkcheck bench-serve bench-json \
+    hlo-diff ci
 
 test:
 	$(PY) -m pytest -x -q --durations=15
@@ -73,6 +74,14 @@ smoke-trace:
 smoke-spec:
 	$(PY) scripts/smoke_speculative.py
 
+# Chaos smoke (docs/robustness.md): a seeded poison/stall/fail plan armed
+# after warmup — every healthy request stays greedy-identical to a
+# fault-free control run, exactly one quarantine + one backend fallback
+# fire, and zero recompile sentinels trip (scripts/smoke_chaos.py raises
+# on any violation).
+smoke-chaos:
+	$(PY) scripts/smoke_chaos.py
+
 smoke-quickstart:
 	$(PY) examples/quickstart.py
 
@@ -97,5 +106,5 @@ hlo-diff:
 	$(PY) -m repro.launch.hlo_analysis --arch mamba-130m $(ARGS)
 
 ci: test smoke-decode smoke-serve smoke-prefill-chunk smoke-prefill-fused \
-    smoke-prefix smoke-trace smoke-spec smoke-quant smoke-quickstart \
-    linkcheck bench-json
+    smoke-prefix smoke-trace smoke-spec smoke-chaos smoke-quant \
+    smoke-quickstart linkcheck bench-json

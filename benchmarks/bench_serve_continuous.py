@@ -358,6 +358,8 @@ def run(smoke: bool = False, trace_seed: int = 0) -> dict:
         out["phase_breakdown"] = bench_phase()
     out["prefix"] = bench_serve_prefix.run(smoke=smoke,
                                            trace_seed=trace_seed)
+    from benchmarks import bench_serve_chaos
+    out["robustness"] = bench_serve_chaos.run(smoke=smoke)
     import jax as _jax
     out["env"] = {"trace_seed": trace_seed, "jax": _jax.__version__,
                   "backend": _jax.default_backend()}

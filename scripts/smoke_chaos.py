@@ -1,0 +1,100 @@
+"""CI chaos smoke for the fault-tolerant serve stack (docs/robustness.md).
+
+Runs the same continuous-serve workload twice on a reduced fp32 mamba2
+(decode mode ``cumba`` so the fallback ladder has a rung down) — once
+fault-free, once under a seeded three-event chaos plan armed after
+warmup:
+
+* 1 ``poison``  — one slot's recurrent state NaN-corrupted; the logits
+  probe must quarantine exactly that request;
+* 1 ``stall``   — a 50 ms sleep inside one decode call's timing window;
+* 1 ``fail``    — an injected backend failure at the decode boundary;
+  the engine must fall back ``cumba -> naive`` and retry.
+
+Asserts the blast radius: every *healthy* request's greedy output is
+byte-identical to the fault-free run, the expected robustness counters
+fired (1 quarantine, 1 backend fallback, all three plan events), and the
+compile-once discipline survived the chaos — zero recompile-sentinel
+trips after warmup (``strict_recompile`` would also have raised at the
+offending call).  Exits nonzero on any violation (``make smoke-chaos``).
+"""
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config               # noqa: E402
+from repro.models import build_model               # noqa: E402
+from repro.nn.params import init_params            # noqa: E402
+from repro.serve import ContinuousEngine, ServeConfig  # noqa: E402
+
+LENGTHS = (6, 20, 10, 28, 14, 8)
+
+
+def _submit_round(eng, rng, vocab, lengths):
+    # Token ids MUST stay in-vocab: an out-of-range embedding gather
+    # produces NaN logits, which the poison probe (correctly) quarantines.
+    for length in lengths:
+        eng.submit(rng.integers(1, vocab, int(length)).tolist())
+    return {r.uid: r for r in eng.run()}
+
+
+def run(chaos: bool):
+    cfg = get_config("mamba2-130m", reduced=True).replace(
+        param_dtype="float32").with_decode_mode("cumba")
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         cfg.dtype)
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=2, prefill_buckets=(16, 32), max_new_tokens=8,
+        poison_probe="logits", strict_recompile=True))
+    rng = np.random.default_rng(0)
+    try:
+        # Warmup visits both prefill buckets; any program shape first seen
+        # after reset_stats() would count as a post-warmup retrace.
+        _submit_round(eng, rng, cfg.vocab_size, (6, 20, 10, 28))
+        eng.reset_stats()
+        if chaos:
+            base = eng.poll_index
+            eng.set_fault_plan(
+                f"poison@{base + 2}:slot=0;"
+                f"stall@{base + 4}:program=decode,stall_s=0.05;"
+                f"fail@{base + 6}:program=decode")
+        done = _submit_round(eng, rng, cfg.vocab_size, LENGTHS)
+    finally:
+        eng.close()
+    trips = {k: s.trips for k, s in eng.sentinels.items()}
+    return done, eng.metrics, trips, eng
+
+
+def main():
+    base, _, _, _ = run(chaos=False)
+    done, metrics, trips, eng = run(chaos=True)
+
+    assert set(base) == set(done), (sorted(base), sorted(done))
+    poisoned = [r for r in done.values() if r.status == "poisoned"]
+    healthy = [r for r in done.values() if r.status == "ok"]
+    assert len(poisoned) == 1, [r.status for r in done.values()]
+    assert len(healthy) == len(LENGTHS) - 1
+    for r in healthy:
+        assert r.out_tokens == base[r.uid].out_tokens, (
+            f"healthy request {r.uid} diverged under chaos: "
+            f"{r.out_tokens} != {base[r.uid].out_tokens}")
+
+    fired = eng._injector.summary()["fired"]
+    assert fired == {"poison": 1, "fail": 1, "stall": 1}, fired
+    assert metrics.quarantined == 1, metrics.quarantined
+    assert metrics.backend_fallbacks == 1, metrics.backend_fallbacks
+    assert metrics.shed_reasons == {"poison": 1}, metrics.shed_reasons
+    assert metrics.completed == len(LENGTHS) - 1, metrics.completed
+    assert eng.model.cfg.xamba.decode == "naive", eng.model.cfg.xamba.decode
+    assert not any(trips.values()), f"post-warmup recompiles: {trips}"
+    print(f"smoke-chaos OK: {len(healthy)}/{len(LENGTHS)} healthy requests "
+          f"greedy-identical under chaos (1 quarantined), fired={fired}, "
+          f"fallback cumba->naive, trips={trips}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,9 +26,12 @@ from repro.nn.params import init_params            # noqa: E402
 from repro.serve import ContinuousEngine, ServeConfig  # noqa: E402
 
 
-def _submit_round(eng, rng, lengths):
+def _submit_round(eng, rng, vocab, lengths):
+    # Token ids must stay in-vocab: an out-of-range embedding gather
+    # yields NaN logits, making every greedy comparison vacuous (argmax
+    # of an all-NaN row is always index 0).
     for length in lengths:
-        eng.submit(rng.integers(1, 4000, int(length)).tolist())
+        eng.submit(rng.integers(1, vocab, int(length)).tolist())
     return {r.uid: r.out_tokens for r in eng.run()}
 
 
@@ -45,9 +48,10 @@ def run(speculate_k: int):
     try:
         # Warmup must visit BOTH prefill buckets: any program shape first
         # seen after reset_stats() counts as a post-warmup retrace.
-        warm = _submit_round(eng, rng, (6, 20, 10, 28))
+        warm = _submit_round(eng, rng, cfg.vocab_size, (6, 20, 10, 28))
         eng.reset_stats()
-        post = _submit_round(eng, rng, rng.integers(4, 30, 6))
+        post = _submit_round(eng, rng, cfg.vocab_size,
+                             rng.integers(4, 30, 6))
     finally:
         eng.close()
     trips = {k: s.trips for k, s in eng.sentinels.items()}

@@ -87,6 +87,44 @@ def main(argv=None):
     ap.add_argument("--watchdog-s", type=float, default=0.0,
                     help="flag the run as hung if no engine step completes "
                          "for this many seconds (0 = off)")
+    ap.add_argument("--watchdog-action", choices=("log", "recover"),
+                    default="log",
+                    help="hang-watchdog escalation: 'recover' aborts the "
+                         "stuck burst at the next poll and requeues its "
+                         "requests with bounded retries (docs/robustness.md)")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="chaos fault-injection schedule, e.g. "
+                         "'poison@5:slot=1;fail@8:program=decode;"
+                         "stall@12:stall_s=0.2' (continuous engine; see "
+                         "repro.runtime.faults.parse_plan)")
+    ap.add_argument("--max-queue-depth", type=int, default=0,
+                    help="bounded admission queue: submit() rejects once "
+                         "this many requests queue (0 = unbounded)")
+    ap.add_argument("--overload-queue-depth", type=int, default=0,
+                    help="enter degraded overload mode at this queue depth "
+                         "(prefill budget 0, speculation paused; 0 = off)")
+    ap.add_argument("--overload-ttft-p95-s", type=float, default=0.0,
+                    help="also enter degraded mode when TTFT p95 crosses "
+                         "this many seconds (0 = off)")
+    ap.add_argument("--poison-probe", choices=("off", "logits", "state"),
+                    default="off",
+                    help="NaN/Inf quarantine probes: 'logits' checks the "
+                         "step's host logits, 'state' adds a jitted per-row "
+                         "state finiteness probe")
+    ap.add_argument("--poison-check-every", type=int, default=1,
+                    help="run poison probes every N polls (amortizes the "
+                         "'state' probe)")
+    ap.add_argument("--no-backend-fallback", action="store_true",
+                    help="disable the pallas->cumba->naive decode-mode "
+                         "fallback on compiled-call failures")
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="watchdog-recovery requeue budget per request")
+    ap.add_argument("--retry-backoff-s", type=float, default=0.0,
+                    help="base for exponential retry backoff (0 = requeue "
+                         "immediately)")
+    ap.add_argument("--shed-inflight", action="store_true",
+                    help="also shed staged/decoding requests whose deadline "
+                         "passed (default: deadlines only shed queued work)")
     ap.add_argument("--strict-recompile", action="store_true",
                     help="raise RecompileError if a compile-once program "
                          "(decode / prefill_chunk) retraces after warmup")
@@ -133,7 +171,20 @@ def main(argv=None):
                      if args.engine == "continuous" else 0),
         trace=args.trace, metrics_every=args.metrics_every,
         watchdog_s=args.watchdog_s,
-        strict_recompile=args.strict_recompile)
+        watchdog_action=args.watchdog_action,
+        strict_recompile=args.strict_recompile,
+        fault_plan=(args.fault_plan
+                    if args.engine == "continuous" else None),
+        max_queue_depth=args.max_queue_depth,
+        overload_queue_depth=args.overload_queue_depth,
+        overload_ttft_p95_s=args.overload_ttft_p95_s,
+        poison_probe=(args.poison_probe
+                      if args.engine == "continuous" else "off"),
+        poison_check_every=args.poison_check_every,
+        backend_fallback=not args.no_backend_fallback,
+        max_retries=args.max_retries,
+        retry_backoff_s=args.retry_backoff_s,
+        shed_inflight=args.shed_inflight)
     engine_cls = ContinuousEngine if args.engine == "continuous" else Engine
     engine = engine_cls(model, params, scfg)
 
@@ -174,6 +225,14 @@ def main(argv=None):
         log.warning("health: %d decode stragglers, %d prefill stragglers, "
                     "%d watchdog fires", m["stragglers_decode"],
                     m["stragglers_prefill"], m["watchdog_fires"])
+    if m.get("rejected") or m.get("quarantined") or m.get("shed") or \
+            m.get("backend_fallbacks") or m.get("watchdog_recoveries"):
+        log.warning("robustness: %d rejected, %d quarantined, %d shed %s, "
+                    "%d backend fallbacks, %d watchdog recoveries, "
+                    "%d retries", m.get("rejected", 0),
+                    m.get("quarantined", 0), m.get("shed", 0),
+                    m.get("shed_reasons", {}), m.get("backend_fallbacks", 0),
+                    m.get("watchdog_recoveries", 0), m.get("retries", 0))
     trips = {k: s.trips for k, s in engine.sentinels.items() if s.trips}
     if trips:
         log.warning("recompile sentinels tripped: %s", trips)

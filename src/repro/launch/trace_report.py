@@ -218,6 +218,24 @@ def snapshots(events: List[dict]) -> List[dict]:
             if ev.get("ph") == "i" and ev.get("name") == "metrics_snapshot"]
 
 
+# Robustness instants (docs/robustness.md) the report tallies.  All are
+# zero-duration, so their presence never perturbs the phase-coverage
+# reconciliation --check asserts.
+FAULT_EVENTS = ("quarantine", "backend_fallback", "overload_enter",
+                "overload_exit", "watchdog_hang", "watchdog_recover",
+                "reject", "shed", "retry", "snapshot_poison_refused")
+
+
+def fault_events(events: List[dict]) -> Dict[str, int]:
+    """Tally of fault-tolerance instants in the trace (quarantines,
+    fallbacks, overload transitions, sheds...)."""
+    out: Dict[str, int] = defaultdict(int)
+    for ev in events:
+        if ev.get("ph") == "i" and ev.get("name") in FAULT_EVENTS:
+            out[ev["name"]] += 1
+    return dict(out)
+
+
 def analyze(events: List[dict]) -> Dict[str, Any]:
     table = request_table(events)
     return {
@@ -226,6 +244,7 @@ def analyze(events: List[dict]) -> Dict[str, Any]:
         "requests": table,
         "slot_utilization": slot_utilization(events),
         "recompile_trips": recompile_trips(events),
+        "fault_events": fault_events(events),
         "metrics_snapshots": len(snapshots(events)),
     }
 
@@ -277,6 +296,10 @@ def print_report(rep: Dict[str, Any], max_requests: int = 20) -> None:
     trips = rep["recompile_trips"]
     print(f"\nrecompile trips: {trips or 'none'}   metrics snapshots: "
           f"{rep['metrics_snapshots']}")
+    faults = rep.get("fault_events") or {}
+    if faults:
+        print("fault events: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(faults.items())))
 
 
 def check(rep: Dict[str, Any], tolerance: float = 0.05) -> List[str]:

@@ -1,3 +1,6 @@
-from repro.runtime.elastic import (RestartPolicy, reshard_state,  # noqa: F401
-                                   run_with_restarts)
+from repro.runtime.elastic import (RestartOutcome,  # noqa: F401
+                                   RestartPolicy, backoff_delay_s,
+                                   reshard_state, run_with_restarts)
+from repro.runtime.faults import (FaultEvent, FaultInjector,  # noqa: F401
+                                  InjectedBackendError)
 from repro.runtime.health import StepMonitor, Watchdog  # noqa: F401

@@ -1,0 +1,232 @@
+"""Fault-injection harness for the serve stack (chaos testing).
+
+XAMBA's target deployments are always-on edge services: the serve loop
+must *survive* numerical poison, backend failures, stragglers and
+overload, and the only way to trust that is to inject those faults into
+the real engine loop and assert the blast radius.  This module is the
+schedule-driven injector the chaos tests, ``scripts/smoke_chaos.py`` and
+``benchmarks/bench_serve_chaos.py`` drive the :class:`ContinuousEngine`
+with (threaded through ``ServeConfig.fault_plan``;
+``docs/robustness.md`` has the taxonomy).
+
+Faults are **events on the engine's poll clock** — deterministic given
+the plan and seed, so a chaotic run is reproducible and comparable
+byte-for-byte against a fault-free control run:
+
+====================  =====================================================
+``poison``            overwrite one slot's recurrent state with NaN/Inf
+                      (numerical poison: a bad kernel, an overflow) — the
+                      engine's quarantine probes must contain it
+``fail``              raise :class:`InjectedBackendError` at the compiled-
+                      call boundary of one program (simulated kernel /
+                      backend failure) — the backend fallback chain must
+                      re-dispatch
+``stall``             sleep inside one compiled-call window (straggler /
+                      hung device) — StepMonitor must flag it, and past
+                      ``watchdog_s`` the watchdog escalation must recover
+``snap_drop``         drop one prefix-cache snapshot insert (lost write)
+``snap_corrupt``      corrupt one prefix-cache snapshot with NaN before
+                      insert — the poison gate must refuse it
+====================  =====================================================
+
+Every fault fires **once** (``fired`` latch); ``summary()`` reports what
+actually fired so tests can assert the plan executed.  The injector
+raises *before* the jitted call runs, so donated arenas are never left
+half-consumed by a simulated failure (see
+``serve/continuous.py: _guarded_call``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+log = logging.getLogger("repro.serve")
+
+FAULT_KINDS = ("poison", "fail", "stall", "snap_drop", "snap_corrupt")
+
+
+class InjectedBackendError(RuntimeError):
+    """Simulated compiled-call failure (kernel crash, backend loss)."""
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One scheduled fault.  ``poll`` is the engine poll index (post-
+    warmup, i.e. after ``reset_stats``) at which the fault arms; it fires
+    at the first opportunity from that poll on (e.g. a ``poison`` needs a
+    live slot) and then never again."""
+    kind: str
+    poll: int
+    slot: int = 0                 # poison: target slot (clamped to live)
+    program: str = "decode"       # fail/stall: which compiled program
+    stall_s: float = 0.1          # stall: injected sleep
+    mode: str = "nan"             # poison/snap_corrupt payload: nan | inf
+    fired: bool = False
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of "
+                f"{FAULT_KINDS}")
+        if self.mode not in ("nan", "inf"):
+            raise ValueError(f"poison mode {self.mode!r} not in (nan, inf)")
+
+
+def _parse_event(token: str) -> FaultEvent:
+    """One spec token: ``kind@poll[:k=v[,k=v...]]`` — e.g.
+    ``poison@5:slot=1,mode=inf`` or ``fail@8:program=decode``."""
+    head, _, tail = token.partition(":")
+    kind, _, at = head.partition("@")
+    if not at:
+        raise ValueError(
+            f"fault spec {token!r}: expected kind@poll[:k=v,...]")
+    kw = {}
+    if tail:
+        for pair in tail.split(","):
+            k, _, v = pair.partition("=")
+            if k in ("slot", "poll"):
+                kw[k] = int(v)
+            elif k == "stall_s":
+                kw[k] = float(v)
+            elif k in ("program", "mode"):
+                kw[k] = v
+            else:
+                raise ValueError(f"fault spec {token!r}: unknown key {k!r}")
+    return FaultEvent(kind=kind.strip(), poll=int(at), **kw)
+
+
+def parse_plan(spec: str) -> List[FaultEvent]:
+    """Parse a plan spec string: ``;``-separated event tokens (see
+    :func:`_parse_event`); whitespace is ignored."""
+    return [_parse_event(tok.strip())
+            for tok in spec.split(";") if tok.strip()]
+
+
+class FaultInjector:
+    """Schedule-driven fault injector for one engine.
+
+    ``plan`` is a sequence of :class:`FaultEvent` (or a spec string — see
+    :func:`parse_plan`).  ``seed`` derives the poison payloads (the NaN/
+    Inf pattern is seeded noise, not a constant, so probes cannot pass by
+    accident of a special value).  The injector is host-side and cheap:
+    each hook is a list scan over the (tiny) plan.
+    """
+
+    def __init__(self, plan: Iterable[FaultEvent] | str, seed: int = 0):
+        if isinstance(plan, str):
+            plan = parse_plan(plan)
+        self.plan: List[FaultEvent] = list(plan)
+        for ev in self.plan:
+            if not isinstance(ev, FaultEvent):
+                raise TypeError(f"fault plan entries must be FaultEvent, "
+                                f"got {type(ev).__name__}")
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+
+    # -- hooks (called by ContinuousEngine) --------------------------------
+    def _due(self, kind: str, poll: int,
+             program: Optional[str] = None) -> Optional[FaultEvent]:
+        for ev in self.plan:
+            if (ev.kind == kind and not ev.fired and poll >= ev.poll and
+                    (program is None or ev.program == program)):
+                return ev
+        return None
+
+    def poison_targets(self, poll: int,
+                       live_slots: Sequence[int]) -> List[Tuple[int, str]]:
+        """Due ``poison`` events: ``[(slot, mode)]`` to corrupt this poll.
+        A poison waits for a live slot (corrupting a dead row would be
+        invisible); the target clamps onto the live set deterministically.
+        """
+        out = []
+        while True:
+            ev = self._due("poison", poll)
+            if ev is None or not live_slots:
+                return out
+            slot = (ev.slot if ev.slot in live_slots
+                    else live_slots[ev.slot % len(live_slots)])
+            ev.fired = True
+            log.warning("FAULT INJECTED: poison(%s) slot %d at poll %d",
+                        ev.mode, slot, poll)
+            out.append((slot, ev.mode))
+
+    def poison_payload(self, shape, mode: str) -> np.ndarray:
+        """Seeded corruption payload: noise with NaN/Inf sprinkled at
+        ~25%% of positions (at least one)."""
+        x = self._rng.standard_normal(shape).astype(np.float32)
+        bad = self._rng.random(shape) < 0.25
+        flat = bad.reshape(-1)
+        if not flat.any():
+            flat[self._rng.integers(flat.size)] = True
+        x[bad.reshape(x.shape)] = np.nan if mode == "nan" else np.inf
+        return x
+
+    def corrupt(self, pytree, mode: str = "nan"):
+        """NaN/Inf-corrupt every float leaf of a (host) state pytree."""
+        import jax
+
+        def leaf(x):
+            a = np.asarray(x)
+            if not np.issubdtype(a.dtype, np.floating):
+                return x
+            return self.poison_payload(a.shape, mode).astype(a.dtype)
+
+        return jax.tree.map(leaf, pytree)
+
+    def pre_call(self, program: str, poll: int) -> None:
+        """Compiled-call boundary hook: stall (sleep inside the call's
+        timing window) and/or raise a simulated backend failure.  Raises
+        BEFORE the jitted call so donated buffers stay intact."""
+        ev = self._due("stall", poll, program)
+        if ev is not None:
+            ev.fired = True
+            log.warning("FAULT INJECTED: stall %.3fs in %s at poll %d",
+                        ev.stall_s, program, poll)
+            import time
+            time.sleep(ev.stall_s)
+        ev = self._due("fail", poll, program)
+        if ev is not None:
+            ev.fired = True
+            log.warning("FAULT INJECTED: %s backend failure at poll %d",
+                        program, poll)
+            raise InjectedBackendError(
+                f"injected {program} failure at poll {poll}")
+
+    def snapshot_fault(self, poll: int) -> Optional[str]:
+        """Due prefix-snapshot fault for an insert happening this poll:
+        ``"drop"`` / ``"corrupt"`` / None."""
+        ev = self._due("snap_drop", poll)
+        if ev is not None:
+            ev.fired = True
+            log.warning("FAULT INJECTED: snapshot drop at poll %d", poll)
+            return "drop"
+        ev = self._due("snap_corrupt", poll)
+        if ev is not None:
+            ev.fired = True
+            log.warning("FAULT INJECTED: snapshot corrupt at poll %d", poll)
+            return "corrupt"
+        return None
+
+    # -- reporting ---------------------------------------------------------
+    def summary(self) -> dict:
+        """Fired/pending counts per kind (tests assert the plan ran)."""
+        fired = {k: 0 for k in FAULT_KINDS}
+        pending = {k: 0 for k in FAULT_KINDS}
+        for ev in self.plan:
+            (fired if ev.fired else pending)[ev.kind] += 1
+        return {"fired": {k: v for k, v in fired.items() if v},
+                "pending": {k: v for k, v in pending.items() if v},
+                "events": len(self.plan)}
+
+
+def as_injector(plan) -> Optional[FaultInjector]:
+    """Coerce ``ServeConfig.fault_plan`` (None | FaultInjector | spec
+    string | iterable of FaultEvent) into a FaultInjector."""
+    if plan is None:
+        return None
+    if isinstance(plan, FaultInjector):
+        return plan
+    return FaultInjector(plan)

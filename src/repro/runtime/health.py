@@ -4,10 +4,17 @@ In SPMD data-parallel training a straggling host slows every step (the
 collectives synchronize), so detection is: robust per-step timing stats and
 a policy hook.  ``StepMonitor`` keeps a rolling window, flags steps slower
 than ``threshold x median`` (straggler) and exposes a deadline watchdog
-(hang -> the restart loop in runtime/elastic.py takes over).  At real
-multi-host scale the same monitor runs per host and the flags are
-aggregated through the (out-of-band) coordination service; the policy and
-statistics are identical.
+(hang -> the restart loop in runtime/elastic.py, or — in the serve stack —
+``ContinuousEngine``'s watchdog recovery, takes over).  At real multi-host
+scale the same monitor runs per host and the flags are aggregated through
+the (out-of-band) coordination service; the policy and statistics are
+identical.
+
+Memory discipline: a serve loop calls ``observe`` once per compiled call,
+forever.  The monitor therefore keeps only the rolling ``window`` of
+records/durations on hand (the straggler baseline never needed more) while
+``summary()`` reports *cumulative* counts from O(1) accumulators — a
+long-running server's monitors stay constant-size.
 """
 from __future__ import annotations
 
@@ -31,10 +38,20 @@ class StepMonitor:
         self.window = window
         self.factor = straggler_factor
         self.warmup = warmup_steps
+        # Rolling views (trimmed to ``window``)...
         self.records: List[StepRecord] = []
         self._durations: List[float] = []
+        # ...and cumulative accumulators for summary().
+        self.total_steps = 0
+        self.total_time_s = 0.0
+        self.total_stragglers = 0
+        self.max_s = 0.0
 
-    def observe(self, step: int, seconds: float) -> StepRecord:
+    def observe(self, step: Optional[int] = None,
+                seconds: float = 0.0) -> StepRecord:
+        """Record one step; ``step`` defaults to the cumulative count."""
+        if step is None:
+            step = self.total_steps
         baseline = self._durations[-self.window:]
         is_straggler = False
         if len(baseline) >= self.warmup:
@@ -43,27 +60,47 @@ class StepMonitor:
         self._durations.append(seconds)
         rec = StepRecord(step, seconds, is_straggler)
         self.records.append(rec)
+        # Constant-memory rolling window (satellite fix: these two lists
+        # previously grew forever under a long-running serve loop).
+        if len(self._durations) > self.window:
+            del self._durations[:-self.window]
+            del self.records[:-self.window]
+        self.total_steps += 1
+        self.total_time_s += seconds
+        self.max_s = max(self.max_s, seconds)
+        if is_straggler:
+            self.total_stragglers += 1
         return rec
 
     @property
     def straggler_steps(self) -> List[int]:
+        """Straggler step indices within the rolling window (cumulative
+        count: ``summary()['stragglers']``)."""
         return [r.step for r in self.records if r.straggler]
 
     def summary(self) -> dict:
-        if not self._durations:
+        """Cumulative stats (count/mean/max/stragglers over every step
+        ever observed) + the rolling window's median."""
+        if not self.total_steps:
             return {"steps": 0}
-        ds = self._durations
         return {
-            "steps": len(ds),
-            "mean_s": sum(ds) / len(ds),
-            "median_s": statistics.median(ds),
-            "max_s": max(ds),
-            "stragglers": len(self.straggler_steps),
+            "steps": self.total_steps,
+            "mean_s": self.total_time_s / self.total_steps,
+            "median_s": statistics.median(self._durations),
+            "max_s": self.max_s,
+            "stragglers": self.total_stragglers,
         }
 
 
 class Watchdog:
-    """Fires ``on_hang`` if ``pet()`` is not called within ``deadline_s``."""
+    """Fires ``on_hang`` if ``pet()`` is not called within ``deadline_s``.
+
+    The callback fires at most ONCE per hang: after a fire the watchdog
+    latches until the next ``pet()`` (i.e. until some step completes
+    again), so a slow recovery path is not re-entered by its own trigger.
+    ``fired`` stays True once any hang was ever detected; the latch is
+    internal re-fire suppression.
+    """
 
     def __init__(self, deadline_s: float,
                  on_hang: Optional[Callable[[], None]] = None):
@@ -72,19 +109,29 @@ class Watchdog:
         self._last = time.monotonic()
         self._stop = threading.Event()
         self.fired = False
+        self._latched = False       # fired for the CURRENT hang; pet() clears
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
     def pet(self):
         self._last = time.monotonic()
+        self._latched = False
 
     def _run(self):
         while not self._stop.wait(min(self.deadline_s / 4, 1.0)):
+            if self._latched:
+                continue            # same hang: recovery still running
             if time.monotonic() - self._last > self.deadline_s:
                 self.fired = True
+                self._latched = True
                 if self.on_hang:
                     self.on_hang()
-                self._last = time.monotonic()
+
+    @property
+    def alive(self) -> bool:
+        """Whether the watchdog thread is still running (False after a
+        successful ``stop()`` join)."""
+        return self._thread.is_alive()
 
     def stop(self):
         self._stop.set()

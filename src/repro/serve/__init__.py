@@ -25,6 +25,15 @@ snapshot — outputs stay byte-identical to the non-speculative path
 because the continuous engine keys sampling noise on (seed, uid,
 position) (``sampling.sample_keyed``).
 
+Fault tolerance (docs/robustness.md): ``ServeConfig.fault_plan`` threads
+a :class:`~repro.runtime.faults.FaultInjector` chaos schedule through the
+continuous engine; ``max_queue_depth`` bounds admission with explicit
+backpressure, ``overload_queue_depth`` adds a degraded overload mode,
+``poison_probe`` quarantines NaN/Inf slots, ``backend_fallback`` degrades
+the decode mode (pallas -> cumba -> naive) on compiled-call failures, and
+``watchdog_action="recover"`` escalates the hang watchdog to engine-level
+recovery with bounded retries.
+
 Observability (``tracing.py`` + ``metrics.py``; docs/observability.md):
 ``ServeConfig.trace`` turns on per-request span tracing through a
 :class:`Tracer` (Chrome/Perfetto JSON + JSONL event log, folded into
@@ -32,6 +41,8 @@ reports by ``launch/trace_report.py``), ``metrics_every`` emits periodic
 metrics snapshots, and :class:`RecompileSentinel` makes the compile-once
 discipline a checked invariant.
 """
+from repro.runtime.faults import (FaultEvent, FaultInjector,  # noqa: F401
+                                  InjectedBackendError, parse_plan)
 from repro.serve.continuous import ContinuousEngine  # noqa: F401
 from repro.serve.engine import Engine, ServeConfig  # noqa: F401
 from repro.serve.metrics import (RateMeter, ServeMetrics,  # noqa: F401

@@ -76,6 +76,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.elastic import backoff_delay_s
+from repro.runtime.faults import as_injector
 from repro.runtime.health import StepMonitor, Watchdog
 from repro.serve.engine import EngineBase, ServeConfig
 from repro.serve.prefix_cache import PrefixCache, chunk_key
@@ -88,6 +90,13 @@ from repro.serve.tracing import (TID_HOST, TID_QUEUE, TID_SLOT0,
                                  RecompileSentinel)
 
 log = logging.getLogger("repro.serve")
+
+# Backend degradation ladder (docs/robustness.md): on a compiled-call
+# failure the engine rebuilds the model one decode mode down and retries.
+# Every xamba decode mode shares one cache layout (``init_cache`` is
+# mode-independent), so the live pools survive the swap untouched.
+_FALLBACK_NEXT = {"pallas": "cumba", "pallas_interpret": "cumba",
+                  "cumba": "naive"}
 
 
 class ContinuousEngine(EngineBase):
@@ -135,6 +144,10 @@ class ContinuousEngine(EngineBase):
                 from repro.nn import quant
                 draft_params = quant.quantize_params_for_mode(
                     params, getattr(cfg, "speculate_draft", "w8"))
+            # Raw (un-sliced) draft pytree kept for backend-fallback
+            # rebuilds: decode_view must re-derive from it, not from its
+            # own output.
+            self._raw_draft = draft_params
             self._draft_params = getattr(model, "decode_view",
                                          lambda p: p)(draft_params)
             # Two more arenas over the decode-pool layout: the draft
@@ -233,7 +246,40 @@ class ContinuousEngine(EngineBase):
         self.monitor_spec = StepMonitor()
         self._watchdog: Optional[Watchdog] = None
         if getattr(cfg, "watchdog_s", 0.0):
+            if getattr(cfg, "watchdog_action", "log") not in ("log",
+                                                              "recover"):
+                raise ValueError(
+                    f"watchdog_action must be 'log' or 'recover', got "
+                    f"{cfg.watchdog_action!r}")
             self._watchdog = Watchdog(cfg.watchdog_s, on_hang=self._on_hang)
+        # -- fault tolerance (docs/robustness.md) ---------------------------
+        probe = getattr(cfg, "poison_probe", "off") or "off"
+        if probe not in ("off", "logits", "state"):
+            raise ValueError(f"poison_probe must be off|logits|state, "
+                             f"got {probe!r}")
+        self._poison_probe = probe
+        self._injector = as_injector(getattr(cfg, "fault_plan", None))
+        self._poll_idx = 0          # engine poll clock (fault schedule base)
+        self._overloaded = False    # degraded overload mode latch
+        self._recover_pending = False   # watchdog asked for a recovery
+        self._state_probe = None
+        if probe == "state":
+            self._state_probe = self._build_state_probe()
+            # Warm the probe now so its one compile lands in construction,
+            # not mid-serve (the pool cache is read, never donated).
+            np.asarray(self._state_probe(self.pool.cache))
+
+    @property
+    def poll_index(self) -> int:
+        """The engine's poll clock — fault-plan event polls are absolute,
+        so chaos drivers arm plans relative to this after warmup."""
+        return self._poll_idx
+
+    def set_fault_plan(self, plan) -> None:
+        """(Re)arm the fault injector mid-run: chaos harnesses warm the
+        compiled programs fault-free, then schedule events at
+        ``poll_index + k`` (None disarms)."""
+        self._injector = as_injector(plan)
 
     def _on_hang(self) -> None:
         self.metrics.watchdog_fires += 1
@@ -241,11 +287,19 @@ class ContinuousEngine(EngineBase):
                             deadline_s=self.cfg.watchdog_s)
         log.error("serve watchdog: no compiled call completed within "
                   "%.1fs — engine may be hung", self.cfg.watchdog_s)
+        if getattr(self.cfg, "watchdog_action", "log") == "recover":
+            # The watchdog thread cannot abort a compiled call; it flags
+            # the engine and the next poll() aborts the stuck burst and
+            # requeues its requests (bounded retries + backoff).
+            self._recover_pending = True
 
     def close(self) -> None:
-        """Stop the hang watchdog thread (idempotent)."""
+        """Stop the hang watchdog thread (idempotent); asserts the thread
+        actually joined so a leaked watchdog fails loudly in tests."""
         if self._watchdog is not None:
-            self._watchdog.stop()
+            wd = self._watchdog
+            wd.stop()
+            assert not wd.alive, "watchdog thread failed to join in close()"
             self._watchdog = None
 
     def reset_stats(self) -> None:
@@ -263,12 +317,355 @@ class ContinuousEngine(EngineBase):
                       dt_s: float) -> None:
         """Feed one compiled-call duration to its StepMonitor; surface
         straggler flags through metrics and the trace, pet the watchdog."""
-        rec = monitor.observe(len(monitor.records), dt_s)
+        # step=None -> the monitor's cumulative count (its record list is
+        # a trimmed rolling window, so len(records) is NOT the step index).
+        rec = monitor.observe(None, dt_s)
         if rec.straggler:
             self.metrics.record_straggler(kind)
             self.tracer.instant(f"straggler_{kind}", seconds=dt_s)
         if self._watchdog is not None:
             self._watchdog.pet()
+
+    # ------------------------------------------------------------------
+    # fault tolerance (docs/robustness.md)
+    # ------------------------------------------------------------------
+    def _guarded_call(self, program: str, fn):
+        """Run one compiled call behind the fault boundary: the injector's
+        pre-call hook (stalls; simulated failures raise *before* the jit
+        executes, so donated arenas stay intact) and the backend fallback
+        chain.  ``fn`` must re-read the engine's program attributes
+        (``self._decode`` etc.) so a retry picks up the rebuilt jits."""
+        try:
+            if self._injector is not None:
+                self._injector.pre_call(program, self._poll_idx)
+            return fn()
+        except Exception as e:  # noqa: BLE001 — the fallback boundary
+            if not self._try_fallback(program, e):
+                raise
+            return fn()
+
+    def _try_fallback(self, program: str, err: Exception) -> bool:
+        """Degrade one decode mode down the ladder and report whether a
+        retry is worth attempting.  A real (non-injected) failure that
+        already consumed a donated arena will fail its retry too — that
+        re-raise is the honest outcome."""
+        if not getattr(self.cfg, "backend_fallback", True):
+            return False
+        mode = self.model.cfg.xamba.decode
+        nxt = _FALLBACK_NEXT.get(mode)
+        if nxt is None:
+            log.error("backend failure in %s with decode mode %r and no "
+                      "fallback left: %s", program, mode, err)
+            return False
+        log.error("backend failure in %s (decode mode %r): %s — falling "
+                  "back to %r", program, mode, err, nxt)
+        self._rebuild_backend(nxt)
+        self.metrics.record_backend_fallback()
+        self.tracer.instant("backend_fallback", program=program,
+                            from_mode=mode, to_mode=nxt, error=str(err))
+        return True
+
+    def _rebuild_backend(self, mode: str) -> None:
+        """Rebuild the model and every compiled program at decode mode
+        ``mode``, then re-warm them all at serve shapes.  Cache layouts
+        are identical across xamba decode modes, so the pools (and their
+        compiled row ops) survive; the fresh jits get fresh sentinels
+        armed over the re-warmup's traces — a fallback never reads as a
+        post-warmup retrace."""
+        from repro.models.registry import build_model
+        model = build_model(self.model.cfg.with_decode_mode(mode))
+        self.model = model
+        strict = getattr(self.cfg, "strict_recompile", False)
+        self._decode_params = getattr(model, "decode_view",
+                                      lambda p: p)(self.params)
+        self._prefill = jax.jit(
+            lambda p, batch, cache: model.prefill(p, batch, cache))
+        self._decode = jax.jit(
+            lambda p, tok, cache, idx: model.decode_step(p, tok, cache, idx),
+            donate_argnums=(2,))
+        self.sentinels["decode"] = RecompileSentinel("decode", self._decode,
+                                                     strict=strict)
+        self.sentinels["prefill"] = RecompileSentinel("prefill",
+                                                      self._prefill,
+                                                      strict=strict)
+        for pool in (self.pool,
+                     getattr(self, "_ppool", None),
+                     getattr(self, "_dpool", None),
+                     getattr(self, "_bpool", None)):
+            if pool is not None:
+                pool.model = model  # snapshot export/import path
+        if self.chunk:
+            self._chunk_step = jax.jit(
+                lambda p, toks, cache, off:
+                model.prefill_chunk(p, toks, cache, off),
+                donate_argnums=(2,))
+            self.sentinels["prefill_chunk"] = RecompileSentinel(
+                "prefill_chunk", self._chunk_step, strict=strict)
+        if self.spec_k:
+            self._draft_params = getattr(model, "decode_view",
+                                         lambda p: p)(self._raw_draft)
+            self._verify = jax.jit(
+                lambda p, toks, cache, off:
+                model.verify_chunk(p, toks, cache, off),
+                donate_argnums=(2,))
+            self.sentinels["verify"] = RecompileSentinel(
+                "verify", self._verify, strict=strict)
+        if self._state_probe is not None:
+            self._state_probe = self._build_state_probe()
+        # A rebuild is a new warmup: trace every rebuilt program at its
+        # serve shapes NOW, on throwaway inputs, so all compiles land
+        # inside the fallback event.  The sentinels arm lazily, but only
+        # until the next poll's check — a program first *used* polls later
+        # (e.g. prefill at the next admission) would otherwise read as a
+        # post-warmup retrace.
+        dtype = model.cfg.dtype
+        tok = jnp.zeros((self.slots, 1), jnp.int32)
+        pos = jnp.zeros(self.slots, jnp.int32)
+        tmp = model.init_cache(self.slots, self.max_seq, dtype)
+        _, tmp = self._decode(self._decode_params, tok, tmp, pos)
+        if self.chunk:
+            ctmp = model.init_cache(self.slots, self.max_seq, dtype)
+            self._chunk_step(self.params,
+                             jnp.zeros((self.slots, self.chunk), jnp.int32),
+                             ctmp, pos)
+        else:
+            # Monolithic prefill is functional (no donation): _scratch
+            # rides through untouched, exactly like a real admission.
+            for bucket in self.buckets:
+                self._prefill(self.params,
+                              {"tokens": jnp.full((self.slots, bucket),
+                                                  self.cfg.pad_id,
+                                                  jnp.int32)},
+                              self._scratch)
+        if self.spec_k:
+            _, tmp = self._verify(
+                self.params,
+                jnp.zeros((self.slots, self.spec_k), jnp.int32), tmp, pos)
+            _, tmp = self._decode(self._draft_params, tok, tmp, pos)
+            self._decode(self._draft_params, tok, tmp, pos)
+
+    def _build_state_probe(self):
+        """Jitted all-rows finiteness probe over the decode pool: one
+        ``bool[slots]`` gather per check (compiled once — the cache layout
+        never changes).  Integer leaves are trivially finite but ride
+        through the float32 cast rather than special-casing the tree."""
+        slots = self.slots
+        axes = self.pool.batch_axes
+
+        def probe(cache):
+            def leaf(x, ax):
+                flat = jnp.moveaxis(x.astype(jnp.float32), ax, 0)
+                flat = flat.reshape(slots, -1)
+                return jnp.all(jnp.isfinite(flat), axis=1)
+            flags = jax.tree.map(leaf, cache, axes)
+            return jnp.all(jnp.stack(jax.tree.leaves(flags)), axis=0)
+
+        return jax.jit(probe)
+
+    def _quarantine(self, slot: int, now: float, where: str) -> None:
+        """Contain a poisoned slot: zero its pool row (the compile-once
+        reset scatter), finish its request with status ``poisoned`` (NOT
+        counted as a completion), and free the slot.  Neighbour slots and
+        the prefix cache are untouched."""
+        req = self._slot_req[slot]
+        self.pool.reset_rows([slot])
+        self._pos[slot] = 0
+        self._next_tok[slot] = self.cfg.pad_id
+        if self.spec_k:
+            self._overflow[slot] = []
+        self._slot_req[slot] = None
+        req.done = True
+        req.status = "poisoned"
+        req.finish_s = now
+        req.latency_s = now - req.arrival_s
+        self.metrics.record_quarantine()
+        self.metrics.record_shed("poison")
+        self.tracer.instant("quarantine", uid=req.uid, slot=slot,
+                            where=where, tokens=len(req.out_tokens))
+        log.error("request %d: non-finite %s output in slot %d — "
+                  "quarantined (row reset, request shed)", req.uid, where,
+                  slot)
+        self._finished.append(req)
+
+    def _probe_rows(self, live: List[int], host_logits: np.ndarray,
+                    now: float, where: str) -> List[int]:
+        """Poison probe over one step's live rows: NaN/Inf in the (already
+        host-side) logits, plus — in ``state`` mode — the jitted per-row
+        state finiteness probe.  Quarantines every hit; returns the
+        quarantined slots."""
+        if self._poison_probe == "off" or not live:
+            return []
+        every = max(1, getattr(self.cfg, "poison_check_every", 1))
+        if self._poll_idx % every:
+            return []
+        self.metrics.record_poison_probe()
+        lg = host_logits.reshape(host_logits.shape[0], -1)
+        # One vectorized pass over the whole batch, then bail on the
+        # all-finite common case: the probe runs every poll of every
+        # hardened serve, and per-row np calls are ~5x the cost (a few %
+        # of a reduced-model poll; BENCH_serve.json's probe_overhead arm
+        # bounds the healthy-path total at 3%).
+        row_ok = np.isfinite(lg).all(axis=1)
+        if row_ok.all() and self._state_probe is None:
+            return []
+        bad = {i for i in live if not row_ok[i]}
+        if self._state_probe is not None:
+            finite = np.asarray(self._state_probe(self.pool.cache))
+            bad.update(i for i in live if not finite[i])
+        for i in sorted(bad):
+            self._quarantine(i, now, where)
+        return sorted(bad)
+
+    def _inject_poison(self) -> None:
+        """Apply due state-poison faults: corrupt the slot's row through
+        the pool's host snapshot/restore pair (the fault path may be slow;
+        the serving path must stay compile-once)."""
+        live = [i for i, r in enumerate(self._slot_req) if r is not None]
+        for slot, mode in self._injector.poison_targets(self._poll_idx,
+                                                        live):
+            snap = self.pool.clone_row(slot)
+            self.pool.restore_row(slot, self._injector.corrupt(snap, mode))
+
+    def _snapshot_finite(self, snap) -> bool:
+        """Host-side finiteness gate for a prefix-cache snapshot."""
+        for x in jax.tree.leaves(snap):
+            a = np.asarray(x)
+            if np.issubdtype(a.dtype, np.floating) and \
+                    not np.isfinite(a.astype(np.float32)).all():
+                return False
+        return True
+
+    def _update_overload(self) -> None:
+        """Degraded-mode state machine (docs/robustness.md): enter when
+        queue depth or cumulative TTFT p95 crosses its threshold; while
+        degraded the prefill token budget collapses to one chunk per poll
+        and speculative bursts pause.  Exit on queue depth alone, with
+        hysteresis (``overload_clear_frac``) — TTFT p95 is cumulative and
+        would latch forever."""
+        cfg = self.cfg
+        q_thresh = getattr(cfg, "overload_queue_depth", 0)
+        t_thresh = getattr(cfg, "overload_ttft_p95_s", 0.0)
+        if not q_thresh and not t_thresh:
+            return
+        depth = len(self.scheduler)
+        if not self._overloaded:
+            trip = bool(q_thresh and depth >= q_thresh) or bool(
+                t_thresh and self.metrics.ttft.count and
+                self.metrics.ttft.percentile(0.95) > t_thresh)
+            if trip:
+                self._overloaded = True
+                self.metrics.record_overload(True)
+                self.tracer.instant("overload_enter", queue_depth=depth)
+                log.warning("overload: entering degraded mode (queue "
+                            "depth %d) — prefill budget 0, speculation "
+                            "paused", depth)
+        else:
+            clear_at = (getattr(cfg, "overload_clear_frac", 0.5) * q_thresh
+                        if q_thresh else 0)
+            if depth <= clear_at:
+                self._overloaded = False
+                self.metrics.record_overload(False)
+                self.tracer.instant("overload_exit", queue_depth=depth)
+                log.info("overload cleared (queue depth %d): restoring "
+                         "prefill budget and speculation", depth)
+
+    def _shed_inflight(self, now: float) -> None:
+        """Deadline shedding for requests already past admission: decoding
+        tenants and staged (prefilling) rows whose SLA has passed free
+        their capacity for work that can still meet its deadline."""
+        for i, req in enumerate(self._slot_req):
+            if req is None or req.deadline_s is None or \
+                    now <= req.deadline_s:
+                continue
+            self.pool.reset_rows([i])
+            self._pos[i] = 0
+            self._next_tok[i] = self.cfg.pad_id
+            if self.spec_k:
+                self._overflow[i] = []
+            self._slot_req[i] = None
+            self._shed_request(req, now, "deadline", "shed_deadline")
+        if self.chunk:
+            for i, req in enumerate(self._pref_req):
+                if req is None or req.deadline_s is None or \
+                        now <= req.deadline_s:
+                    continue
+                if self._pcache is not None:
+                    self._prefix_release(i)
+                self._pref_req[i] = None
+                self._pref_toks[i] = None
+                self._shed_request(req, now, "deadline", "shed_deadline")
+
+    def _shed_request(self, req: Request, now: float, reason: str,
+                      status: str) -> None:
+        """Common in-flight shed bookkeeping (deadline / retry-exhausted):
+        the request finishes unsuccessfully and lands in both
+        ``_finished`` (the caller sees it) and ``scheduler.expired``."""
+        req.done = True
+        req.expired = True
+        req.status = status
+        req.finish_s = now
+        req.latency_s = now - req.arrival_s
+        self.metrics.record_shed(reason)
+        self.scheduler.expired.append(req)
+        self.tracer.instant("shed", uid=req.uid, reason=reason,
+                            inflight=True)
+        log.warning("request %d: shed in flight (%s)", req.uid, reason)
+        self._finished.append(req)
+
+    def _watchdog_recover(self, now: float) -> None:
+        """Engine-level hang recovery (``watchdog_action="recover"``):
+        abort every in-flight tenant and staged row, requeue each with a
+        bounded retry budget and exponential backoff, and reset their
+        rows.  Requeued requests restart from scratch — keyed sampling
+        makes the replayed stream identical, so a recovered request's
+        final output matches an undisturbed run."""
+        self._recover_pending = False
+        requeued = 0
+        for i, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            self.pool.reset_rows([i])
+            self._pos[i] = 0
+            self._next_tok[i] = self.cfg.pad_id
+            if self.spec_k:
+                self._overflow[i] = []
+            self._slot_req[i] = None
+            requeued += self._retry_or_shed(req, now)
+        if self.chunk:
+            for i, req in enumerate(self._pref_req):
+                if req is None:
+                    continue
+                if self._pcache is not None:
+                    self._prefix_release(i)
+                self._pref_req[i] = None
+                self._pref_toks[i] = None
+                requeued += self._retry_or_shed(req, now)
+        self.metrics.record_watchdog_recovery(requeued)
+        self.tracer.instant("watchdog_recover", requeued=requeued)
+        log.error("watchdog recovery: aborted stuck burst, requeued %d "
+                  "request(s)", requeued)
+
+    def _retry_or_shed(self, req: Request, now: float) -> int:
+        """Requeue an aborted request (1) or shed it (0) once its retry
+        budget is exhausted.  A retried request restarts clean: emitted
+        tokens are discarded (streaming callbacks will re-emit them) and
+        admission defers by the shared exponential-backoff curve."""
+        req.retries += 1
+        if req.retries > getattr(self.cfg, "max_retries", 1):
+            self._shed_request(req, now, "retry_exhausted",
+                               "retry_exhausted")
+            return 0
+        req.out_tokens.clear()
+        req.done = False
+        req.first_token_s = None
+        req.decode_pc = None
+        req.admit_pc = None
+        base = getattr(self.cfg, "retry_backoff_s", 0.0)
+        req.not_before_s = (now + backoff_delay_s(req.retries, base)
+                            if base else None)
+        self.tracer.instant("retry", uid=req.uid, attempt=req.retries)
+        self.scheduler.submit(req)
+        return 1
 
     def _snapshot_extra(self) -> dict:
         """Engine-side facts folded into each periodic metrics snapshot."""
@@ -280,6 +677,9 @@ class ContinuousEngine(EngineBase):
             out["monitor_spec"] = self.monitor_spec.summary()
         if self._pcache is not None:
             out["prefix_cache"] = self._pcache.stats()
+        if self._injector is not None:
+            out["fault_injector"] = self._injector.summary()
+        out["overloaded"] = self._overloaded
         return out
 
     def _buckets(self):
@@ -406,8 +806,11 @@ class ContinuousEngine(EngineBase):
                 p = req.prompt[-bucket:]
                 tokens[row, bucket - len(p):] = p
             t0 = time.perf_counter()
-            logits, cache = self._prefill(
-                self.params, {"tokens": jnp.asarray(tokens)}, self._scratch)
+            toks_dev = jnp.asarray(tokens)
+            logits, cache = self._guarded_call(
+                "prefill",
+                lambda: self._prefill(self.params, {"tokens": toks_dev},
+                                      self._scratch))
             # First tokens sample at position = bucket (tokens consumed so
             # far), keyed per owning request — see _sample_rows.
             uids = np.zeros(self.slots, np.int64)
@@ -513,6 +916,26 @@ class ContinuousEngine(EngineBase):
         nxt = cache.child(self._pref_node[row], key[depth - 1])
         if nxt is None:
             snap = self._ppool.clone_row(row, index=off)
+            if self._injector is not None:
+                fault = self._injector.snapshot_fault(self._poll_idx)
+                if fault == "drop":
+                    # Lost write: close the gate like a budget refusal —
+                    # deeper nodes would have no parent path.
+                    self._pref_insert_ok[row] = False
+                    return
+                if fault == "corrupt":
+                    snap = self._injector.corrupt(snap)
+            if self._poison_probe != "off" and \
+                    not self._snapshot_finite(snap):
+                # Poison gate: a corrupt snapshot must never enter the
+                # cross-request cache — refuse it and stop attaching
+                # deeper nodes for this request.
+                self._pref_insert_ok[row] = False
+                self.tracer.instant("snapshot_poison_refused", slot=row,
+                                    offset=off)
+                log.error("prefix snapshot at offset %d (row %d) is "
+                          "non-finite — refused", off, row)
+                return
             nxt = cache.insert(self._pref_node[row], key[depth - 1], snap)
             if nxt is None:
                 self._pref_insert_ok[row] = False
@@ -544,9 +967,12 @@ class ContinuousEngine(EngineBase):
             off = self._pref_off[i]
             tokens[i] = self._pref_toks[i][off:off + C]
         t0 = time.perf_counter()
-        logits, self._ppool.cache = self._chunk_step(
-            self.params, jnp.asarray(tokens), self._ppool.cache,
-            jnp.asarray(self._pref_off))
+        toks_dev = jnp.asarray(tokens)
+        off_dev = jnp.asarray(self._pref_off)
+        logits, self._ppool.cache = self._guarded_call(
+            "prefill_chunk",
+            lambda: self._chunk_step(self.params, toks_dev,
+                                     self._ppool.cache, off_dev))
         # Synchronize before the host-side bookkeeping so the recorded
         # chunk time is the compiled call alone — snapshot exports and
         # sampling get their own spans (phase attribution stays honest).
@@ -565,6 +991,36 @@ class ContinuousEngine(EngineBase):
                 if self._pcache is not None:
                     self._prefix_release(i)
                 done_rows.append(i)
+        if done_rows and self._poison_probe != "off":
+            # Gate the staging->decode handoff: a non-finite final-chunk
+            # logits row means the staged state is poisoned — shed it here
+            # so it never reaches the decode pool (or the prefix cache,
+            # whose inserts are separately gated in _prefix_insert).
+            lg = np.asarray(logits, np.float32)
+            now_p = time.time()
+            kept = []
+            for i in done_rows:
+                if np.isfinite(lg[i]).all():
+                    kept.append(i)
+                    continue
+                req = self._pref_req[i]
+                if self._pcache is not None:
+                    self._prefix_release(i)
+                self._pref_req[i] = None
+                self._pref_toks[i] = None
+                self._ppool.reset_rows([i])
+                req.status = "poisoned"
+                req.done = True
+                req.finish_s = now_p
+                req.latency_s = now_p - req.arrival_s
+                self.metrics.record_quarantine()
+                self.metrics.record_shed("poison")
+                self.tracer.instant("quarantine", uid=req.uid, slot=i,
+                                    where="prefill")
+                log.error("request %d: non-finite prefill output in "
+                          "staging row %d — quarantined", req.uid, i)
+                self._finished.append(req)
+            done_rows = kept
         if done_rows:
             uids = np.zeros(self.slots, np.int64)
             poss = np.zeros(self.slots, np.int64)
@@ -618,9 +1074,12 @@ class ContinuousEngine(EngineBase):
         cur = self._next_tok.copy()
         t0 = time.perf_counter()
         for j in range(k):
-            logits, self._dpool.cache = self._decode(
-                self._draft_params, jnp.asarray(cur[:, None]),
-                self._dpool.cache, jnp.asarray(self._pos + j))
+            cur_dev = jnp.asarray(cur[:, None])
+            posj_dev = jnp.asarray(self._pos + j)
+            logits, self._dpool.cache = self._guarded_call(
+                "draft",
+                lambda: self._decode(self._draft_params, cur_dev,
+                                     self._dpool.cache, posj_dev))
             cur = self._sample_rows(logits, uids, self._pos + j + 1)
             drafts[:, j] = cur
         t1 = time.perf_counter()
@@ -635,9 +1094,12 @@ class ContinuousEngine(EngineBase):
         if k > 1:
             vtoks[:, 1:] = drafts[:, :k - 1]
         t0 = time.perf_counter()
-        vlogits, self.pool.cache = self._verify(
-            self.params, jnp.asarray(vtoks), self.pool.cache,
-            jnp.asarray(self._pos))
+        vtoks_dev = jnp.asarray(vtoks)
+        vpos_dev = jnp.asarray(self._pos)
+        vlogits, self.pool.cache = self._guarded_call(
+            "verify",
+            lambda: self._verify(self.params, vtoks_dev, self.pool.cache,
+                                 vpos_dev))
         vl = np.asarray(vlogits, np.float32)
         t1 = time.perf_counter()
         self.tracer.complete("verify", t0, t1, rows=len(live),
@@ -655,11 +1117,16 @@ class ContinuousEngine(EngineBase):
         n_emit = emit_counts(m, k)
         rollback = needs_rollback(m, k)
         now = time.time()
+        # Poison probe on the verify logits (+ state probe in "state"
+        # mode): quarantined rows drop out of the emit loop below.
+        self._probe_rows(live, vl, now, "verify")
         emitted_total = 0
         accepted = 0
         rollbacks = 0
         for i in live:
             req = self._slot_req[i]
+            if req is None:         # quarantined by the probe above
+                continue
             accepted += int(min(m[i], k))
             emitted: List[int] = []
             finished = False
@@ -716,11 +1183,23 @@ class ContinuousEngine(EngineBase):
         poll_span = self.tracer.span("poll")
         poll_span.__enter__()
         now = time.time()
+        # -- fault-tolerance pre-work (docs/robustness.md) ------------------
+        self._poll_idx += 1
+        if self._recover_pending:
+            self._watchdog_recover(now)
+        if self._injector is not None:
+            self._inject_poison()
+        if getattr(cfg, "shed_inflight", False):
+            self._shed_inflight(now)
+        self._update_overload()
         if self.chunk:
             with self.tracer.span("admit") as sp:
                 sp.args["admitted"] = self._admit_chunked(now)
             spent = self._prefill_step()
-            budget = cfg.prefill_token_budget
+            # Degraded overload mode collapses the budget: exactly one
+            # chunk call per poll, protecting decode latency while the
+            # queue drains.
+            budget = 0 if self._overloaded else cfg.prefill_token_budget
             while spent and budget > spent:
                 # A finished prefill may have freed nothing, but an
                 # EOS-on-prefill finish frees its slot for the queue.
@@ -741,15 +1220,19 @@ class ContinuousEngine(EngineBase):
                 now = time.time()
 
         live = [i for i, r in enumerate(self._slot_req) if r is not None]
-        if live and self.spec_k and \
+        if live and self.spec_k and not self._overloaded and \
                 not any(self._overflow[i] for i in live):
             self._spec_burst(live)
         elif live:
             t0 = time.perf_counter()
-            logits, cache = self._decode(
-                self._decode_params, jnp.asarray(self._next_tok[:, None]),
-                self.pool.cache, jnp.asarray(self._pos))
-            nxt = self._sample_rows(logits, self._row_uids(), self._pos + 1)
+            tok_dev = jnp.asarray(self._next_tok[:, None])
+            pos_dev = jnp.asarray(self._pos)
+            logits, cache = self._guarded_call(
+                "decode",
+                lambda: self._decode(self._decode_params, tok_dev,
+                                     self.pool.cache, pos_dev))
+            lg = np.asarray(logits, np.float32)
+            nxt = self._sample_rows(lg, self._row_uids(), self._pos + 1)
             self.pool.cache = cache
             t1 = time.perf_counter()
             self.tracer.complete("decode_step", t0, t1, live=len(live))
@@ -759,8 +1242,13 @@ class ContinuousEngine(EngineBase):
             # cache column until a refill overwrites the whole row.
             self._pos = np.minimum(self._pos + 1, self.max_seq - 1)
             now = time.time()
+            # Poison probe on this step's logits (+ state in "state"
+            # mode): quarantined rows drop out of the emit loop.
+            self._probe_rows(live, lg, now, "decode")
             for i in live:
                 req = self._slot_req[i]
+                if req is None:     # quarantined by the probe above
+                    continue
                 if self.spec_k and self._overflow[i]:
                     # Rollback drain: this step re-consumed a token the
                     # burst already emitted, re-advancing the restored
@@ -784,6 +1272,7 @@ class ContinuousEngine(EngineBase):
         self.metrics.observe_gauges(
             queue_depth=len(self.scheduler),
             live_slots=len(live),
+            overloaded=float(self._overloaded),
             staging_depth=(sum(r is not None for r in self._pref_req)
                            if self.chunk else 0),
             **({"prefix_resident_bytes": self._pcache.resident_bytes}

@@ -102,6 +102,45 @@ class ServeConfig:
     # Deadline (seconds) for the continuous engine's hang watchdog: fires
     # when no compiled call completes within the deadline.  0 disables.
     watchdog_s: float = 0.0
+    # -- fault tolerance (continuous engine; docs/robustness.md) ------------
+    # Fault-injection plan: a FaultInjector, a spec string (see
+    # runtime/faults.parse_plan), or an iterable of FaultEvent.  None (the
+    # default) serves with zero injection machinery in the hot path.
+    fault_plan: object = None
+    # Bounded admission queue: submit() REFUSES (returns None, counted in
+    # metrics.rejected) once the queue holds this many requests — explicit
+    # backpressure instead of unbounded memory growth.  0 = unbounded.
+    max_queue_depth: int = 0
+    # Degraded overload mode: entered when queue depth reaches
+    # overload_queue_depth OR windowed TTFT p95 crosses
+    # overload_ttft_p95_s (either 0 disables that trigger); while
+    # degraded, the prefill token budget drops to 0 (one chunk per poll)
+    # and speculative bursts pause so decode latency of admitted work is
+    # protected.  Cleared with hysteresis: queue depth must fall to
+    # overload_clear_frac * overload_queue_depth.
+    overload_queue_depth: int = 0
+    overload_ttft_p95_s: float = 0.0
+    overload_clear_frac: float = 0.5
+    # Poison quarantine probes: "off" | "logits" (np.isfinite over the
+    # step's already-host logits — near-free) | "state" (adds a jitted
+    # per-row finiteness probe over the decode pool).  A poisoned slot is
+    # reset and its request finished with status "poisoned".
+    poison_probe: str = "off"
+    poison_check_every: int = 1   # probe every N polls (amortize "state")
+    # Backend fallback chain: on a compiled-call failure, rebuild the
+    # model one decode mode down (pallas -> cumba -> naive) and retry —
+    # once per mode per process.  False re-raises immediately.
+    backend_fallback: bool = True
+    # Watchdog escalation: "log" (default, metrics + trace instant only)
+    # or "recover" (abort the stuck burst at the next poll, requeue its
+    # requests with bounded retries + exponential backoff).
+    watchdog_action: str = "log"
+    max_retries: int = 1
+    retry_backoff_s: float = 0.0  # base for runtime.elastic.backoff_delay_s
+    # Deadline shedding for requests already *in flight* (staged or
+    # decoding), not just queued ones.  Off by default: pre-existing
+    # deployments treat deadline_s as an admission SLA only.
+    shed_inflight: bool = False
 
 
 class EngineBase:
@@ -153,7 +192,18 @@ class EngineBase:
     def submit(self, prompt: Sequence[int],
                max_new_tokens: Optional[int] = None, *,
                priority: int = 0, deadline_s: Optional[float] = None,
-               on_token=None) -> int:
+               on_token=None) -> Optional[int]:
+        """Queue a request; returns its uid, or **None** when the bounded
+        admission queue (``max_queue_depth``) is full — explicit
+        backpressure the caller must handle (resubmit later or surface
+        the rejection upstream)."""
+        depth_cap = getattr(self.cfg, "max_queue_depth", 0)
+        if depth_cap and len(self._scheduler) >= depth_cap:
+            self.metrics.record_reject()
+            self.tracer.instant("reject", queue_depth=len(self._scheduler))
+            log.warning("admission queue full (%d): rejecting request",
+                        depth_cap)
+            return None
         self._uid += 1
         req = build_request(
             self._uid, prompt,

@@ -206,6 +206,17 @@ class ServeMetrics:
         self.arrivals = 0
         self.completed = 0
         self.shed = 0
+        # Shed breakdown (sums to ``shed``): deadline | overload | poison |
+        # retry_exhausted (docs/robustness.md).
+        self.shed_reasons: Dict[str, int] = {}
+        self.rejected = 0           # backpressure: submit() refused (queue full)
+        self.quarantined = 0        # slots reset after a poison probe hit
+        self.poison_probes = 0      # probe passes executed (overhead witness)
+        self.backend_fallbacks = 0  # decode-mode fallback re-dispatches
+        self.watchdog_recoveries = 0
+        self.retries = 0            # requests requeued by recovery
+        self.overload_entries = 0
+        self.overload_exits = 0
         self.truncated = 0
         self.emitted_tokens = 0
         self.completed_tokens = 0
@@ -252,8 +263,37 @@ class ServeMetrics:
         self.completed_tokens += n_tokens
         self.latency.add(latency_s)
 
-    def record_shed(self) -> None:
+    def record_shed(self, reason: str = "deadline") -> None:
+        """One shed request.  ``reason``: why capacity was reclaimed —
+        ``deadline`` (SLA passed), ``overload`` (backpressure dropped it),
+        ``poison`` (quarantined slot), ``retry_exhausted`` (recovery gave
+        up).  The per-reason counts always sum to ``shed``."""
         self.shed += 1
+        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
+
+    def record_reject(self) -> None:
+        """submit() refused a request outright (bounded admission queue)."""
+        self.rejected += 1
+
+    def record_quarantine(self) -> None:
+        """A poison probe hit: one slot reset, its request shed."""
+        self.quarantined += 1
+
+    def record_poison_probe(self) -> None:
+        self.poison_probes += 1
+
+    def record_backend_fallback(self) -> None:
+        self.backend_fallbacks += 1
+
+    def record_watchdog_recovery(self, requeued: int) -> None:
+        self.watchdog_recoveries += 1
+        self.retries += requeued
+
+    def record_overload(self, entered: bool) -> None:
+        if entered:
+            self.overload_entries += 1
+        else:
+            self.overload_exits += 1
 
     def record_step(self, live_slots: int, dt_s: float) -> None:
         """One decode step: ``live_slots`` rows produced useful tokens."""
@@ -345,6 +385,11 @@ class ServeMetrics:
             "arrivals": self.arrivals,
             "completed": self.completed,
             "shed": self.shed,
+            "shed_reasons": dict(self.shed_reasons),
+            "rejected": self.rejected,
+            "quarantined": self.quarantined,
+            "backend_fallbacks": self.backend_fallbacks,
+            "watchdog_recoveries": self.watchdog_recoveries,
             "emitted_tokens": self.emitted_tokens,
             "tokens_per_s_window": self.tok_rate.rate(),
             "prefix_hits": self.prefix_hits,
@@ -366,6 +411,7 @@ class ServeMetrics:
         """Cumulative KPI rollup.  ``wall_source`` says which denominator
         the throughput figures used (see module docstring) — decode time
         is an upper-bound fallback, not a silent substitute."""
+        # (Return type is heterogeneous: shed_reasons is a sub-dict.)
         wall = self.wall_s or self.decode_time_s
         wall_source = ("measured" if self.wall_s else
                        "decode_time" if self.decode_time_s else "none")
@@ -373,6 +419,15 @@ class ServeMetrics:
             "requests": self.arrivals,
             "completed": self.completed,
             "shed": self.shed,
+            "shed_reasons": dict(self.shed_reasons),
+            "rejected": self.rejected,
+            "quarantined": self.quarantined,
+            "poison_probes": self.poison_probes,
+            "backend_fallbacks": self.backend_fallbacks,
+            "watchdog_recoveries": self.watchdog_recoveries,
+            "retries": self.retries,
+            "overload_entries": self.overload_entries,
+            "overload_exits": self.overload_exits,
             "generated_tokens": self.emitted_tokens,
             "tokens_per_s": self.emitted_tokens / wall if wall else 0.0,
             "goodput_tokens_per_s":

@@ -33,6 +33,12 @@ class Request:
     deadline_s: Optional[float] = None   # absolute time.time() admission SLA
     expired: bool = False         # shed: deadline passed while queued
     bucket: int = 0               # prefill bucket chosen at admission
+    # -- robustness (docs/robustness.md) ------------------------------------
+    # Outcome label: "ok" | "shed_deadline" | "shed_overload" | "poisoned"
+    # | "retry_exhausted" — callers split completions from casualties.
+    status: str = "ok"
+    retries: int = 0              # watchdog-recovery requeues so far
+    not_before_s: Optional[float] = None  # retry backoff: defer admission
     # -- timing (absolute time.time() stamps) -------------------------------
     arrival_s: float = 0.0
     first_token_s: Optional[float] = None
@@ -130,17 +136,33 @@ class Scheduler:
         heapq.heappush(self._heap, ((level, self._seq), req))
 
     def pop_ready(self, now: float) -> Optional[Request]:
-        """Next admissible request, shedding any whose deadline passed."""
-        while self._heap:
-            _, req = heapq.heappop(self._heap)
-            if req.deadline_s is not None and now > req.deadline_s:
-                req.expired = True
-                req.done = True
-                self.expired.append(req)
-                self.tracer.instant("shed", uid=req.uid,
-                                    queued_s=now - req.arrival_s)
-                log.warning("request %d: deadline missed while queued; "
-                            "shedding", req.uid)
-                continue
-            return req
-        return None
+        """Next admissible request, shedding any whose deadline passed.
+
+        Requests carrying a retry-backoff stamp (``not_before_s``) are
+        deferred: re-pushed at the back of their priority level until the
+        stamp passes.  (FCFS position within the level is not preserved
+        across a deferral — a retried request yields to fresher arrivals,
+        which is the intended penalty.)"""
+        deferred: List[Request] = []
+        try:
+            while self._heap:
+                _, req = heapq.heappop(self._heap)
+                if req.deadline_s is not None and now > req.deadline_s:
+                    req.expired = True
+                    req.done = True
+                    req.status = "shed_deadline"
+                    self.expired.append(req)
+                    self.tracer.instant("shed", uid=req.uid,
+                                        reason="deadline",
+                                        queued_s=now - req.arrival_s)
+                    log.warning("request %d: deadline missed while queued; "
+                                "shedding", req.uid)
+                    continue
+                if req.not_before_s is not None and now < req.not_before_s:
+                    deferred.append(req)
+                    continue
+                return req
+            return None
+        finally:
+            for req in deferred:
+                self.submit(req)

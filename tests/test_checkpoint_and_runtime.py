@@ -109,9 +109,12 @@ def test_restart_loop_recovers_from_crashes(tmp_path):
     init = {"x": jnp.float32(0), "params": {"w": jnp.zeros(2)},
             "opt": {"step": jnp.int32(0), "m": jnp.zeros(2),
                     "v": jnp.zeros(2)}}
-    state, step, restarts = run_with_restarts(
+    state, step, restarts, crash_loops = run_with_restarts(
         train_some, init, policy, target_steps=20)
     assert step == 20
     assert restarts == 2
+    # Both crashes hit the same step boundary (start=5), so the loop
+    # flags a crash loop there — distinct from transient-failure restarts.
+    assert crash_loops == [5]
     # progress was preserved across the crash (x counts every good step)
     assert float(state["x"]) == 20.0

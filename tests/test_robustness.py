@@ -1,0 +1,371 @@
+"""Fault-tolerant serving (docs/robustness.md): fault-injection harness,
+overload backpressure, poison quarantine, backend fallback, watchdog
+recovery — the chaos tests' core invariant is that *healthy* requests
+stay byte-identical to a fault-free control run."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import trace_report
+from repro.models import ModelConfig, build_model
+from repro.nn.params import init_params
+from repro.runtime.elastic import backoff_delay_s
+from repro.runtime.faults import (FaultEvent, FaultInjector,
+                                  InjectedBackendError, parse_plan)
+from repro.runtime.health import StepMonitor, Watchdog
+from repro.serve import ContinuousEngine, Request, Scheduler, ServeConfig
+
+V = 64
+
+CFG = ModelConfig(name="mamba2", family="mamba2", vocab_size=V,
+                  d_model=32, n_layers=2, d_state=8, ssm_head_dim=8,
+                  chunk_size=8, param_dtype="float32")
+
+
+def _model_params(cfg=CFG):
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    return model, params
+
+
+def _prompts(seed, n, length):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, V, length).tolist() for _ in range(n)]
+
+
+def _run(model, params, scfg, prompts, budgets=None):
+    eng = ContinuousEngine(model, params, scfg)
+    for i, p in enumerate(prompts):
+        eng.submit(p, budgets[i] if budgets else None)
+    done = eng.run()
+    eng.close()
+    return eng, {r.uid: r for r in done}
+
+
+# ---------------------------------------------------------------------------
+# fault-injection harness (unit)
+# ---------------------------------------------------------------------------
+def test_parse_plan_round_trip():
+    plan = parse_plan("poison@5:slot=1,mode=inf; fail@8:program=decode;"
+                      "stall@3:stall_s=0.25")
+    assert [ev.kind for ev in plan] == ["poison", "fail", "stall"]
+    assert plan[0].poll == 5 and plan[0].slot == 1 and plan[0].mode == "inf"
+    assert plan[1].program == "decode"
+    assert plan[2].stall_s == 0.25
+
+
+@pytest.mark.parametrize("spec", ["boom@3", "poison@3:mode=zero",
+                                  "poison5", "poison@3:volume=11"])
+def test_parse_plan_rejects_bad_specs(spec):
+    with pytest.raises(ValueError):
+        parse_plan(spec)
+
+
+def test_injector_fires_once_and_reports():
+    inj = FaultInjector("fail@2:program=decode;poison@4", seed=7)
+    inj.pre_call("decode", 1)                       # not due yet
+    with pytest.raises(InjectedBackendError):
+        inj.pre_call("decode", 3)                   # due (poll >= 2)
+    inj.pre_call("decode", 4)                       # fired: never again
+    assert inj.poison_targets(3, [0, 1]) == []      # not due
+    assert inj.poison_targets(4, []) == []          # waits for live slots
+    assert inj.poison_targets(5, [1, 2]) == [(1, "nan")]
+    assert inj.poison_targets(6, [1, 2]) == []      # fired
+    s = inj.summary()
+    assert s == {"fired": {"poison": 1, "fail": 1}, "pending": {},
+                 "events": 2}
+
+
+def test_poison_payload_and_corrupt():
+    inj = FaultInjector([FaultEvent("poison", 0)], seed=3)
+    x = inj.poison_payload((4, 8), "nan")
+    assert np.isnan(x).any() and not np.isinf(x).any()
+    x = inj.poison_payload((4, 8), "inf")
+    assert np.isinf(x).any()
+    tree = {"f": np.ones((2, 3), np.float32), "i": np.arange(4, dtype=np.int32)}
+    bad = inj.corrupt(tree, "nan")
+    assert not np.isfinite(bad["f"]).all()
+    np.testing.assert_array_equal(bad["i"], tree["i"])   # ints untouched
+
+
+# ---------------------------------------------------------------------------
+# satellites: health + backoff primitives
+# ---------------------------------------------------------------------------
+def test_backoff_delay_doubles_and_caps():
+    assert [backoff_delay_s(k, 0.5, cap_s=3.0) for k in (1, 2, 3, 4, 5)] \
+        == [0.5, 1.0, 2.0, 3.0, 3.0]
+
+
+def test_step_monitor_rolling_window_constant_memory():
+    mon = StepMonitor(window=10)
+    for _ in range(200):
+        mon.observe(None, 0.01)
+    assert len(mon.records) == 10 and len(mon._durations) == 10
+    s = mon.summary()
+    assert s["steps"] == 200 and s["mean_s"] == pytest.approx(0.01)
+    # step defaults to the cumulative count, not the trimmed list length
+    assert mon.records[-1].step == 199
+
+
+def test_watchdog_latches_until_pet():
+    fires = []
+    wd = Watchdog(0.08, on_hang=lambda: fires.append(time.monotonic()))
+    try:
+        time.sleep(0.4)
+        assert wd.fired and len(fires) == 1     # latched: no re-fire
+        wd.pet()
+        time.sleep(0.4)
+        assert len(fires) == 2                  # new hang after the pet
+    finally:
+        wd.stop()
+    assert not wd.alive
+
+
+def test_scheduler_defers_retry_backoff():
+    sched = Scheduler("fcfs")
+    req = Request(uid=1, prompt=[1], max_new_tokens=1, not_before_s=100.0)
+    sched.submit(req)
+    assert sched.pop_ready(now=50.0) is None
+    assert len(sched) == 1                      # deferred, not dropped
+    assert sched.pop_ready(now=150.0) is req
+
+
+# ---------------------------------------------------------------------------
+# chaos: poison quarantine
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("probe", ["logits", "state"])
+def test_poison_quarantine_healthy_rows_identical(probe):
+    model, params = _model_params()
+    prompts = _prompts(3, 4, 12)
+    base = dict(max_batch=2, prefill_buckets=(16,), max_new_tokens=6)
+    _, control = _run(model, params, ServeConfig(**base), prompts)
+
+    eng, done = _run(model, params, ServeConfig(
+        **base, poison_probe=probe, fault_plan="poison@3:slot=0"), prompts)
+    poisoned = [r for r in done.values() if r.status == "poisoned"]
+    healthy = [r for r in done.values() if r.status == "ok"]
+    assert len(poisoned) == 1 and len(healthy) == 3
+    for r in healthy:                    # blast radius: one slot, not four
+        assert r.out_tokens == control[r.uid].out_tokens, f"uid={r.uid}"
+    assert eng.metrics.quarantined == 1
+    assert eng.metrics.shed_reasons == {"poison": 1}
+    assert eng._injector.summary()["fired"] == {"poison": 1}
+    # quarantine resets the row; compile-once discipline must survive
+    assert all(s.trips == 0 for s in eng.sentinels.values())
+
+
+def test_poison_quarantine_not_counted_as_completion():
+    model, params = _model_params()
+    prompts = _prompts(5, 2, 12)
+    eng, done = _run(model, params, ServeConfig(
+        max_batch=2, prefill_buckets=(16,), max_new_tokens=6,
+        poison_probe="logits", fault_plan="poison@2:slot=0"), prompts)
+    assert len(done) == 2                # the caller still sees the casualty
+    assert eng.metrics.completed == 1
+    assert sum(eng.metrics.shed_reasons.values()) == eng.metrics.shed
+
+
+# ---------------------------------------------------------------------------
+# chaos: backend fallback
+# ---------------------------------------------------------------------------
+def test_injected_backend_failure_falls_back_identically():
+    cfg = CFG.with_decode_mode("cumba")
+    model, params = _model_params(cfg)
+    prompts = _prompts(7, 3, 12)
+    base = dict(max_batch=2, prefill_buckets=(16,), max_new_tokens=6)
+    _, control = _run(model, params, ServeConfig(**base), prompts)
+
+    eng, done = _run(model, params, ServeConfig(
+        **base, fault_plan="fail@3:program=decode"), prompts)
+    assert eng.model.cfg.xamba.decode == "naive"     # one rung down
+    assert eng.metrics.backend_fallbacks == 1
+    for uid, r in done.items():          # every decode mode is numerically
+        assert r.status == "ok"          # the same program
+        assert r.out_tokens == control[uid].out_tokens
+    # fallback-rebuilt jits lazily re-arm their sentinels: 0 trips
+    assert all(s.trips == 0 for s in eng.sentinels.values())
+
+
+def test_backend_failure_without_fallback_raises():
+    model, params = _model_params(CFG.with_decode_mode("cumba"))
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=1, prefill_buckets=(16,), max_new_tokens=4,
+        backend_fallback=False, fault_plan="fail@1:program=decode"))
+    eng.submit(_prompts(9, 1, 12)[0])
+    with pytest.raises(InjectedBackendError):
+        eng.run()
+    eng.close()
+
+
+def test_injected_stall_fires_inside_timing_window():
+    model, params = _model_params()
+    prompts = _prompts(11, 2, 12)
+    base = dict(max_batch=2, prefill_buckets=(16,), max_new_tokens=6)
+    _, control = _run(model, params, ServeConfig(**base), prompts)
+    eng, done = _run(model, params, ServeConfig(
+        **base, fault_plan="stall@3:program=decode,stall_s=0.05"), prompts)
+    assert eng._injector.summary()["fired"] == {"stall": 1}
+    assert eng.monitor_decode.max_s >= 0.05
+    for uid, r in done.items():          # a stall delays, never corrupts
+        assert r.out_tokens == control[uid].out_tokens
+
+
+# ---------------------------------------------------------------------------
+# overload protection
+# ---------------------------------------------------------------------------
+def test_bounded_queue_rejects_with_backpressure():
+    model, params = _model_params()
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=1, prefill_buckets=(16,), max_new_tokens=3,
+        max_queue_depth=2))
+    prompts = _prompts(13, 4, 10)
+    uids = [eng.submit(p) for p in prompts]
+    assert uids[0] is not None and uids[1] is not None
+    assert uids[2] is None and uids[3] is None       # explicit refusal
+    assert eng.metrics.rejected == 2
+    done = eng.run()
+    eng.close()
+    assert len(done) == 2                # accepted work completes normally
+
+
+def test_overload_mode_enters_and_clears():
+    model, params = _model_params()
+    prompts = _prompts(17, 5, 10)
+    base = dict(max_batch=1, prefill_buckets=(16,), max_new_tokens=3)
+    _, control = _run(model, params, ServeConfig(**base), prompts)
+    eng, done = _run(model, params, ServeConfig(
+        **base, overload_queue_depth=2), prompts)
+    assert eng.metrics.overload_entries >= 1
+    assert eng.metrics.overload_exits == eng.metrics.overload_entries
+    assert not eng._overloaded           # drained: hysteresis cleared it
+    for uid, r in done.items():          # degraded mode sheds *work rate*,
+        assert r.out_tokens == control[uid].out_tokens   # never tokens
+
+
+def test_shed_inflight_deadline():
+    model, params = _model_params()
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=1, prefill_buckets=(16,), max_new_tokens=50,
+        shed_inflight=True))
+    uid = eng.submit(_prompts(19, 1, 10)[0],
+                     deadline_s=time.time() + 3600)
+    eng.poll()                           # admitted, decoding
+    victim = eng._slot_req[0]
+    assert victim is not None and victim.uid == uid
+    victim.deadline_s = time.time() - 1.0
+    eng.poll()                           # SLA passed mid-flight: shed
+    eng.close()
+    assert victim.status == "shed_deadline" and victim.expired
+    assert eng.metrics.shed_reasons == {"deadline": 1}
+    assert eng._slot_req[0] is None      # capacity freed for live work
+    assert not eng.busy
+
+
+# ---------------------------------------------------------------------------
+# watchdog recovery + retries
+# ---------------------------------------------------------------------------
+def test_watchdog_recovery_requeues_and_replays_identically():
+    model, params = _model_params()
+    prompts = _prompts(23, 2, 12)
+    base = dict(max_batch=1, prefill_buckets=(16,), max_new_tokens=5)
+    _, control = _run(model, params, ServeConfig(**base), prompts)
+
+    eng = ContinuousEngine(model, params, ServeConfig(
+        **base, watchdog_action="recover", max_retries=1))
+    for p in prompts:
+        eng.submit(p)
+    eng.poll()                           # request 1 is mid-decode
+    eng._on_hang()                       # what the watchdog thread would do
+    done = eng.run()
+    eng.close()
+    assert eng.metrics.watchdog_recoveries == 1
+    assert eng.metrics.retries == 1
+    assert len(done) == 2
+    for r in done:                       # keyed sampling: the replayed
+        assert r.status == "ok"          # stream is byte-identical
+        assert r.retries in (0, 1)
+        assert r.out_tokens == control[r.uid].out_tokens
+
+
+def test_retry_budget_exhaustion_sheds():
+    model, params = _model_params()
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=1, prefill_buckets=(16,), max_new_tokens=5,
+        watchdog_action="recover", max_retries=0))
+    eng.submit(_prompts(29, 1, 10)[0])
+    eng.poll()
+    eng._on_hang()
+    done = eng.run()
+    eng.close()
+    assert [r.status for r in done] == ["retry_exhausted"]
+    assert eng.metrics.shed_reasons == {"retry_exhausted": 1}
+    assert sum(eng.metrics.shed_reasons.values()) == eng.metrics.shed
+    assert not eng.busy
+
+
+def test_retry_backoff_defers_readmission():
+    model, params = _model_params()
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=1, prefill_buckets=(16,), max_new_tokens=4,
+        watchdog_action="recover", max_retries=2, retry_backoff_s=30.0))
+    eng.submit(_prompts(31, 1, 10)[0])
+    eng.poll()
+    eng._on_hang()
+    eng.poll()                           # recovery requeues with backoff
+    req = eng.scheduler.pop_ready(time.time())
+    assert req is None                   # not_before_s is ~30s out
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# prefix-snapshot faults
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fault", ["snap_corrupt", "snap_drop"])
+def test_snapshot_fault_never_poisons_the_prefix_cache(fault):
+    model, params = _model_params()
+    prompt = _prompts(37, 1, 16)[0]
+    base = dict(max_batch=1, prefill_buckets=(16,), max_new_tokens=4,
+                prefill_chunk=8, prefix_cache_mb=4.0)
+    _, control = _run(model, params, ServeConfig(**base), [prompt])
+
+    eng = ContinuousEngine(model, params, ServeConfig(
+        **base, poison_probe="logits", fault_plan=f"{fault}@0"))
+    eng.submit(prompt)
+    (first,) = eng.run()
+    # The faulted insert (dropped or corrupt-and-refused) left NO node —
+    # and crucially no NaN node a later request could restore from.
+    assert eng.prefix_cache.stats()["nodes"] == 0
+    eng.submit(prompt)                   # same prompt again: clean miss
+    (second,) = eng.run()
+    eng.close()
+    assert first.out_tokens == control[1].out_tokens
+    assert second.out_tokens == control[1].out_tokens
+    assert eng.prefix_cache.stats()["hits"] == 0
+    assert eng.prefix_cache.stats()["nodes"] > 0     # post-fault inserts OK
+
+
+# ---------------------------------------------------------------------------
+# observability: fault instants in the trace report
+# ---------------------------------------------------------------------------
+def test_trace_report_tallies_fault_events_and_check_passes(tmp_path):
+    model, params = _model_params(CFG.with_decode_mode("cumba"))
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=2, prefill_buckets=(16,), max_new_tokens=6,
+        poison_probe="logits", trace=str(tmp_path / "t.json"),
+        fault_plan="poison@3:slot=0;fail@5:program=decode"))
+    for p in _prompts(41, 4, 12):
+        eng.submit(p)
+    eng.run()
+    eng.close()
+    path = tmp_path / "t.jsonl"
+    eng.tracer.save_jsonl(str(path))
+    rep = trace_report.analyze(trace_report.load_events(str(path)))
+    assert rep["fault_events"]["quarantine"] == 1
+    assert rep["fault_events"]["backend_fallback"] == 1
+    # fault instants are zero-duration: the phase-coverage reconciliation
+    # and the compile-once audit still hold on a chaotic trace
+    assert trace_report.check(rep) == []
