@@ -4,8 +4,8 @@ export PYTHONPATH := src:$(PYTHONPATH)
 
 .PHONY: test test-cov smoke-serve smoke-prefill-chunk smoke-prefill-fused \
     smoke-prefix smoke-trace smoke-spec smoke-chaos smoke-decode \
-    smoke-quant smoke-quickstart linkcheck bench-serve bench-json \
-    hlo-diff ci
+    smoke-quant smoke-quickstart smoke-flight linkcheck bench-serve \
+    bench-json bench-diff hlo-diff ci
 
 test:
 	$(PY) -m pytest -x -q --durations=15
@@ -85,6 +85,12 @@ smoke-chaos:
 smoke-quickstart:
 	$(PY) examples/quickstart.py
 
+# Flight-recorder smoke (docs/observability.md): an injected fault must
+# auto-dump the request ring to JSONL and `trace_report --flight` must
+# parse it back.
+smoke-flight:
+	$(PY) scripts/smoke_flight.py
+
 linkcheck:
 	$(PY) scripts/check_doc_links.py
 
@@ -97,14 +103,28 @@ bench-serve:
 bench-json:
 	PYTHONPATH=src:. $(PY) -m benchmarks.run --json --smoke
 
-# Per-op HLO fingerprint diff of the fused decode step under both cache
-# layouts (the ROADMAP layout-cliff open item; full size by default —
-# add ARGS="--reduced" for a fast structural smoke, ARGS="--schedule"
-# for the op-order + buffer-assignment view).
+# Perf-regression gate (docs/benchmarks.md): diff FRESH_DIR's
+# BENCH_*.json (default: repo root, i.e. whatever bench-json just wrote)
+# against the committed smoke baselines under the per-metric
+# direction+tolerance schema; exits nonzero on any regression.
+FRESH_DIR ?= .
+bench-diff:
+	$(PY) scripts/bench_diff.py --fresh-dir $(FRESH_DIR)
+
+# Per-op HLO fingerprint diff of any registered serve program under both
+# cache layouts (the ROADMAP layout-cliff open item; full size by
+# default — add ARGS="--reduced" for a fast structural smoke,
+# ARGS="--schedule" for the op-order + buffer-assignment view,
+# PROGRAM=prefill_chunk (or prefill / verify_chunk) for the other serve
+# programs, ARGS="--check-budgets" to gate the pinned layout against the
+# registry quality budget).
+PROGRAM ?= decode
 hlo-diff:
-	$(PY) -m repro.launch.hlo_analysis --arch mamba2-130m $(ARGS)
-	$(PY) -m repro.launch.hlo_analysis --arch mamba-130m $(ARGS)
+	$(PY) -m repro.launch.hlo_analysis --arch mamba2-130m \
+	    --program $(PROGRAM) $(ARGS)
+	$(PY) -m repro.launch.hlo_analysis --arch mamba-130m \
+	    --program $(PROGRAM) $(ARGS)
 
 ci: test smoke-decode smoke-serve smoke-prefill-chunk smoke-prefill-fused \
     smoke-prefix smoke-trace smoke-spec smoke-chaos smoke-quant \
-    smoke-quickstart linkcheck bench-json
+    smoke-quickstart smoke-flight linkcheck bench-json bench-diff

@@ -301,6 +301,7 @@ def bench_phase(arch="mamba2-130m", requests=48, batch=4, reps=3, seed=0,
 
     walls = {False: [], True: []}
     events = None
+    traced_engine = None
     for r in range(reps):
         # Alternate the pair order so monotone background-load drift
         # cancels out of the best-of comparison instead of always
@@ -310,16 +311,35 @@ def bench_phase(arch="mamba2-130m", requests=48, batch=4, reps=3, seed=0,
             walls[traced].append(wall)
             if traced:
                 events = engine.tracer.events
-    overhead = min(walls[True]) / min(walls[False]) - 1.0
+                traced_engine = engine
+    # Signed best-of-reps ratio.  A small NEGATIVE value does not mean
+    # tracing speeds anything up — it is the measurement's noise floor
+    # showing (the committed -3.2% artifact read as a speedup).  Report
+    # the raw signed number plus the per-rep pair band so the noise is
+    # visible, clamp the headline at zero (overhead is one-sided), and
+    # assert only the upper bound.
+    raw = min(walls[True]) / min(walls[False]) - 1.0
+    pair_ratios = [t / u - 1.0 for t, u in zip(walls[True], walls[False])]
+    noise_band = [round(min(pair_ratios), 4), round(max(pair_ratios), 4)]
+    overhead = max(0.0, raw)
 
-    rep = analyze(events)
+    # Program cards from the traced engine's registry give each
+    # program_breakdown row its roofline term (achieved vs attainable);
+    # AOT card builds share no dispatch cache with the timed runs, so
+    # building them here cannot have perturbed the walls above.
+    cards = traced_engine.registry.cards()
+    rep = analyze(events, cards={n: c.to_dict() for n, c in cards.items()})
     pb = rep["phase_breakdown"]
+    pgb = rep["program_breakdown"]
     results = {
         "wall_untraced_s": round(min(walls[False]), 4),
         "wall_traced_s": round(min(walls[True]), 4),
         "tracing_overhead": round(overhead, 4),
+        "tracing_overhead_raw": round(raw, 4),
+        "tracing_noise_band": noise_band,
         "trace_events": len(events),
         "recompile_trips": rep["recompile_trips"],
+        "program_breakdown": pgb,
         **pb,
     }
     emit("serve_tracing_overhead", 0.0, round(overhead, 4))
@@ -328,6 +348,11 @@ def bench_phase(arch="mamba2-130m", requests=48, batch=4, reps=3, seed=0,
         f"phase self-times ({pb['phase_total_s']:.4f}s) do not reconcile "
         f"with trace wall ({pb['wall_s']:.4f}s): "
         f"coverage {pb['coverage']:.1%}")
+    assert abs(pgb["coverage"] - 1.0) <= 0.05, (
+        f"per-program walls ({pgb['program_total_s']:.4f}s + host "
+        f"{pgb['_host_s']:.4f}s + idle {pgb['_idle_s']:.4f}s) do not "
+        f"reconcile with trace wall ({pgb['wall_s']:.4f}s): "
+        f"coverage {pgb['coverage']:.1%}")
     for prog in CHECK_PROGRAMS:
         assert not rep["recompile_trips"].get(prog), (
             f"compile-once program {prog!r} retraced during the traced run: "
@@ -335,8 +360,8 @@ def bench_phase(arch="mamba2-130m", requests=48, batch=4, reps=3, seed=0,
     if not smoke:
         # Overhead needs best-of-reps on an otherwise-idle box to be a
         # meaningful bound; the smoke run only checks attribution.
-        assert overhead <= 0.02, (
-            f"tracing overhead {overhead:.1%} exceeds the 2% budget "
+        assert raw <= 0.02, (
+            f"tracing overhead {raw:.1%} exceeds the 2% budget "
             f"(traced {min(walls[True]):.4f}s vs "
             f"untraced {min(walls[False]):.4f}s)")
     return results
@@ -356,6 +381,10 @@ def run(smoke: bool = False, trace_seed: int = 0) -> dict:
         out = bench(trace_seed=trace_seed)
         out["prefill"] = bench_prefill(trace_seed=trace_seed)
         out["phase_breakdown"] = bench_phase()
+    # Per-program attribution sits beside (not inside) the phase view:
+    # same trace, different cut (programs vs host sections).
+    out["program_breakdown"] = out["phase_breakdown"].pop(
+        "program_breakdown")
     out["prefix"] = bench_serve_prefix.run(smoke=smoke,
                                            trace_seed=trace_seed)
     from benchmarks import bench_serve_chaos

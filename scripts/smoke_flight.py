@@ -1,0 +1,105 @@
+"""CI flight-recorder smoke (docs/observability.md): an injected fault
+must auto-dump the request ring to JSONL, and ``trace_report --flight``
+must parse and render it.
+
+Same reduced fp32 mamba2 setup as ``smoke_chaos`` (decode mode ``cumba``
+so the injected failure has a fallback rung), with the flight recorder
+armed via ``ServeConfig.flight_records`` / ``flight_path``.  One warmup
+round, then a seeded plan fires one poison (quarantine -> dump) and one
+backend fail (retry + fallback -> dumps); asserts the JSONL contains the
+fault headers and per-request ring entries, then shells the CLI reader
+over it (``make smoke-flight``).
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config               # noqa: E402
+from repro.models import build_model               # noqa: E402
+from repro.nn.params import init_params            # noqa: E402
+from repro.serve import ContinuousEngine, ServeConfig  # noqa: E402
+from repro.serve.flight_recorder import load_flight    # noqa: E402
+
+LENGTHS = (6, 20, 10, 28, 14, 8)
+
+
+def _submit_round(eng, rng, vocab, lengths):
+    for length in lengths:
+        eng.submit(rng.integers(1, vocab, int(length)).tolist())
+    return {r.uid: r for r in eng.run()}
+
+
+def main():
+    path = os.path.join(tempfile.mkdtemp(prefix="flight_"), "flight.jsonl")
+    cfg = get_config("mamba2-130m", reduced=True).replace(
+        param_dtype="float32").with_decode_mode("cumba")
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         cfg.dtype)
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=2, prefill_buckets=(16, 32), max_new_tokens=8,
+        poison_probe="logits", strict_recompile=True,
+        flight_records=16, flight_path=path))
+    rng = np.random.default_rng(0)
+    try:
+        _submit_round(eng, rng, cfg.vocab_size, (6, 20, 10, 28))
+        eng.reset_stats()
+        base = eng.poll_index
+        eng.set_fault_plan(f"poison@{base + 2}:slot=0;"
+                           f"fail@{base + 5}:program=decode")
+        done = _submit_round(eng, rng, cfg.vocab_size, LENGTHS)
+        dumps_emitted = eng.flight.dumps
+        recorded = eng.flight.recorded
+    finally:
+        eng.close()
+
+    assert len(done) == len(LENGTHS), len(done)
+    assert os.path.exists(path), f"no flight dump at {path}"
+    assert dumps_emitted >= 2, (
+        f"expected dumps for quarantine AND backend fallback, "
+        f"got {dumps_emitted}")
+    assert recorded >= len(LENGTHS), recorded
+
+    dumps = load_flight(path)
+    assert len(dumps) == dumps_emitted, (len(dumps), dumps_emitted)
+    kinds = [d["fault"]["kind"] for d in dumps]
+    assert "quarantine" in kinds, kinds
+    assert "backend_fallback" in kinds, kinds
+    # The quarantine dump's ring must carry the poisoned request.
+    qdump = dumps[kinds.index("quarantine")]
+    statuses = {r["uid"]: r["status"] for r in qdump["requests"]}
+    assert "poisoned" in statuses.values(), statuses
+
+    # The CLI reader must parse and render the same file, and --json must
+    # round-trip it.
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.trace_report",
+         "--flight", path, "--check"],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "quarantine" in out.stdout, out.stdout
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.trace_report",
+         "--flight", path, "--json"],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stdout + out.stderr
+    parsed = json.loads(out.stdout)
+    assert len(parsed) == len(dumps), (len(parsed), len(dumps))
+
+    print(f"smoke-flight OK: {dumps_emitted} fault dumps "
+          f"({', '.join(kinds)}), {recorded} requests recorded, "
+          f"CLI parsed {len(parsed)} dumps from {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -294,6 +294,82 @@ def decode_step_compiled(arch: str, *, scan_layers: bool,
     return step.lower(params, tok, cache).compile()
 
 
+# Serve programs the generalized analysis can lower (``--program``); the
+# names match the serve engine's program registry
+# (``serve/program_registry.py``), so ``make hlo-diff PROGRAM=...``
+# speaks the same vocabulary as trace spans and program cards.
+ANALYZABLE_PROGRAMS = ("decode", "prefill", "prefill_chunk", "verify_chunk")
+
+
+def program_lowering(arch: str, program: str = "decode", *,
+                     scan_layers: bool, reduced: bool = False,
+                     slots: int = 1, max_seq: int = 64, bucket: int = 32,
+                     chunk: int = 8, k: int = 4):
+    """``(jitted fn, example_args, model cfg)`` for any analyzable serve
+    program of ``arch`` under the given decode-cache layout, at the same
+    shape discipline the continuous engine serves with (per-row offset
+    vectors; the decode/chunk/verify cache is donated).
+
+    ``fn.lower(*example_args).compile()`` is the compiled executable —
+    :func:`program_compiled` does exactly that, and
+    ``serve/program_registry.build_card`` turns the same pair into a
+    program card (``--check-budgets``)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.nn.params import init_params
+
+    cfg = get_config(arch, reduced=reduced).replace(
+        param_dtype="float32", scan_layers=scan_layers)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    cache = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        model.init_cache(slots, max_seq, jnp.float32))
+    pos = jax.ShapeDtypeStruct((slots,), jnp.int32)
+    if program == "decode":
+        dparams = model.decode_view(params)
+        fn = jax.jit(
+            lambda p, t, c, i: model.decode_step(p, t, c, i),
+            donate_argnums=(2,))
+        ex = (dparams, jax.ShapeDtypeStruct((slots, 1), jnp.int32),
+              cache, pos)
+    elif program == "prefill":
+        fn = jax.jit(lambda p, b, c: model.prefill(p, b, c))
+        ex = (params,
+              {"tokens": jax.ShapeDtypeStruct((slots, bucket), jnp.int32)},
+              cache)
+    elif program == "prefill_chunk":
+        fn = jax.jit(
+            lambda p, t, c, o: model.prefill_chunk(p, t, c, o),
+            donate_argnums=(2,))
+        ex = (params, jax.ShapeDtypeStruct((slots, chunk), jnp.int32),
+              cache, pos)
+    elif program in ("verify_chunk", "verify"):
+        fn = jax.jit(
+            lambda p, t, c, o: model.verify_chunk(p, t, c, o),
+            donate_argnums=(2,))
+        ex = (params, jax.ShapeDtypeStruct((slots, k), jnp.int32),
+              cache, pos)
+    else:
+        raise ValueError(
+            f"unknown program {program!r}; analyzable: "
+            f"{', '.join(ANALYZABLE_PROGRAMS)}")
+    return fn, ex, cfg
+
+
+def program_compiled(arch: str, program: str = "decode", *,
+                     scan_layers: bool, reduced: bool = False, **shapes):
+    """Compiled executable of any analyzable serve program (see
+    :func:`program_lowering`)."""
+    fn, ex, _ = program_lowering(arch, program, scan_layers=scan_layers,
+                                 reduced=reduced, **shapes)
+    return fn.lower(*ex).compile()
+
+
 def decode_step_hlo(arch: str, *, scan_layers: bool,
                     reduced: bool = False) -> str:
     """Compiled (post-optimization) HLO text of one fused decode step for
@@ -316,26 +392,72 @@ def main(argv=None):
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--program", default="decode",
+                    choices=ANALYZABLE_PROGRAMS,
+                    help="which serve program to lower and diff "
+                         "(registry names; default: decode)")
     ap.add_argument("--reduced", action="store_true",
                     help="reduced config (fast; the cliff itself only "
                          "shows at full size)")
     ap.add_argument("--schedule", action="store_true",
                     help="also diff op ORDER (schedule fingerprint) and "
                          "buffer-assignment sizes, not just op counts")
+    ap.add_argument("--check-budgets", action="store_true",
+                    help="build the program card under BOTH layouts and "
+                         "check it against the registry quality budget; "
+                         "exit 1 on any violation (full-size mamba2 "
+                         "decode trips on the per_layer cliff)")
     ap.add_argument("--dump", default=None,
                     help="write the two fingerprints + diff as JSON here")
     args = ap.parse_args(argv)
+
+    if args.check_budgets:
+        from repro.serve.program_registry import (PINNED_SCAN_LAYERS,
+                                                  budget_for, build_card)
+        failed = False
+        for name, scan in (("scan_stacked", True), ("per_layer", False)):
+            fn, ex, cfg = program_lowering(args.arch, args.program,
+                                           scan_layers=scan,
+                                           reduced=args.reduced)
+            budget = budget_for(cfg, args.program)
+            card = build_card(args.program, f"hlo:{args.program}", fn, ex,
+                              budget=budget)
+            pinned = PINNED_SCAN_LAYERS.get(args.arch) == scan
+            tag = " (pinned serve layout)" if pinned else ""
+            print(f"{args.arch}/{args.program} [{name}]{tag}: "
+                  f"copies={card.copies} "
+                  f"temp={card.temp_bytes / 1e6:.1f}MB "
+                  f"flops={card.flops:.3g} "
+                  f"bytes={card.bytes_accessed:.3g}")
+            if budget is None:
+                print("  no budget for this config (reduced or "
+                      "unbudgeted program) -- informational only")
+                continue
+            violations = card.check_budget()
+            for v in violations:
+                print(f"  BUDGET VIOLATION: {v}")
+            if not violations:
+                print(f"  within budget (max_copies={budget.max_copies}, "
+                      f"max_temp={budget.max_temp_bytes / 1e6:.0f}MB)")
+            # only the layout the serve engine actually pins is gated:
+            # the other one is expected to trip (that is the cliff).
+            if violations and pinned:
+                failed = True
+        if failed:
+            raise SystemExit(1)
+        return None
 
     fps = {}
     scheds = {}
     bufs = {}
     for name, scan in (("scan_stacked", True), ("per_layer", False)):
-        compiled = decode_step_compiled(args.arch, scan_layers=scan,
-                                        reduced=args.reduced)
+        compiled = program_compiled(args.arch, args.program,
+                                    scan_layers=scan,
+                                    reduced=args.reduced)
         text = compiled.as_text()
         fps[name] = op_fingerprint(text)
         total = sum(v["count"] for v in fps[name].values())
-        print(f"{args.arch} [{name}]: {total} instructions, "
+        print(f"{args.arch}/{args.program} [{name}]: {total} instructions, "
               f"{len(fps[name])} opcodes")
         if args.schedule:
             scheds[name] = schedule_fingerprint(text)
@@ -367,7 +489,8 @@ def main(argv=None):
             print(f"  {name}: {bufs[name]}")
     if args.dump:
         with open(args.dump, "w") as f:
-            json.dump({"arch": args.arch, "fingerprints": fps,
+            json.dump({"arch": args.arch, "program": args.program,
+                       "fingerprints": fps,
                        "diff": diff, "schedule_diff": sdiff,
                        "buffer_assignment": bufs or None}, f, indent=2)
         print(f"\nwrote {args.dump}")

@@ -128,6 +128,14 @@ def main(argv=None):
     ap.add_argument("--strict-recompile", action="store_true",
                     help="raise RecompileError if a compile-once program "
                          "(decode / prefill_chunk) retraces after warmup")
+    ap.add_argument("--flight-records", type=int, default=0, metavar="N",
+                    help="keep a flight-recorder ring of the last N "
+                         "request timelines, dumped to --flight-path on "
+                         "fault events (0 = off; continuous engine only)")
+    ap.add_argument("--flight-path", default=None, metavar="PATH",
+                    help="JSONL file for flight-recorder fault dumps "
+                         "(render with repro.launch.trace_report "
+                         "--flight PATH)")
     args = ap.parse_args(argv)
     logging.basicConfig(level=logging.INFO, format="%(message)s")
     if args.prefill_chunk and args.engine != "continuous":
@@ -184,7 +192,10 @@ def main(argv=None):
         backend_fallback=not args.no_backend_fallback,
         max_retries=args.max_retries,
         retry_backoff_s=args.retry_backoff_s,
-        shed_inflight=args.shed_inflight)
+        shed_inflight=args.shed_inflight,
+        flight_records=(args.flight_records
+                        if args.engine == "continuous" else 0),
+        flight_path=args.flight_path)
     engine_cls = ContinuousEngine if args.engine == "continuous" else Engine
     engine = engine_cls(model, params, scfg)
 

@@ -57,6 +57,25 @@ PHASE_OF = {
 }
 CHECK_PROGRAMS = ("decode", "prefill_chunk")   # must compile exactly once
 
+# Engine-track span name -> the compiled program it times, for the
+# program-level breakdown.  Engine spans carry the registry's program id
+# in ``args.program`` (``serve/program_registry.py``); this map covers
+# the pool spans, whose names already identify the compiled row op
+# (``snapshot_restore``/``snapshot_export`` run the same compiled
+# scatter/gather as slot turnover — model.import_state/export_state).
+# These spans never nest in one another, so full durations sum cleanly.
+PROGRAM_OF_SPAN = {
+    "decode_step": "decode",
+    "draft": "draft",
+    "verify": "verify",
+    "prefill_chunk": "prefill_chunk",
+    "prefill_bucket": "prefill",
+    "pool_insert": "pool_insert",
+    "pool_reset": "pool_reset",
+    "snapshot_export": "pool_extract",
+    "snapshot_restore": "pool_insert",
+}
+
 
 def load_events(path: str) -> List[dict]:
     """Load a trace: Chrome JSON (``{"traceEvents": [...]}``) or the
@@ -125,6 +144,90 @@ def phase_breakdown(events: List[dict]) -> Dict[str, Any]:
         "phases_s": {k: round(v, 6) for k, v in sorted(phases.items())},
         "phases_frac": {k: round(v / wall, 4) if wall else 0.0
                         for k, v in sorted(phases.items())},
+    }
+
+
+def program_breakdown(events: List[dict],
+                      cards: Optional[Dict[str, Any]] = None
+                      ) -> Dict[str, Any]:
+    """Wall attribution per *compiled program*: wall, calls, tokens/s —
+    plus achieved-vs-roofline utilization when program cards are given.
+
+    Program spans never nest in each other (verified by the span
+    taxonomy: pool spans nest only under host sections like ``admit`` /
+    ``spec_copy``), so per-program wall is the plain sum of span
+    durations.  ``_host`` (scheduling/self time of non-program spans)
+    and ``_idle`` (host gaps) pseudo-rows come from the same interval
+    -nesting self-times as ``phase_breakdown``, so the rows reconcile
+    with the trace wall — ``coverage`` reports the ratio.
+
+    ``cards`` maps program name -> card dict (or ``ProgramCard``); a
+    program's ``utilization`` is its modeled best-case seconds per call
+    (the binding roofline term) over the measured mean call — the
+    fraction of the roofline the program actually achieves."""
+    progs: Dict[str, Dict[str, Any]] = {}
+    for ev in _spans(events, TID_ENGINE):
+        name = ev["name"]
+        if name not in PROGRAM_OF_SPAN:
+            continue
+        args = ev.get("args") or {}
+        pid = args.get("program")
+        prog = (pid.split(":", 1)[1] if isinstance(pid, str) and ":" in pid
+                else PROGRAM_OF_SPAN[name])
+        row = progs.setdefault(prog, {"id": None, "wall_s": 0.0,
+                                      "calls": 0, "tokens": 0})
+        if pid:
+            row["id"] = pid
+        row["wall_s"] += ev["dur"] / 1e6
+        row["calls"] += 1
+        row["tokens"] += int(args.get("tokens") or 0)
+
+    wall = wall_extent_s(events)
+    selfs = self_times_s(events)
+    host = sum(s for name, s in selfs.items()
+               if name not in PROGRAM_OF_SPAN and name != "host_gap")
+    idle = selfs.get("host_gap", 0.0)
+
+    def card_get(card, key):
+        if card is None:
+            return None
+        if isinstance(card, dict):
+            return card.get(key)
+        return getattr(card, key, None)
+
+    out_rows: Dict[str, Dict[str, Any]] = {}
+    for prog, row in progs.items():
+        r: Dict[str, Any] = {
+            "id": row["id"],
+            "wall_s": round(row["wall_s"], 6),
+            "frac": round(row["wall_s"] / wall, 4) if wall else 0.0,
+            "calls": row["calls"],
+            "mean_call_ms": round(row["wall_s"] / row["calls"] * 1e3, 4)
+            if row["calls"] else 0.0,
+        }
+        if row["tokens"]:
+            r["tokens"] = row["tokens"]
+            r["tokens_per_s"] = round(row["tokens"] / row["wall_s"], 2) \
+                if row["wall_s"] else 0.0
+        card = (cards or {}).get(prog)
+        roof = card_get(card, "roofline_s")
+        if roof and row["calls"]:
+            mean_call_s = row["wall_s"] / row["calls"]
+            r["roofline_s_per_call"] = roof
+            r["utilization"] = round(roof / mean_call_s, 4) \
+                if mean_call_s else 0.0
+        out_rows[prog] = r
+
+    program_total = sum(r["wall_s"] for r in out_rows.values())
+    total = program_total + host + idle
+    return {
+        "wall_s": round(wall, 6),
+        "program_total_s": round(program_total, 6),
+        "coverage": round(total / wall, 4) if wall else 0.0,
+        "programs": dict(sorted(out_rows.items(),
+                                key=lambda kv: -kv[1]["wall_s"])),
+        "_host_s": round(host, 6),
+        "_idle_s": round(idle, 6),
     }
 
 
@@ -213,6 +316,22 @@ def recompile_trips(events: List[dict]) -> Dict[str, int]:
     return dict(trips)
 
 
+def recompile_audit(events: List[dict]) -> Dict[str, Any]:
+    """Trips per program plus the registry program id each sentinel
+    carried (``serve/program_registry.py``), so the audit names the
+    offending compiled program, not just a sentinel label."""
+    trips: Dict[str, int] = defaultdict(int)
+    ids: Dict[str, str] = {}
+    for ev in events:
+        if ev.get("ph") == "i" and ev.get("name") == "recompile":
+            prog = ev["args"].get("program", "?")
+            trips[prog] += ev["args"].get("new_traces", 1)
+            pid = ev["args"].get("program_id")
+            if pid:
+                ids[prog] = pid
+    return {"trips": dict(trips), "program_ids": ids}
+
+
 def snapshots(events: List[dict]) -> List[dict]:
     return [ev["args"] for ev in events
             if ev.get("ph") == "i" and ev.get("name") == "metrics_snapshot"]
@@ -236,14 +355,18 @@ def fault_events(events: List[dict]) -> Dict[str, int]:
     return dict(out)
 
 
-def analyze(events: List[dict]) -> Dict[str, Any]:
+def analyze(events: List[dict],
+            cards: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     table = request_table(events)
+    audit = recompile_audit(events)
     return {
         "phase_breakdown": phase_breakdown(events),
+        "program_breakdown": program_breakdown(events, cards),
         "ttft_decomposition": ttft_decomposition(table),
         "requests": table,
         "slot_utilization": slot_utilization(events),
-        "recompile_trips": recompile_trips(events),
+        "recompile_trips": audit["trips"],
+        "recompile_program_ids": audit["program_ids"],
         "fault_events": fault_events(events),
         "metrics_snapshots": len(snapshots(events)),
     }
@@ -261,6 +384,24 @@ def print_report(rep: Dict[str, Any], max_requests: int = 20) -> None:
         print(f"  {phase:<11s} {_fmt_s(s)}  {pb['phases_frac'][phase]:6.1%}")
     print(f"  {'total':<11s} {_fmt_s(pb['phase_total_s'])}  vs wall "
           f"{_fmt_s(pb['wall_s'])}  (coverage {pb['coverage']:.1%})")
+
+    prb = rep.get("program_breakdown") or {}
+    if prb.get("programs"):
+        print("\n== per-program wall breakdown ==")
+        for prog, r in prb["programs"].items():
+            extra = ""
+            if r.get("tokens_per_s") is not None:
+                extra += f"  {r['tokens_per_s']:10.1f} tok/s"
+            if r.get("utilization") is not None:
+                extra += f"  {r['utilization']:6.1%} of roofline"
+            label = f"{prog} ({r['id']})" if r.get("id") else prog
+            print(f"  {label:<24s} {_fmt_s(r['wall_s'])}  {r['frac']:6.1%}"
+                  f"  x{r['calls']:<5d}{extra}")
+        print(f"  {'(host)':<24s} {_fmt_s(prb['_host_s'])}")
+        print(f"  {'(idle)':<24s} {_fmt_s(prb['_idle_s'])}")
+        print(f"  total {_fmt_s(prb['program_total_s'])} in programs vs "
+              f"wall {_fmt_s(prb['wall_s'])} "
+              f"(coverage {prb['coverage']:.1%})")
 
     td = rep["ttft_decomposition"]
     if td.get("requests"):
@@ -294,7 +435,10 @@ def print_report(rep: Dict[str, Any], max_requests: int = 20) -> None:
                   f"{b['decode_s'] * 1e3:7.1f} ms) {bar}")
 
     trips = rep["recompile_trips"]
-    print(f"\nrecompile trips: {trips or 'none'}   metrics snapshots: "
+    ids = rep.get("recompile_program_ids") or {}
+    shown = ({f"{k} ({ids[k]})" if k in ids else k: v
+              for k, v in trips.items()} if trips else None)
+    print(f"\nrecompile trips: {shown or 'none'}   metrics snapshots: "
           f"{rep['metrics_snapshots']}")
     faults = rep.get("fault_events") or {}
     if faults:
@@ -315,19 +459,54 @@ def check(rep: Dict[str, Any], tolerance: float = 0.05) -> List[str]:
             f"phase total {pb['phase_total_s']:.4f}s does not reconcile "
             f"with wall {pb['wall_s']:.4f}s "
             f"(coverage {pb['coverage']:.1%}, tolerance {tolerance:.0%})")
+    ids = rep.get("recompile_program_ids") or {}
     for prog in CHECK_PROGRAMS:
         n = rep["recompile_trips"].get(prog, 0)
         if n:
-            problems.append(f"compile-once program {prog!r} retraced "
+            label = f"{prog!r} ({ids[prog]})" if prog in ids else repr(prog)
+            problems.append(f"compile-once program {label} retraced "
                             f"{n} time(s) after warmup")
     return problems
+
+
+def print_flight(dumps: List[dict]) -> None:
+    """Human-facing render of flight-recorder dumps
+    (``serve/flight_recorder.py`` JSONL: header + fault + ring)."""
+    if not dumps:
+        print("no flight dumps in file")
+        return
+    for d in dumps:
+        h = d["header"]
+        fault = d.get("fault") or {}
+        facts = ", ".join(f"{k}={v}" for k, v in sorted(fault.items())
+                          if k != "kind")
+        print(f"== flight dump {h.get('flight_dump')} — "
+              f"{h.get('kind', '?')}" + (f" ({facts})" if facts else "") +
+              f" — last {h.get('entries', 0)} of "
+              f"{h.get('recorded_total', '?')} request(s) ==")
+        if d["requests"]:
+            print(f"  {'uid':>5s} {'status':<16s} {'slot':>4s} "
+                  f"{'queue':>9s} {'staging':>9s} {'decode':>9s} "
+                  f"{'tokens':>6s} {'retries':>7s}")
+
+        def ms(x):
+            return f"{x * 1e3:7.1f}ms" if x is not None else "        ?"
+
+        for r in d["requests"]:
+            print(f"  {r.get('uid', '?'):>5} {r.get('status', '?'):<16s} "
+                  f"{r.get('slot') if r.get('slot') is not None else '?':>4} "
+                  f"{ms(r.get('queue_s'))} {ms(r.get('staging_s'))} "
+                  f"{ms(r.get('decode_s'))} {r.get('tokens', '?'):>6} "
+                  f"{r.get('retries', 0):>7}")
+        print()
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Fold a serve trace (Chrome JSON or JSONL) into phase "
                     "breakdowns, TTFT decomposition, and slot timelines.")
-    ap.add_argument("trace", help="trace path from launch/serve --trace")
+    ap.add_argument("trace", nargs="?",
+                    help="trace path from launch/serve --trace")
     ap.add_argument("--json", action="store_true",
                     help="print the full report as JSON instead of tables")
     ap.add_argument("--check", action="store_true",
@@ -338,9 +517,38 @@ def main(argv=None) -> int:
                     help="--check reconciliation tolerance (default 0.05)")
     ap.add_argument("--max-requests", type=int, default=20,
                     help="waterfall rows to print")
+    ap.add_argument("--cards", metavar="PATH",
+                    help="program-card JSON (name -> card dict, e.g. from "
+                         "hlo_analysis --dump or a BENCH program_cards "
+                         "block) to fold roofline utilization into the "
+                         "program breakdown")
+    ap.add_argument("--flight", metavar="PATH",
+                    help="render a flight-recorder JSONL dump "
+                         "(launch/serve --flight-path) instead of a trace")
     args = ap.parse_args(argv)
 
-    rep = analyze(load_events(args.trace))
+    if args.flight:
+        from repro.serve.flight_recorder import load_flight
+        dumps = load_flight(args.flight)
+        if args.json:
+            json.dump(dumps, sys.stdout, indent=2)
+            print()
+        else:
+            print_flight(dumps)
+        # --check semantics for flight mode: the file must contain at
+        # least one well-formed dump.
+        if args.check and not dumps:
+            print("CHECK FAILED: no flight dumps parsed", file=sys.stderr)
+            return 1
+        return 0
+    if not args.trace:
+        ap.error("trace path required (or use --flight PATH)")
+
+    cards = None
+    if args.cards:
+        with open(args.cards) as f:
+            cards = json.load(f)
+    rep = analyze(load_events(args.trace), cards=cards)
     if args.json:
         json.dump(rep, sys.stdout, indent=2)
         print()

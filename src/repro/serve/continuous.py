@@ -80,7 +80,9 @@ from repro.runtime.elastic import backoff_delay_s
 from repro.runtime.faults import as_injector
 from repro.runtime.health import StepMonitor, Watchdog
 from repro.serve.engine import EngineBase, ServeConfig
+from repro.serve.flight_recorder import FlightRecorder
 from repro.serve.prefix_cache import PrefixCache, chunk_key
+from repro.serve.program_registry import budget_for
 from repro.serve.scheduler import Request, bucket_for, chunk_span
 from repro.serve.speculative import accept_lengths, emit_counts, \
     needs_rollback
@@ -233,6 +235,18 @@ class ContinuousEngine(EngineBase):
             self._pref_pins: List[list] = [[] for _ in range(self.slots)]
             self._pref_insert_ok = [True] * self.slots
         # -- observability (docs/observability.md) --------------------------
+        # Flight recorder: a bounded ring of the last-N completed-request
+        # timelines, dumped to JSONL whenever a fault event fires
+        # (quarantine / shed / retry / watchdog / backend fallback) —
+        # created before the watchdog so its thread can always dump.
+        self.flight: Optional[FlightRecorder] = None
+        if getattr(cfg, "flight_records", 0):
+            self.flight = FlightRecorder(cfg.flight_records,
+                                         getattr(cfg, "flight_path", None))
+        # Program registry: every compiled program above registers its
+        # serve shapes (ShapeDtypeStructs only — card builds are lazy and
+        # off the hot path) so ids thread through spans and sentinels.
+        self._register_programs()
         # Host scheduling gaps: time between the end of one poll and the
         # start of the next (caller time + idle waits) gets its own trace
         # track so phase breakdowns account for ALL wall time.
@@ -287,6 +301,11 @@ class ContinuousEngine(EngineBase):
                             deadline_s=self.cfg.watchdog_s)
         log.error("serve watchdog: no compiled call completed within "
                   "%.1fs — engine may be hung", self.cfg.watchdog_s)
+        if getattr(self, "flight", None) is not None:
+            # Runs on the watchdog thread; the recorder only appends to
+            # its file, which is safe from here.
+            self.flight.record_fault("watchdog_hang",
+                                     deadline_s=self.cfg.watchdog_s)
         if getattr(self.cfg, "watchdog_action", "log") == "recover":
             # The watchdog thread cannot abort a compiled call; it flags
             # the engine and the next poll() aborts the stuck burst and
@@ -312,6 +331,110 @@ class ContinuousEngine(EngineBase):
         self.monitor_spec = StepMonitor()
         self._last_poll_end = None
         super().reset_stats()
+
+    # ------------------------------------------------------------------
+    # program registry (docs/observability.md)
+    # ------------------------------------------------------------------
+    def _register_programs(self) -> None:
+        """(Re)attach every compiled program this engine warms up to the
+        registry at its serve shapes.  Cheap — ShapeDtypeStructs only, no
+        compiles — and re-run by a backend rebuild so program cards
+        always lower the jits currently serving.  Ids are stable across
+        re-registration; sentinels pick up their program ids here so a
+        recompile trip names the program, not just a span label."""
+        reg = self.registry
+        i32 = jnp.int32
+        tok = jax.ShapeDtypeStruct((self.slots, 1), i32)
+        pos = jax.ShapeDtypeStruct((self.slots,), i32)
+        reg.register("decode", self._decode,
+                     (self._decode_params, tok, self.pool.cache, pos),
+                     budget=budget_for(self.model.cfg, "decode"))
+        reg.register(
+            "prefill", self._prefill,
+            (self.params,
+             {"tokens": jax.ShapeDtypeStruct((self.slots, self.buckets[-1]),
+                                             i32)},
+             self._scratch))
+        if self.chunk:
+            reg.register(
+                "prefill_chunk", self._chunk_step,
+                (self.params,
+                 jax.ShapeDtypeStruct((self.slots, self.chunk), i32),
+                 self._ppool.cache, pos))
+        if self.spec_k:
+            reg.register(
+                "verify", self._verify,
+                (self.params,
+                 jax.ShapeDtypeStruct((self.slots, self.spec_k), i32),
+                 self.pool.cache, pos))
+            # The draft step is the decode program's second trace (the
+            # quantized pytree) — its own card shows the int8 variant.
+            reg.register("draft", self._decode,
+                         (self._draft_params, tok, self.pool.cache, pos))
+            # The W8 dequant-matmul the draft trace calls into, at a
+            # representative (slots, d_model) x (d_model, d_model) shape.
+            # On CPU the serving path is nn/quant.qdot's XLA variant
+            # (dot_general on the int8 payload + per-channel scale); the
+            # fused pallas kernel only lowers on accelerator backends.
+            d = self.model.cfg.d_model
+            qx = jax.ShapeDtypeStruct((self.slots, d), jnp.float32)
+            qw = jax.ShapeDtypeStruct((d, d), jnp.int8)
+            qs = jax.ShapeDtypeStruct((1, d), jnp.float32)
+            if jax.default_backend() == "cpu":
+                def _qmm(x, q, scale):
+                    y = jax.lax.dot_general(
+                        x, q, (((x.ndim - 1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                    return y * scale.reshape(-1)
+                reg.register("qmatmul", jax.jit(_qmm), (qx, qw, qs))
+            else:
+                from repro.kernels import ops as kops
+                reg.register("qmatmul", kops.qmatmul, (qx, qw, qs))
+        # The decode pool's row ops (slot turnover, snapshot export /
+        # import share the same compiled gather/scatter) build lazily on
+        # first use — thunks resolve at card-build time.
+        scalar = jax.ShapeDtypeStruct((), i32)
+        pool = self.pool
+
+        def pool_op(attr):
+            def thunk():
+                if getattr(pool, attr) is None:
+                    pool._build_ops()
+                return getattr(pool, attr)
+            return thunk
+
+        reg.register("pool_insert", fn_thunk=pool_op("_insert"),
+                     example_args=(pool.cache, pool.cache, scalar, scalar))
+        reg.register("pool_extract", fn_thunk=pool_op("_extract"),
+                     example_args=(pool.cache, scalar))
+        reg.register("pool_reset", fn_thunk=pool_op("_reset"),
+                     example_args=(pool.cache, scalar))
+        # Sentinels: existing ones learn their program id; the lazily
+        # -built pool ops get inert-until-first-sight sentinels of their
+        # own (fn_getter reads size -1 until the op exists).
+        strict = getattr(self.cfg, "strict_recompile", False)
+        for name, s in self.sentinels.items():
+            if name in reg:
+                s.program_id = reg.program_id(name)
+        for name, attr in (("pool_insert", "_insert"),
+                           ("pool_reset", "_reset")):
+            if name not in self.sentinels:
+                # NB: the sentinel getter must NOT force-build the ops
+                # (pool_op does, for cards) — it just observes them.
+                self.sentinels[name] = RecompileSentinel(
+                    name, strict=strict,
+                    fn_getter=lambda p=pool, a=attr: getattr(p, a),
+                    program_id=reg.program_id(name))
+        # Hot-path span args use these pre-resolved id strings — constant
+        # string refs, not registry lookups, per compiled call.
+        self._pid_decode = reg.program_id("decode")
+        self._pid_prefill = reg.program_id("prefill")
+        self._pid_chunk = (reg.program_id("prefill_chunk")
+                           if self.chunk else None)
+        self._pid_verify = (reg.program_id("verify")
+                            if self.spec_k else None)
+        self._pid_draft = (reg.program_id("draft")
+                           if self.spec_k else None)
 
     def _observe_step(self, monitor: StepMonitor, kind: str,
                       dt_s: float) -> None:
@@ -363,6 +486,9 @@ class ContinuousEngine(EngineBase):
         self.metrics.record_backend_fallback()
         self.tracer.instant("backend_fallback", program=program,
                             from_mode=mode, to_mode=nxt, error=str(err))
+        if self.flight is not None:
+            self.flight.record_fault("backend_fallback", program=program,
+                                     from_mode=mode, to_mode=nxt)
         return True
 
     def _rebuild_backend(self, mode: str) -> None:
@@ -412,6 +538,10 @@ class ContinuousEngine(EngineBase):
                 "verify", self._verify, strict=strict)
         if self._state_probe is not None:
             self._state_probe = self._build_state_probe()
+        # The rebuilt jits replace the registry's lowering recipes (same
+        # ids — spans keep meaning the same program) and drop any cached
+        # cards; the fresh sentinels re-learn their program ids.
+        self._register_programs()
         # A rebuild is a new warmup: trace every rebuilt program at its
         # serve shapes NOW, on throwaway inputs, so all compiles land
         # inside the fallback event.  The sentinels arm lazily, but only
@@ -482,6 +612,10 @@ class ContinuousEngine(EngineBase):
         self.metrics.record_shed("poison")
         self.tracer.instant("quarantine", uid=req.uid, slot=slot,
                             where=where, tokens=len(req.out_tokens))
+        if self.flight is not None:
+            self.flight.record_request(req, slot=slot, status="poisoned")
+            self.flight.record_fault("quarantine", uid=req.uid, slot=slot,
+                                     where=where)
         log.error("request %d: non-finite %s output in slot %d — "
                   "quarantined (row reset, request shed)", req.uid, where,
                   slot)
@@ -609,6 +743,9 @@ class ContinuousEngine(EngineBase):
         self.scheduler.expired.append(req)
         self.tracer.instant("shed", uid=req.uid, reason=reason,
                             inflight=True)
+        if self.flight is not None:
+            self.flight.record_request(req, status=status)
+            self.flight.record_fault("shed", uid=req.uid, reason=reason)
         log.warning("request %d: shed in flight (%s)", req.uid, reason)
         self._finished.append(req)
 
@@ -642,6 +779,8 @@ class ContinuousEngine(EngineBase):
                 requeued += self._retry_or_shed(req, now)
         self.metrics.record_watchdog_recovery(requeued)
         self.tracer.instant("watchdog_recover", requeued=requeued)
+        if self.flight is not None:
+            self.flight.record_fault("watchdog_recover", requeued=requeued)
         log.error("watchdog recovery: aborted stuck burst, requeued %d "
                   "request(s)", requeued)
 
@@ -664,6 +803,9 @@ class ContinuousEngine(EngineBase):
         req.not_before_s = (now + backoff_delay_s(req.retries, base)
                             if base else None)
         self.tracer.instant("retry", uid=req.uid, attempt=req.retries)
+        if self.flight is not None:
+            self.flight.record_fault("retry", uid=req.uid,
+                                     attempt=req.retries)
         self.scheduler.submit(req)
         return 1
 
@@ -727,6 +869,9 @@ class ContinuousEngine(EngineBase):
         req.finish_s = now
         req.latency_s = now - req.arrival_s
         self.metrics.record_finish(req.latency_s, len(req.out_tokens))
+        if self.flight is not None:
+            self.flight.record_request(req, slot=slot,
+                                       status=getattr(req, "status", "ok"))
         if self.tracer.enabled:
             if req.decode_pc is not None:
                 self.tracer.complete("decode", req.decode_pc,
@@ -820,7 +965,9 @@ class ContinuousEngine(EngineBase):
                                       np.full(self.slots, bucket, np.int64))
             t1 = time.perf_counter()
             self.tracer.complete("prefill_bucket", t0, t1, bucket=bucket,
-                                 rows=len(group))
+                                 rows=len(group),
+                                 tokens=bucket * len(group),
+                                 program=self._pid_prefill)
             self._observe_step(self.monitor_prefill, "prefill", t1 - t0)
             self.metrics.record_prefill(bucket * len(group), t1 - t0)
             self.pool.insert_rows(cache,
@@ -979,7 +1126,8 @@ class ContinuousEngine(EngineBase):
         jax.block_until_ready(logits)
         t1 = time.perf_counter()
         self.tracer.complete("prefill_chunk", t0, t1, rows=len(rows),
-                             tokens=C * len(rows))
+                             tokens=C * len(rows),
+                             program=self._pid_chunk)
         self._observe_step(self.monitor_prefill, "prefill", t1 - t0)
         self.metrics.record_prefill(C * len(rows), t1 - t0)
         done_rows = []
@@ -1017,6 +1165,11 @@ class ContinuousEngine(EngineBase):
                 self.metrics.record_shed("poison")
                 self.tracer.instant("quarantine", uid=req.uid, slot=i,
                                     where="prefill")
+                if self.flight is not None:
+                    self.flight.record_request(req, slot=i,
+                                               status="poisoned")
+                    self.flight.record_fault("quarantine", uid=req.uid,
+                                             slot=i, where="prefill")
                 log.error("request %d: non-finite prefill output in "
                           "staging row %d — quarantined", req.uid, i)
                 self._finished.append(req)
@@ -1083,7 +1236,9 @@ class ContinuousEngine(EngineBase):
             cur = self._sample_rows(logits, uids, self._pos + j + 1)
             drafts[:, j] = cur
         t1 = time.perf_counter()
-        self.tracer.complete("draft", t0, t1, rows=len(live), k=k)
+        self.tracer.complete("draft", t0, t1, rows=len(live), k=k,
+                             tokens=k * len(live),
+                             program=self._pid_draft)
         self._observe_step(self.monitor_spec, "draft", t1 - t0)
 
         # Verify pass: ONE chunk call over [t0, d_1 .. d_{k-1}], donating
@@ -1103,7 +1258,8 @@ class ContinuousEngine(EngineBase):
         vl = np.asarray(vlogits, np.float32)
         t1 = time.perf_counter()
         self.tracer.complete("verify", t0, t1, rows=len(live),
-                             tokens=k * len(live))
+                             tokens=k * len(live),
+                             program=self._pid_verify)
         self._observe_step(self.monitor_spec, "verify", t1 - t0)
         self.metrics.record_step(len(live), t1 - t0)
 
@@ -1235,7 +1391,9 @@ class ContinuousEngine(EngineBase):
             nxt = self._sample_rows(lg, self._row_uids(), self._pos + 1)
             self.pool.cache = cache
             t1 = time.perf_counter()
-            self.tracer.complete("decode_step", t0, t1, live=len(live))
+            self.tracer.complete("decode_step", t0, t1, live=len(live),
+                                 tokens=len(live),
+                                 program=self._pid_decode)
             self._observe_step(self.monitor_decode, "decode", t1 - t0)
             self.metrics.record_step(len(live), t1 - t0)
             # Dead slots decode into a sink: their position pins to the last

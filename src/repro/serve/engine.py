@@ -32,6 +32,7 @@ from repro.serve import sampling
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import (Request, Scheduler, bucket_for,
                                    build_request)
+from repro.serve.program_registry import ProgramRegistry
 from repro.serve.state_pool import (StatePool, format_compile_count,
                                     jit_cache_size)
 from repro.serve.tracing import (NULL_TRACER, TID_QUEUE, TID_SLOT0,
@@ -141,6 +142,14 @@ class ServeConfig:
     # decoding), not just queued ones.  Off by default: pre-existing
     # deployments treat deadline_s as an admission SLA only.
     shed_inflight: bool = False
+    # -- flight recorder (continuous engine; serve/flight_recorder.py) ------
+    # Keep the last N completed-request timelines in a bounded ring and
+    # dump them (JSONL at flight_path) whenever a fault event fires —
+    # quarantine, watchdog hang/recovery, shed, retry, backend fallback.
+    # 0 disables the recorder entirely.  Near-zero steady-state cost
+    # (one small dict per completed request, no per-step work).
+    flight_records: int = 0
+    flight_path: Optional[str] = None
 
 
 class EngineBase:
@@ -175,15 +184,26 @@ class EngineBase:
         self.metrics = ServeMetrics(cfg.max_batch, tracer=self.tracer,
                                     metrics_every=getattr(cfg,
                                                           "metrics_every", 0))
+        # Every compiled program the engine warms up registers here for
+        # program-level attribution: stable ids ride through sentinels
+        # and trace spans, and cost/quality cards build lazily on demand
+        # (never on the hot path — see serve/program_registry.py).  The
+        # wave engine registers decode/prefill name-only (its shapes
+        # vary per wave); the continuous engine attaches example shapes.
+        self.registry = ProgramRegistry()
+        self.registry.register("decode", self._decode)
+        self.registry.register("prefill", self._prefill)
         # Compile-once discipline as first-class sentinels: checked every
         # poll/wave, re-armed by reset_stats() (i.e. after warmup), so a
         # trip always means a *post-warmup* retrace.
         strict = getattr(cfg, "strict_recompile", False)
         self.sentinels = {
-            "decode": RecompileSentinel("decode", self._decode,
-                                        strict=strict),
-            "prefill": RecompileSentinel("prefill", self._prefill,
-                                         strict=strict),
+            "decode": RecompileSentinel(
+                "decode", self._decode, strict=strict,
+                program_id=self.registry.program_id("decode")),
+            "prefill": RecompileSentinel(
+                "prefill", self._prefill, strict=strict,
+                program_id=self.registry.program_id("prefill")),
         }
 
     def _buckets(self) -> Sequence[int]:

@@ -1,0 +1,150 @@
+"""Flight recorder: last-N request timelines, dumped on fault events.
+
+The full tracer answers "where did the wall time go" but costs memory
+proportional to the run and is usually off in production-shaped runs —
+exactly the runs where PR 9's fault machinery (quarantine, watchdog
+recovery, shedding, retries) fires.  When it does fire, the question is
+always the same: *what was in flight just before this?*
+
+The recorder answers it at near-zero steady-state cost: a bounded ring
+(``collections.deque(maxlen=N)``) of compact per-request timelines,
+built from stamps the engine already keeps on each ``Request`` (arrival,
+admission, first token, finish) — no tracer required, no per-step work,
+one dict per *completed request*.  On a fault event the engine calls
+:meth:`record_fault`, which appends one dump — a header line, the fault
+facts, then the ring contents oldest-first — to a JSON-lines file.
+``launch/trace_report.py --flight`` renders dumps for humans; the smoke
+path (``make smoke-flight``) drives injected-fault -> dump -> parse end
+to end.
+
+Request stamps are ``time.time()`` wall clock except ``admit_pc``
+(``perf_counter``); the recorder fixes one epoch offset at construction
+to put admission on the wall clock, mirroring ``Tracer``'s clock
+bridging in the other direction.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import time
+from typing import Any, Dict, Optional
+
+
+class FlightRecorder:
+    """Bounded per-request history + fault-triggered JSONL dumps.
+
+    ``capacity`` bounds the ring; ``path`` is the dump file (appended —
+    one run can dump several faults; each dump is self-delimiting via
+    its header's ``entries`` count).  ``path=None`` keeps the ring in
+    memory only (tests introspect it directly).
+    """
+
+    def __init__(self, capacity: int = 32, path: Optional[str] = None):
+        self.capacity = int(capacity)
+        self.path = path
+        self._ring: collections.deque = collections.deque(
+            maxlen=max(1, self.capacity))
+        self._epoch = time.time() - time.perf_counter()
+        self.dumps = 0          # fault dumps written so far
+        self.recorded = 0       # requests ever recorded (ring may be full)
+
+    # -- recording ---------------------------------------------------------
+    def record_request(self, req, *, slot: Optional[int] = None,
+                       status: str = "ok") -> None:
+        """Fold one finished/failed request's timeline into the ring.
+
+        Derives the queue/staging/decode segments from the stamps the
+        engine already maintains; missing stamps (a request shed while
+        queued never stages) leave their segments ``None``.
+        """
+        arrival = getattr(req, "arrival_s", None)
+        admit_pc = getattr(req, "admit_pc", None)
+        admit = (admit_pc + self._epoch) if admit_pc is not None else None
+        first = getattr(req, "first_token_s", None)
+        finish = getattr(req, "finish_s", None)
+
+        def seg(a, b):
+            return round(b - a, 6) if a is not None and b is not None \
+                else None
+
+        self._ring.append({
+            "uid": getattr(req, "uid", None),
+            "status": status,
+            "slot": slot,
+            "prompt_tokens": len(getattr(req, "prompt", ()) or ()),
+            "tokens": len(getattr(req, "out_tokens", ()) or ()),
+            "retries": getattr(req, "retries", 0),
+            "arrival_s": arrival,
+            "queue_s": seg(arrival, admit),
+            "staging_s": seg(admit, first),
+            "decode_s": seg(first, finish),
+            "latency_s": getattr(req, "latency_s", None) or
+            seg(arrival, finish),
+        })
+        self.recorded += 1
+
+    # -- dumping -----------------------------------------------------------
+    def record_fault(self, kind: str, **facts: Any) -> Dict[str, Any]:
+        """A fault event fired: snapshot the ring to the dump file.
+
+        Returns the dump header (handy for tests).  The JSONL layout per
+        dump is: one ``{"flight_dump": ...}`` header, one
+        ``{"fault": ...}`` line, then ``entries`` request lines
+        oldest-first.
+        """
+        header = {
+            "flight_dump": self.dumps,
+            "time_s": round(time.time(), 3),
+            "kind": kind,
+            "entries": len(self._ring),
+            "capacity": self.capacity,
+            "recorded_total": self.recorded,
+        }
+        if self.path:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(header) + "\n")
+                f.write(json.dumps({"fault": {"kind": kind, **facts}}) +
+                        "\n")
+                for entry in self._ring:
+                    f.write(json.dumps(entry) + "\n")
+        self.dumps += 1
+        self.last_fault = {"kind": kind, **facts}
+        return header
+
+    # -- introspection -----------------------------------------------------
+    def entries(self):
+        return list(self._ring)
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+
+def load_flight(path: str):
+    """Parse a flight-recorder JSONL file back into a list of dumps:
+    ``[{"header": ..., "fault": ..., "requests": [...]}, ...]``.
+
+    Tolerant of interleaved foreign lines before the first header (the
+    file is append-only and self-delimiting via ``entries``).
+    """
+    dumps = []
+    with open(path) as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    i = 0
+    while i < len(lines):
+        ln = lines[i]
+        if not isinstance(ln, dict) or "flight_dump" not in ln:
+            i += 1
+            continue
+        header = ln
+        fault = None
+        i += 1
+        if i < len(lines) and isinstance(lines[i], dict) \
+                and "fault" in lines[i]:
+            fault = lines[i]["fault"]
+            i += 1
+        n = int(header.get("entries", 0))
+        requests = lines[i:i + n]
+        i += n
+        dumps.append({"header": header, "fault": fault,
+                      "requests": requests})
+    return dumps

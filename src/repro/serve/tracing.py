@@ -254,12 +254,23 @@ class RecompileSentinel:
 
     On jax versions without a jit cache-size probe the sentinel is
     inert: ``supported`` is False and ``check()`` always returns 0.
+
+    ``program_id`` (a ``serve/program_registry`` id like ``p0:decode``)
+    rides in the trip instant so ``trace_report``'s recompile audit
+    names the offending *program*, not just a span label.  ``fn_getter``
+    defers callable resolution to check time, for programs built lazily
+    after the sentinel exists (the state pools' row ops): until the
+    getter returns a jitted fn the sentinel reads size -1 and stays
+    inert, then lazy-arms on first sight.
     """
 
-    def __init__(self, name: str, fn, strict: bool = False):
+    def __init__(self, name: str, fn=None, strict: bool = False, *,
+                 program_id: Optional[str] = None, fn_getter=None):
         self.name = name
         self._fn = fn
+        self._fn_getter = fn_getter
         self.strict = strict
+        self.program_id = program_id
         self.trips = 0
         self._baseline: Optional[int] = None
 
@@ -267,9 +278,17 @@ class RecompileSentinel:
     def supported(self) -> bool:
         return self._size() >= 0
 
+    def rebind(self, fn) -> None:
+        """Point the sentinel at a rebuilt jit (backend fallback swaps
+        the programs underneath); the caller re-arms afterwards."""
+        self._fn = fn
+
     def _size(self) -> int:
+        fn = self._fn
+        if fn is None and self._fn_getter is not None:
+            fn = self._fn_getter()
         try:
-            return self._fn._cache_size()
+            return fn._cache_size()
         except Exception:
             return -1
 
@@ -284,19 +303,23 @@ class RecompileSentinel:
         n = self._size()
         if n < 0:
             return 0
-        if self._baseline is None or (self._baseline == 0 and n > 0):
+        if self._baseline is None or (self._baseline < 1 and n > 0):
             # Lazy arm: the first time the program shows up compiled, all
             # of its traces so far are warmup.  (Benchmarks arm
             # explicitly via reset_stats() after their warmup pass, which
-            # also covers multi-bucket prefill programs.)
+            # also covers multi-bucket prefill programs.)  A baseline
+            # below zero means the program didn't exist when armed (a
+            # lazily-built op behind fn_getter) — same treatment.
             self._baseline = n
             return self.trips
         if n > self._baseline:
             new = n - self._baseline
             self._baseline = n
             self.trips += new
+            extra = ({"program_id": self.program_id}
+                     if self.program_id else {})
             tracer.instant("recompile", program=self.name, new_traces=new,
-                           trips=self.trips)
+                           trips=self.trips, **extra)
             if self.strict:
                 raise RecompileError(
                     f"compiled program {self.name!r} retraced after warmup "

@@ -1,0 +1,167 @@
+"""scripts/bench_diff.py (make bench-diff): per-metric direction +
+tolerance semantics — improvement passes, regression fails, a metric
+missing from the fresh artifact fails, a metric without a baseline
+passes as "new", and the bounds are inclusive at the tolerance edge."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_diff",
+    os.path.join(os.path.dirname(__file__), os.pardir, "scripts",
+                 "bench_diff.py"))
+bench_diff = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_diff)
+
+
+def _check(direction, base, fresh, rtol=0.0, atol=0.0, metric="m"):
+    spec = {"file": "B.json", "metric": metric, "direction": direction,
+            "rtol": rtol, "atol": atol}
+    return bench_diff.check_metric(spec, {metric: base}, {metric: fresh})
+
+
+# ---------------------------------------------------------------------------
+# direction semantics
+# ---------------------------------------------------------------------------
+def test_higher_improvement_and_regression():
+    assert _check("higher", 100.0, 150.0, rtol=0.1)["status"] == "ok"
+    assert _check("higher", 100.0, 95.0, rtol=0.1)["status"] == "ok"
+    assert _check("higher", 100.0, 85.0, rtol=0.1)["status"] == "regression"
+
+
+def test_lower_improvement_and_regression():
+    assert _check("lower", 0.1, 0.05, rtol=0.2)["status"] == "ok"
+    assert _check("lower", 0.1, 0.11, rtol=0.2)["status"] == "ok"
+    assert _check("lower", 0.1, 0.2, rtol=0.2)["status"] == "regression"
+
+
+def test_equal_two_sided():
+    assert _check("equal", 10, 10)["status"] == "ok"
+    assert _check("equal", 10, 11)["status"] == "regression"
+    assert _check("equal", 10, 9)["status"] == "regression"
+    assert _check("equal", 10, 11, atol=1.0)["status"] == "ok"
+    # relative band scales with the baseline magnitude
+    assert _check("equal", 1000.0, 1049.0, rtol=0.05)["status"] == "ok"
+    assert _check("equal", 1000.0, 1051.0, rtol=0.05)["status"] == \
+        "regression"
+
+
+def test_tolerance_edges_inclusive():
+    # higher: floor = base*(1-rtol) - atol; landing ON the floor passes
+    assert _check("higher", 100.0, 90.0, rtol=0.1)["status"] == "ok"
+    assert _check("higher", 100.0, 89.0, rtol=0.1, atol=1.0)["status"] \
+        == "ok"
+    # lower: ceiling inclusive too
+    assert _check("lower", 100.0, 110.0, rtol=0.1)["status"] == "ok"
+    # equal: |diff| == tol passes
+    assert _check("equal", 100.0, 105.0, rtol=0.05)["status"] == "ok"
+
+
+def test_zero_tolerance_counters():
+    assert _check("equal", 0, 0)["status"] == "ok"
+    assert _check("equal", 0, 1)["status"] == "regression"
+
+
+def test_unknown_direction_fails():
+    assert _check("sideways", 1, 1)["status"] == "missing"
+
+
+# ---------------------------------------------------------------------------
+# missing / new metrics
+# ---------------------------------------------------------------------------
+def test_metric_missing_in_fresh_fails():
+    spec = {"file": "B.json", "metric": "a.b", "direction": "higher"}
+    row = bench_diff.check_metric(spec, {"a": {"b": 1.0}}, {"a": {}})
+    assert row["status"] == "missing"
+
+
+def test_metric_missing_in_baseline_is_new():
+    spec = {"file": "B.json", "metric": "a.b", "direction": "higher"}
+    row = bench_diff.check_metric(spec, {"a": {}}, {"a": {"b": 1.0}})
+    assert row["status"] == "new"
+
+
+def test_non_numeric_fresh_fails():
+    assert _check("higher", 1.0, "fast")["status"] == "missing"
+    assert _check("equal", 1.0, True)["status"] == "missing"
+
+
+# ---------------------------------------------------------------------------
+# dotted-path resolution
+# ---------------------------------------------------------------------------
+def test_get_path_nested_lists_and_dotted_keys():
+    doc = {"phases": [{"wall_s": 1.5}],
+           "pwl_err": {"silu.k16": {"max_abs": 0.007}}}
+    assert bench_diff.get_path(doc, "phases.0.wall_s") == 1.5
+    assert bench_diff.get_path(doc, "pwl_err.silu.k16.max_abs") == 0.007
+    assert bench_diff.get_path(doc, "phases.7.wall_s") is None
+    assert bench_diff.get_path(doc, "nope.deeper") is None
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: schema + dirs + exit codes
+# ---------------------------------------------------------------------------
+def _write(tmp_path, rel, doc):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(doc))
+    return p
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    _write(tmp_path, "base/BENCH_x.json", {"tok_s": 100.0, "compiles": 1})
+    schema = _write(tmp_path, "base/schema.json", {"metrics": [
+        {"file": "BENCH_x.json", "metric": "tok_s",
+         "direction": "higher", "rtol": 0.2},
+        {"file": "BENCH_x.json", "metric": "compiles",
+         "direction": "equal"},
+    ]})
+    return tmp_path, schema
+
+
+def test_main_passes_on_ok_and_new(dirs, tmp_path, capsys):
+    root, schema = dirs
+    _write(root, "fresh/BENCH_x.json",
+           {"tok_s": 99.0, "compiles": 1, "extra": 5})
+    rc = bench_diff.main(["--schema", str(schema),
+                          "--baseline-dir", str(root / "base"),
+                          "--fresh-dir", str(root / "fresh")])
+    assert rc == 0
+    assert "0 failing" in capsys.readouterr().out
+
+
+def test_main_fails_on_synthetic_regression(dirs, tmp_path, capsys):
+    root, schema = dirs
+    _write(root, "fresh/BENCH_x.json", {"tok_s": 50.0, "compiles": 1})
+    report = root / "report.json"
+    rc = bench_diff.main(["--schema", str(schema),
+                          "--baseline-dir", str(root / "base"),
+                          "--fresh-dir", str(root / "fresh"),
+                          "--json", str(report)])
+    assert rc == 1
+    assert "FAIL" in capsys.readouterr().out
+    rep = json.loads(report.read_text())
+    assert rep["failures"] == ["tok_s"]
+    (row,) = [r for r in rep["rows"] if r["metric"] == "tok_s"]
+    assert row["status"] == "regression" and row["bound"] == 80.0
+
+
+def test_main_fails_on_unreadable_fresh_artifact(dirs, tmp_path):
+    root, schema = dirs
+    (root / "fresh").mkdir()
+    rc = bench_diff.main(["--schema", str(schema),
+                          "--baseline-dir", str(root / "base"),
+                          "--fresh-dir", str(root / "fresh")])
+    assert rc == 1
+
+
+def test_main_missing_baseline_doc_passes_as_new(dirs, tmp_path):
+    root, schema = dirs
+    _write(root, "fresh/BENCH_x.json", {"tok_s": 1.0, "compiles": 99})
+    rc = bench_diff.main(["--schema", str(schema),
+                          "--baseline-dir", str(root / "nosuch"),
+                          "--fresh-dir", str(root / "fresh")])
+    assert rc == 0

@@ -1,0 +1,172 @@
+"""Flight recorder (docs/observability.md): bounded ring, fault-event
+JSONL dumps, ``load_flight`` round-trip, engine dump-on-fault via the
+fault injector, and the ``trace_report --flight`` reader."""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import trace_report
+from repro.models import ModelConfig, build_model
+from repro.nn.params import init_params
+from repro.serve import ContinuousEngine, ServeConfig
+from repro.serve.flight_recorder import FlightRecorder, load_flight
+
+V = 64
+
+CFG = ModelConfig(name="mamba2", family="mamba2", vocab_size=V,
+                  d_model=32, n_layers=2, d_state=8, ssm_head_dim=8,
+                  chunk_size=8, param_dtype="float32")
+
+
+class FakeReq:
+    def __init__(self, uid, **stamps):
+        self.uid = uid
+        self.prompt = [1, 2, 3]
+        self.out_tokens = [4, 5]
+        self.retries = 0
+        for k, v in stamps.items():
+            setattr(self, k, v)
+
+
+def _model_params():
+    model = build_model(CFG)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    return model, params
+
+
+# ---------------------------------------------------------------------------
+# unit: ring + dumps + loader
+# ---------------------------------------------------------------------------
+def test_ring_is_bounded_and_counts_all():
+    fr = FlightRecorder(capacity=4)
+    for i in range(10):
+        fr.record_request(FakeReq(i))
+    assert len(fr) == 4
+    assert fr.recorded == 10
+    assert [e["uid"] for e in fr.entries()] == [6, 7, 8, 9]
+
+
+def test_record_request_segments():
+    now = time.time()
+    pc = time.perf_counter()
+    fr = FlightRecorder(capacity=2)
+    fr.record_request(FakeReq(7, arrival_s=now - 1.0, admit_pc=pc - 0.5,
+                              first_token_s=now - 0.3,
+                              finish_s=now - 0.1),
+                      slot=1, status="ok")
+    (e,) = fr.entries()
+    assert e["uid"] == 7 and e["slot"] == 1 and e["status"] == "ok"
+    assert e["prompt_tokens"] == 3 and e["tokens"] == 2
+    assert e["queue_s"] == pytest.approx(0.5, abs=0.05)
+    assert e["staging_s"] == pytest.approx(0.2, abs=0.05)
+    assert e["decode_s"] == pytest.approx(0.2, abs=0.05)
+    assert e["latency_s"] == pytest.approx(0.9, abs=0.05)
+
+
+def test_record_request_tolerates_missing_stamps():
+    fr = FlightRecorder(capacity=2)
+    fr.record_request(FakeReq(1), status="shed")
+    (e,) = fr.entries()
+    assert e["status"] == "shed"
+    assert e["queue_s"] is None and e["decode_s"] is None
+
+
+def test_dump_and_load_round_trip(tmp_path):
+    path = tmp_path / "flight.jsonl"
+    fr = FlightRecorder(capacity=3, path=str(path))
+    for i in range(5):
+        fr.record_request(FakeReq(i))
+    h = fr.record_fault("quarantine", uid=4, slot=0)
+    assert h["entries"] == 3 and h["kind"] == "quarantine"
+    fr.record_request(FakeReq(99), status="poisoned")
+    fr.record_fault("watchdog_hang", deadline_s=1.0)
+    assert fr.dumps == 2
+
+    dumps = load_flight(str(path))
+    assert len(dumps) == 2
+    assert dumps[0]["fault"] == {"kind": "quarantine", "uid": 4, "slot": 0}
+    assert [r["uid"] for r in dumps[0]["requests"]] == [2, 3, 4]
+    assert dumps[1]["fault"]["kind"] == "watchdog_hang"
+    assert dumps[1]["requests"][-1]["uid"] == 99
+    assert dumps[1]["header"]["recorded_total"] == 6
+
+
+def test_load_flight_skips_foreign_lines(tmp_path):
+    path = tmp_path / "mixed.jsonl"
+    fr = FlightRecorder(capacity=2, path=str(path))
+    fr.record_request(FakeReq(0))
+    with open(path, "a") as f:
+        f.write(json.dumps({"unrelated": "line"}) + "\n")
+    fr.record_fault("shed", uid=0, reason="queue_full")
+    dumps = load_flight(str(path))
+    assert len(dumps) == 1
+    assert dumps[0]["fault"]["reason"] == "queue_full"
+
+
+def test_memory_only_recorder_never_writes(tmp_path):
+    fr = FlightRecorder(capacity=2, path=None)
+    fr.record_request(FakeReq(0))
+    fr.record_fault("quarantine")
+    assert fr.dumps == 1 and fr.last_fault["kind"] == "quarantine"
+    assert list(tmp_path.iterdir()) == []
+
+
+# ---------------------------------------------------------------------------
+# engine integration: injected fault -> dump; CLI reader parses it
+# ---------------------------------------------------------------------------
+def test_engine_dumps_on_quarantine_and_reader_parses(tmp_path, capsys):
+    path = tmp_path / "flight.jsonl"
+    model, params = _model_params()
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=2, prefill_buckets=(16,), max_new_tokens=4,
+        poison_probe="logits", fault_plan="poison@3:slot=0",
+        flight_records=8, flight_path=str(path)))
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        eng.submit(rng.integers(1, V, 8).tolist())
+    done = eng.run()
+    eng.close()
+
+    assert len(done) == 4
+    statuses = sorted(r.status for r in done)
+    assert "poisoned" in statuses
+    assert eng.flight.dumps >= 1
+    dumps = load_flight(str(path))
+    kinds = [d["fault"]["kind"] for d in dumps]
+    assert "quarantine" in kinds
+    qd = dumps[kinds.index("quarantine")]
+    assert any(r["status"] == "poisoned" for r in qd["requests"])
+    # completed requests keep flowing into the ring after the fault
+    assert eng.flight.recorded == 4
+
+    # the CLI reader renders the same file and --check accepts it
+    rc = trace_report.main(["--flight", str(path), "--check"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "quarantine" in out
+
+    rc = trace_report.main(["--flight", str(path), "--json"])
+    assert rc == 0
+    parsed = json.loads(capsys.readouterr().out)
+    assert len(parsed) == len(dumps)
+
+
+def test_engine_without_flight_config_has_no_recorder():
+    model, params = _model_params()
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=2, prefill_buckets=(16,), max_new_tokens=4))
+    try:
+        assert eng.flight is None
+    finally:
+        eng.close()
+
+
+def test_flight_check_fails_on_empty_file(tmp_path, capsys):
+    path = tmp_path / "empty.jsonl"
+    path.write_text("")
+    assert trace_report.main(["--flight", str(path), "--check"]) == 1

@@ -1,0 +1,185 @@
+"""Program cards + registry (docs/observability.md): golden-stable card
+fields on a fixed reduced config, budget trips on synthetic cliffs,
+stable program ids across re-registration, engine integration, and
+per-program recompile attribution."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import ModelConfig, build_model
+from repro.nn.params import init_params
+from repro.serve import ContinuousEngine, ServeConfig
+from repro.serve.program_registry import (DEFAULT_BUDGETS, ProgramBudget,
+                                          ProgramRegistry, budget_for,
+                                          build_card, shape_args)
+from repro.serve.tracing import RecompileSentinel, Tracer
+
+V = 64
+
+CFG = ModelConfig(name="mamba2", family="mamba2", vocab_size=V,
+                  d_model=32, n_layers=2, d_state=8, ssm_head_dim=8,
+                  chunk_size=8, param_dtype="float32")
+
+
+def _model_params():
+    model = build_model(CFG)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0),
+                         jnp.float32)
+    return model, params
+
+
+def _decode_lowering(model, params, slots=2):
+    dview = model.decode_view(params)
+    cache = model.init_cache(slots, 16, jnp.float32)
+    fn = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i),
+                 donate_argnums=(2,))
+    ex = shape_args((dview, jnp.ones((slots, 1), jnp.int32), cache,
+                     jnp.zeros((slots,), jnp.int32)))
+    return fn, ex
+
+
+# ---------------------------------------------------------------------------
+# cards: golden stability + budgets
+# ---------------------------------------------------------------------------
+def test_build_card_golden_stable():
+    """Same program, two independent AOT builds -> identical analysis
+    fields (the card is a *property of the program*, not of the run)."""
+    model, params = _model_params()
+    fn1, ex = _decode_lowering(model, params)
+    c1 = build_card("decode", "p0:decode", fn1, ex)
+    fn2, ex2 = _decode_lowering(model, params)
+    c2 = build_card("decode", "p0:decode", fn2, ex2)
+
+    assert c1.flops > 0 and c1.bytes_accessed > 0
+    assert c1.instructions > 0 and c1.opcodes
+    assert c1.copies >= 0 and c1.compile_s > 0
+    for field in ("flops", "bytes_accessed", "argument_bytes",
+                  "output_bytes", "temp_bytes", "instructions",
+                  "copies", "copy_bytes"):
+        assert getattr(c1, field) == getattr(c2, field), field
+    assert c1.roofline["bottleneck"] in ("compute_s", "memory_s",
+                                         "collective_s")
+    assert c1.roofline_s > 0
+    # the card serializes (BENCH artifacts / trace_report --cards)
+    d = json.loads(json.dumps(c1.to_dict()))
+    assert d["name"] == "decode" and d["program_id"] == "p0:decode"
+    assert d["flops"] == c1.flops and d["copies"] == c1.copies
+
+
+def test_card_budget_trip_and_pass():
+    model, params = _model_params()
+    fn, ex = _decode_lowering(model, params)
+    generous = ProgramBudget(max_copies=10_000,
+                             max_temp_bytes=1 << 40)
+    ok = build_card("decode", "p0:decode", fn, ex, budget=generous)
+    assert ok.check_budget() == []
+    assert ok.to_dict()["budget_violations"] == []
+
+    fn2, ex2 = _decode_lowering(model, params)
+    cliff = ProgramBudget(max_copies=0, max_temp_bytes=1)
+    bad = build_card("decode", "p0:decode", fn2, ex2, budget=cliff)
+    violations = bad.check_budget()
+    # a synthetic zero-copy budget must trip on copies (and, since any
+    # real program needs scratch, on the 1-byte temp arena too)
+    assert violations, "zero budget did not trip"
+    assert any("copy" in v for v in violations)
+    assert any("temp" in v for v in violations)
+    assert bad.to_dict()["budget_violations"] == violations
+
+
+def test_budget_for_gates_on_config_size():
+    full = type("C", (), {"name": "mamba2-130m", "d_model": 768})()
+    small = type("C", (), {"name": "mamba2-130m", "d_model": 32})()
+    other = type("C", (), {"name": "nope", "d_model": 4096})()
+    b = budget_for(full, "decode")
+    assert isinstance(b, ProgramBudget)
+    assert b.max_copies == DEFAULT_BUDGETS[("mamba2-130m",
+                                            "decode")]["max_copies"]
+    assert budget_for(small, "decode") is None      # reduced: no budget
+    assert budget_for(full, "qmatmul") is None      # unbudgeted program
+    assert budget_for(other, "decode") is None      # unknown arch
+
+
+# ---------------------------------------------------------------------------
+# registry: ids, idempotence, lazy cards
+# ---------------------------------------------------------------------------
+def test_registry_ids_stable_across_reregistration():
+    reg = ProgramRegistry()
+    f = jax.jit(lambda x: x + 1)
+    g = jax.jit(lambda x: x * 2)
+    assert reg.register("decode", f) == "p0:decode"
+    assert reg.register("prefill", g) == "p1:prefill"
+    # re-registering (backend rebuild) keeps the id — trace spans from
+    # before and after the rebuild attribute to the same program
+    assert reg.register("decode", g) == "p0:decode"
+    assert reg.names() == ["decode", "prefill"]
+    assert reg.program_id("decode") == "p0:decode"
+    assert "decode" in reg and "nope" not in reg
+    assert reg.program_id("nope") is None
+
+
+def test_registry_card_build_and_invalidate():
+    reg = ProgramRegistry()
+    f = jax.jit(lambda x: x @ x)
+    ex = (jax.ShapeDtypeStruct((8, 8), jnp.float32),)
+    reg.register("square", f, ex)
+    card = reg.card("square")
+    assert card.program_id == "p0:square" and card.flops > 0
+    assert reg.card("square") is card               # cached
+    assert reg.card("square", rebuild=True) is not card
+    reg.invalidate()
+    assert reg.to_dict() == {}                       # built cards only
+
+    reg.register("noargs", jax.jit(lambda x: x))
+    with pytest.raises(ValueError, match="example args"):
+        reg.card("noargs")
+    # the default card sweep skips unbuildable programs instead of dying
+    assert set(reg.cards()) == {"square"}
+
+
+def test_registry_check_budgets():
+    model, params = _model_params()
+    fn, ex = _decode_lowering(model, params)
+    reg = ProgramRegistry()
+    reg.register("decode", fn, ex,
+                 budget=ProgramBudget(max_copies=0, max_temp_bytes=1))
+    violations = reg.check_budgets()
+    assert violations and all("decode" in v for v in violations)
+    with pytest.raises(RuntimeError, match="budget"):
+        reg.assert_budgets()
+
+
+# ---------------------------------------------------------------------------
+# engine integration + recompile attribution
+# ---------------------------------------------------------------------------
+def test_engine_registers_programs_and_builds_cards():
+    model, params = _model_params()
+    eng = ContinuousEngine(model, params, ServeConfig(
+        max_batch=2, prefill_buckets=(16,), max_new_tokens=4))
+    try:
+        names = eng.registry.names()
+        assert names[:2] == ["decode", "prefill"]
+        assert {"pool_insert", "pool_extract", "pool_reset"} <= set(names)
+        assert eng.registry.program_id("decode") == "p0:decode"
+        # decode sentinel carries the registry id -> recompile trips are
+        # attributable to a program, not just a span name
+        assert eng.sentinels["decode"].program_id == "p0:decode"
+        card = eng.registry.card("decode")
+        assert card.flops > 0 and card.program_id == "p0:decode"
+    finally:
+        eng.close()
+
+
+def test_sentinel_attributes_program_id_in_trip_instant():
+    f = jax.jit(lambda x: x * 2)
+    s = RecompileSentinel("decode", f, program_id="p0:decode")
+    f(jnp.ones((2,)))
+    assert s.check() == 0                            # lazy-arm
+    f(jnp.ones((3,)))                                # retrace
+    tr = Tracer()
+    assert s.check(tr) == 1
+    ev = next(e for e in tr.events if e["ph"] == "i")
+    assert ev["args"]["program_id"] == "p0:decode"
+    assert ev["args"]["program"] == "decode"

@@ -277,8 +277,9 @@ def test_engine_spec_zero_postwarmup_recompiles():
     finally:
         eng.close()
     assert len(done) == 6
-    assert {k: s.trips for k, s in eng.sentinels.items()} == \
-        {"decode": 0, "prefill": 0, "verify": 0}
+    trips = {k: s.trips for k, s in eng.sentinels.items()}
+    assert {"decode", "prefill", "verify"} <= set(trips)
+    assert all(t == 0 for t in trips.values()), trips
     assert eng.metrics.summary()["spec_bursts"] > 0
 
 
